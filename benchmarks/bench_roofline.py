@@ -1,0 +1,71 @@
+"""Roofline table: aggregates the dry-run JSONs (results/dryrun_sp|mp) into
+the EXPERIMENTS.md §Roofline table — one row per (arch x shape x mesh):
+three terms, dominant bottleneck, MODEL_FLOPS/HLO ratio."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirs):
+    rows = []
+    for d in dirs:
+        for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+            with open(f) as fh:
+                rows.append(json.load(fh))
+    return rows
+
+
+def table(rows, fmt="md"):
+    header = (
+        "| arch | shape | mesh | compute s | mem s (unfused) | mem s (fused) "
+        "| collective s | bottleneck | useful FLOPs | coll GB/dev |"
+    )
+    sep = "|---|---|---|---|---|---|---|---|---|---|"
+    lines = [header, sep]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"SKIP: {r['reason'][:46]} | — | — |"
+            )
+            continue
+        ro = r["roofline"]
+        fused = ro.get("t_memory_fused")
+        fused_s = f"{fused:.4f}" if fused is not None else "—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['t_compute']:.4f} | {ro['t_memory']:.4f} | {fused_s} "
+            f"| {ro['t_collective']:.4f} "
+            f"| **{ro['bottleneck']}** | {ro['useful_flops_ratio']:.1%} "
+            f"| {ro['coll_bytes_dev']/1e9:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dirs", nargs="*", default=["results/dryrun_sp", "results/dryrun_mp"])
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dirs)
+    if args.csv:
+        print("arch,shape,mesh,t_compute,t_memory,t_collective,bottleneck,useful,coll_gb")
+        for r in rows:
+            if r.get("status") == "skipped":
+                print(f"{r['arch']},{r['shape']},{r['mesh']},,,,skipped:{r['reason'][:30]},,")
+            else:
+                ro = r["roofline"]
+                print(
+                    f"{r['arch']},{r['shape']},{r['mesh']},{ro['t_compute']:.5f},"
+                    f"{ro['t_memory']:.5f},{ro['t_collective']:.5f},{ro['bottleneck']},"
+                    f"{ro['useful_flops_ratio']:.3f},{ro['coll_bytes_dev']/1e9:.2f}"
+                )
+    else:
+        print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

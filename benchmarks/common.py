@@ -1,0 +1,101 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Scale notes: the paper runs 256-1024 node emulations for hundreds of rounds
+on 16 Xeon machines; this container is one box, so default benchmark scale
+is reduced (nodes/rounds CLI-tunable via --nodes/--rounds/--full) while
+keeping the paper's qualitative comparisons intact.  Datasets are seeded
+synthetic stand-ins (offline container) — orderings, not absolute
+accuracies, are the reproduction target (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import DLConfig, DecentralizedRunner
+from repro.data import NodeBatcher, make_dataset, sharding_partition
+from repro.models.api import cross_entropy
+from repro.models.cnn import cnn_apply, cnn_init
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.optim import make_optimizer
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def model_fns(kind: str, width: int = 16):
+    if kind == "cnn":
+        init = lambda k: cnn_init(k, width=width)
+        apply = cnn_apply
+    else:
+        init = lambda k: mlp_init(k, hidden=8 * width)
+        apply = mlp_apply
+
+    def loss_fn(p, x, y):
+        return cross_entropy(apply(p, x), y)
+
+    def acc_fn(p, x, y):
+        return (apply(p, x).argmax(-1) == y).mean()
+
+    return init, loss_fn, acc_fn
+
+
+def dl_experiment(
+    name: str,
+    dl: DLConfig,
+    *,
+    dataset: str = "cifar10",
+    model: str = "mlp",
+    width: int = 16,
+    lr: float = 0.05,
+    n_train: int = 1024,
+    n_test: int = 512,
+    sigma: float = 4.0,
+    log: bool = True,
+    seeds: int = 1,
+) -> Dict:
+    """Run one DL configuration (optionally averaged over seeds) and return
+    {name, history, bytes, wall}."""
+    runs = []
+    for s in range(seeds):
+        kw = {} if dataset in ("teacher", "cifar10-hard", "lm") else {"sigma": sigma}
+        ds = make_dataset(dataset, n_train=n_train, n_test=n_test, seed=7, **kw)
+        parts = sharding_partition(ds.train_y, dl.n_nodes, 2, seed=dl.seed + s)
+        batcher = NodeBatcher(ds.train_x, ds.train_y, parts, dl.batch_size, seed=dl.seed + s)
+        init, loss, acc = model_fns(model, width)
+        import dataclasses
+
+        dls = dataclasses.replace(dl, seed=dl.seed + s)
+        r = DecentralizedRunner(dls, init, loss, acc, make_optimizer("sgd", lr), batcher)
+        t0 = time.time()
+        hist = r.run(log=False)
+        runs.append({"history": hist, "bytes": r.bytes_sent, "wall": time.time() - t0})
+        if log:
+            print(
+                f"  [{name} seed{s}] final acc {hist[-1]['acc_mean']:.4f} "
+                f"MB/node {r.bytes_sent/1e6:.1f} wall {runs[-1]['wall']:.0f}s",
+                flush=True,
+            )
+    # average final accuracy across seeds
+    finals = [r["history"][-1]["acc_mean"] for r in runs]
+    out = {
+        "name": name,
+        "acc_mean": float(np.mean(finals)),
+        "acc_ci95": float(1.96 * np.std(finals) / max(np.sqrt(len(finals)), 1)),
+        "bytes_per_node": runs[0]["bytes"],
+        "wall_s": float(np.mean([r["wall"] for r in runs])),
+        "history": runs[0]["history"],
+        "runs": len(runs),
+    }
+    return out
+
+
+def save_results(bench: str, records: List[Dict]):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{bench}.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    return path

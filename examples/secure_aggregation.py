@@ -1,0 +1,60 @@
+"""Secure aggregation (paper §3.4): pairwise cancellable masks on a
+regular graph — same accuracy trajectory as plain D-PSGD, individual
+models hidden, ~3% byte overhead.
+
+    PYTHONPATH=src python examples/secure_aggregation.py --rounds 30
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DLConfig, DecentralizedRunner, SecureAggregation, build_graph
+from repro.data import NodeBatcher, make_dataset, sharding_partition
+from repro.models.api import cross_entropy
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.optim import make_optimizer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    args = ap.parse_args()
+
+    ds = make_dataset("cifar10", n_train=8192, n_test=512)
+    parts = sharding_partition(ds.train_y, 16, 2, seed=0)
+    batcher = NodeBatcher(ds.train_x, ds.train_y, parts, 8, seed=0)
+    loss_fn = lambda p, x, y: cross_entropy(mlp_apply(p, x), y)
+    acc_fn = lambda p, x, y: (mlp_apply(p, x).argmax(-1) == y).mean()
+
+    results = {}
+    for name, secure in (("d-psgd", False), ("secure-agg", True)):
+        dl = DLConfig(n_nodes=16, topology="regular", degree=4, secure=secure,
+                      rounds=args.rounds, eval_every=args.rounds - 1, local_steps=2)
+        r = DecentralizedRunner(dl, lambda k: mlp_init(k, hidden=128), loss_fn,
+                                acc_fn, make_optimizer("sgd", 0.05), batcher)
+        hist = r.run(log=False)
+        results[name] = (hist[-1]["acc_mean"], r.bytes_sent)
+        print(f"{name:12s} acc {hist[-1]['acc_mean']:.4f}  MB/node {r.bytes_sent/1e6:.1f}")
+
+    overhead = results["secure-agg"][1] / results["d-psgd"][1] - 1
+    print(f"\ncommunication overhead: {overhead:.1%} (paper: ~3%)")
+
+    # show that an individual masked message is unreadable while the
+    # aggregate is exact
+    g = build_graph(DLConfig(n_nodes=8, topology="regular", degree=4))
+    X = jax.random.normal(jax.random.key(0), (8, 1000))
+    W = jnp.asarray(g.metropolis_hastings(), jnp.float32)
+    s = SecureAggregation(g.adj, mask_bound=5.0)
+    msgs = s.messages(X, jax.random.key(1), 0)
+    (i, r0), m = next(iter(msgs.items()))
+    rel = float(jnp.linalg.norm(m - X[i]) / jnp.linalg.norm(X[i]))
+    agg, _, _ = s.round(X, W, (), jax.random.key(1), degree=4.0, rnd=0)
+    err = float(jnp.max(jnp.abs(agg - W @ X)))
+    print(f"masked message vs raw model distance: {rel:.1f}x norm (unreadable)")
+    print(f"aggregate vs plain MH aggregate max err: {err:.2e} (masks cancel)")
+
+
+if __name__ == "__main__":
+    main()

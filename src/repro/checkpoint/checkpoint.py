@@ -1,0 +1,71 @@
+"""Checkpointing: pytree -> flat .npz + structure JSON.
+
+Decentralized semantics preserved: each node's slice of the stacked state is
+self-contained (the leading axis is the node axis), so a node can restore
+its own model without the others — mirroring DecentralizePy's per-node local
+result/checkpoint files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+
+    def walk(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[name] = np.asarray(leaf)
+
+    jax.tree_util.tree_map_with_path(walk, tree)
+    return flat
+
+
+def save_checkpoint(path: str, step: int, **trees) -> str:
+    """save_checkpoint(dir, 100, params=..., opt_state=...) -> file path."""
+    os.makedirs(path, exist_ok=True)
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    payload = {}
+    meta = {"step": step, "trees": {}}
+    for tname, tree in trees.items():
+        flat = _flatten(tree)
+        meta["trees"][tname] = {k: [list(v.shape), str(v.dtype)] for k, v in flat.items()}
+        payload.update({f"{tname}::{k}": v for k, v in flat.items()})
+    np.savez(fn, **payload)
+    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return fn
+
+
+def load_checkpoint(path: str, step: Optional[int] = None, like: Optional[dict] = None):
+    """Returns (step, {tree_name: pytree-as-nested-dict})."""
+    if step is None:
+        step = latest_checkpoint(path)
+        assert step is not None, f"no checkpoints in {path}"
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    out: dict = {}
+    for key in data.files:
+        tname, leaf_path = key.split("::", 1)
+        node = out.setdefault(tname, {})
+        parts = leaf_path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+    return step, out
+
+
+def latest_checkpoint(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(path)
+        if (m := re.match(r"ckpt_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None

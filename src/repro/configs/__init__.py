@@ -1,0 +1,72 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``
+plus the assigned input-shape suite.  One module per architecture, each
+citing its source model card / paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+ARCHS = [
+    "qwen3-32b",
+    "mamba2-370m",
+    "qwen2-72b",
+    "mistral-large-123b",
+    "whisper-tiny",
+    "deepseek-v2-236b",
+    "zamba2-1.2b",
+    "smollm-135m",
+    "llama4-maverick-400b-a17b",
+    "qwen2-vl-72b",
+    # the paper's own workload
+    "gn-lenet",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _module(name: str):
+    return importlib.import_module(f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke_config()
+
+
+def supports_shape(name: str, shape: str) -> Tuple[bool, str]:
+    """Whether (arch, input-shape) is architecturally meaningful.
+
+    long_500k needs sub-quadratic attention (SSM/hybrid state recurrence or
+    a sliding-window dense variant); encoder-only archs have no decode.
+    Returns (ok, reason-if-skipped).
+    """
+    m = _module(name)
+    if hasattr(m, "supports_shape"):
+        return m.supports_shape(shape)
+    cfg = get_config(name)
+    if shape == "long_500k":
+        if cfg.family in ("ssm", "hybrid") or cfg.sliding_window is not None:
+            return True, ""
+        return False, "full quadratic attention: 512k dense KV cache is architecturally excluded"
+    if name == "gn-lenet" and shape != "train_4k":
+        return False, "CNN classifier: no autoregressive decode / long-context shapes"
+    return True, ""

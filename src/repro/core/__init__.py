@@ -1,0 +1,30 @@
+# The paper's primary contribution: decentralized learning as a composable
+# JAX feature — overlay topologies, gossip mixing, sparsified sharing,
+# secure aggregation, and the node/runner that ties them together.
+from repro.core.topology import Graph, PeerSampler, circulant_offsets
+from repro.core.mixing import (
+    mix_dense,
+    mix_fully,
+    mix_circulant,
+    mix_circulant_shmap,
+    mixing_bytes_per_node,
+)
+from repro.core.sharing import (
+    FullSharing,
+    RandomKSharing,
+    TopKSharing,
+    ChocoSGD,
+    QuantizedSharing,
+    make_sharing,
+    sparse_aggregate,
+)
+from repro.core.network import (
+    LinkSpec,
+    Mapping,
+    NetworkModel,
+    paper_testbed,
+    wan_deployment,
+)
+from repro.core.secure import SecureAggregation
+from repro.core.node import DLConfig, DecentralizedRunner, build_graph
+from repro.core.federated import FLConfig, FederatedRunner

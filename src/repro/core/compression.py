@@ -1,0 +1,60 @@
+"""Compression module (paper §2.2): general-purpose codecs for float/int
+lists carried in gossip messages.  Pure-jnp reference; the TPU hot path is
+``kernels/quantize.py`` (Pallas), validated against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, key=None):
+    """Per-row symmetric int8 quantization, optionally stochastic rounding.
+
+    x: (..., P) float -> (codes int8, scale (..., 1) float32).
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    y = xf / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def quantize_int4(x, key=None):
+    """Packed int4 symmetric quantization. Returns (packed uint8 (..., P/2), scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 7.0
+    scale = jnp.maximum(scale, 1e-12)
+    y = xf / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    q = jnp.clip(y, -7, 7).astype(jnp.int8) + 8  # [1, 15] biased
+    lo, hi = q[..., 0::2], q[..., 1::2]
+    return (lo.astype(jnp.uint8) | (hi.astype(jnp.uint8) << 4)), scale
+
+
+def dequantize_int4(packed, scale):
+    lo = (packed & 0xF).astype(jnp.int32) - 8
+    hi = (packed >> 4).astype(jnp.int32) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    return q.astype(jnp.float32) * scale
+
+
+def delta_encode_indices(idx):
+    """Sorted-index delta encoding (smaller varint-able ints on the wire)."""
+    idx = jnp.sort(idx, axis=-1)
+    return jnp.diff(idx, axis=-1, prepend=jnp.zeros_like(idx[..., :1]))
+
+
+def delta_decode_indices(deltas):
+    return jnp.cumsum(deltas, axis=-1)

@@ -1,0 +1,83 @@
+"""Specialized nodes (paper Fig. 1): an FL server and a parameter server
+can be built from the same modules — the node role is just who aggregates.
+
+``FederatedRunner`` = FedAvg: the server broadcasts the global model, a
+client subset trains locally, the server averages the returned models.
+Equivalent in our algebra to star-topology gossip with full participation,
+but implemented as a distinct runner because the paper calls out FL
+emulation as a Node specialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import Optimizer
+from repro.optim.optimizers import apply_updates
+
+
+@dataclasses.dataclass
+class FLConfig:
+    n_clients: int = 16
+    clients_per_round: int = 8
+    local_steps: int = 1
+    rounds: int = 100
+    eval_every: int = 10
+    seed: int = 0
+
+
+class FederatedRunner:
+    def __init__(self, fl: FLConfig, init_params_fn, loss_fn, acc_fn,
+                 optimizer: Optimizer, batcher):
+        self.fl = fl
+        self.loss_fn, self.acc_fn, self.opt = loss_fn, acc_fn, optimizer
+        self.batcher = batcher
+        self.params = init_params_fn(jax.random.key(fl.seed))  # ONE global model
+        self.history: List[dict] = []
+
+        def client_update(params, bx, by):
+            opt_state = self.opt.init(params)
+
+            def step(carry, batch):
+                p, s = carry
+                g = jax.grad(self.loss_fn)(p, *batch)
+                u, s = self.opt.update(g, s, p)
+                return (apply_updates(p, u), s), ()
+
+            (params, _), _ = jax.lax.scan(step, (params, opt_state), (bx, by))
+            return params
+
+        def round_fn(params, bx, by):
+            # bx: (M, L, B, ...) — M participating clients
+            client_params = jax.vmap(client_update, in_axes=(None, 0, 0))(params, bx, by)
+            return jax.tree_util.tree_map(lambda a: a.mean(0).astype(a.dtype), client_params)
+
+        self._round = jax.jit(round_fn)
+        self._eval = jax.jit(lambda p, tx, ty: self.acc_fn(p, tx, ty))
+
+    def run(self, rounds: Optional[int] = None, log: bool = True):
+        fl = self.fl
+        rounds = rounds if rounds is not None else fl.rounds
+        tx, ty = self.batcher.test_batch()
+        tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+        rng = np.random.default_rng(fl.seed)
+        for rnd in range(rounds):
+            sel = rng.choice(fl.n_clients, fl.clients_per_round, replace=False)
+            bxs, bys = [], []
+            for s in range(fl.local_steps):
+                x, y = self.batcher.batch(rnd, s)
+                bxs.append(x[sel])
+                bys.append(y[sel])
+            bx = jnp.asarray(np.stack(bxs, axis=1))  # (M, L, B, ...)
+            by = jnp.asarray(np.stack(bys, axis=1))
+            self.params = self._round(self.params, bx, by)
+            if rnd % fl.eval_every == 0 or rnd == rounds - 1:
+                acc = float(self._eval(self.params, tx, ty))
+                self.history.append({"round": rnd, "acc": acc})
+                if log:
+                    print(f"[fedavg] round {rnd:4d} acc {acc:.4f}")
+        return self.history

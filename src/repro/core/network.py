@@ -1,0 +1,110 @@
+"""Network emulation (paper §2.1 'network bandwidth, latency, and packet
+drop' + §2.2 *Mapping* + Fig. 3b wall-clock axis; Kollaps-style shaping is
+the paper's declared future work — this is the built-in model).
+
+DecentralizePy's one-node-one-process design makes per-node network
+emulation natural; here the per-round *simulated wall-clock* is computed
+from a declarative model:
+
+  round_time(node) = compute_time
+                   + sum_over_neighbors(message_bytes / link_bw + latency)
+  round_time       = max over nodes (synchronous rounds, stragglers bind)
+
+Links are classified by the Mapping (same machine -> loopback, different
+machine -> LAN/WAN), so the same experiment can be 'deployed' on a 16-host
+LAN or a WAN by swapping the NetworkModel — the paper's portability claim.
+Packet drop is modeled as goodput derating (TCP retransmission).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.topology import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    bandwidth_bps: float    # payload bandwidth
+    latency_s: float
+    drop_rate: float = 0.0  # fraction; derates goodput ~1/(1-p)
+
+    def transfer_time(self, nbytes: float) -> float:
+        goodput = self.bandwidth_bps * max(1.0 - self.drop_rate, 1e-3)
+        return self.latency_s + nbytes * 8.0 / goodput
+
+
+LOOPBACK = LinkSpec(bandwidth_bps=20e9, latency_s=20e-6)
+LAN = LinkSpec(bandwidth_bps=1e9, latency_s=200e-6)          # paper's cluster
+WAN = LinkSpec(bandwidth_bps=100e6, latency_s=30e-3, drop_rate=0.001)
+
+
+@dataclasses.dataclass
+class Mapping:
+    """Node -> machine assignment (paper §2.2 Mapping).  Default: the
+    paper's round-robin over 16 machines."""
+
+    n_nodes: int
+    n_machines: int = 16
+
+    def machine(self, node: int) -> int:
+        return node % self.n_machines
+
+    def same_machine(self, a: int, b: int) -> bool:
+        return self.machine(a) == self.machine(b)
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    mapping: Mapping
+    local: LinkSpec = LOOPBACK
+    remote: LinkSpec = LAN
+
+    def link(self, a: int, b: int) -> LinkSpec:
+        return self.local if self.mapping.same_machine(a, b) else self.remote
+
+    def round_time(
+        self,
+        graph: Graph,
+        bytes_per_edge: float,
+        compute_time_s: float = 0.0,
+        parallel_sends: bool = False,
+    ) -> float:
+        """Simulated synchronous-round wall-clock.
+
+        bytes_per_edge: serialized message size one node sends one neighbor.
+        parallel_sends: True models per-link dedicated NICs (sends overlap);
+        False (default) serializes a node's sends on its uplink, which is
+        what makes fully-connected rounds take ~degree x longer (Fig. 3b).
+        """
+        n = graph.n
+        times = np.zeros(n)
+        for i in range(n):
+            sends = [
+                self.link(i, int(j)).transfer_time(bytes_per_edge)
+                for j in graph.neighbors(i)
+            ]
+            if not sends:
+                comm = 0.0
+            elif parallel_sends:
+                comm = max(sends)
+            else:
+                comm = sum(sends)
+            times[i] = compute_time_s + comm
+        return float(times.max())
+
+    def experiment_time(self, graph: Graph, bytes_per_edge: float,
+                        compute_time_s: float, rounds: int) -> float:
+        return rounds * self.round_time(graph, bytes_per_edge, compute_time_s)
+
+
+def paper_testbed(n_nodes: int) -> NetworkModel:
+    """The paper's 16-machine LAN cluster."""
+    return NetworkModel(Mapping(n_nodes, 16), LOOPBACK, LAN)
+
+
+def wan_deployment(n_nodes: int) -> NetworkModel:
+    """Geo-distributed deployment (every node its own machine, WAN links)."""
+    return NetworkModel(Mapping(n_nodes, n_nodes), LOOPBACK, WAN)

@@ -1,0 +1,92 @@
+"""Secure aggregation for DL (paper §3.4, after Bonawitz et al. CCS'17 and
+the DecentralizePy secure-aggregation node).
+
+Every *receiver* r aggregates the models of its neighbor set N(r) with equal
+weights.  Each ordered sender pair (i, j) in N(r), i < j, shares a seed; i
+adds +PRF(seed), j adds -PRF(seed) to the copy each sends to r, so the sum
+over N(r) is exactly the unmasked sum while every individual message is a
+one-time-padded blob.  Receiver r's own model never leaves r.
+
+    y_r = (1 - w·|N(r)|) x_r + w * sum_{i in N(r)} msg_{i->r}
+        = MH-weighted aggregate (masks cancel exactly).
+
+The PRF is JAX's threefry counter PRNG keyed by fold_in(round, i, j, r) —
+uniform in [-b, b].  Masks are float32, so cancellation is exact in real
+arithmetic but the *aggregate* suffers bounded rounding noise — the paper's
+reported ~3% accuracy cost on CIFAR-10; we property-test the cancellation
+to fp32 tolerance.
+
+Communication: each edge carries the P masked values plus a 24-byte
+metadata record (pair seeds + round) — the paper's ≈3% overhead is
+metadata+framing; we account 3% to match its cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BYTES_VAL = 4
+METADATA_OVERHEAD = 0.03  # paper: ~3% extra bytes (seeds, framing)
+
+
+def _pair_mask(key, rnd, i, j, r, shape, bound: float):
+    k = jax.random.fold_in(key, rnd)
+    k = jax.random.fold_in(k, i)
+    k = jax.random.fold_in(k, j)
+    k = jax.random.fold_in(k, r)
+    return jax.random.uniform(k, shape, jnp.float32, -bound, bound)
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureAggregation:
+    """Drop-in sharing strategy: masked full sharing over a *static* graph.
+
+    adj: (N, N) bool numpy adjacency (static — mask schedule must be static
+    python control flow; dynamic graphs would re-key every round anyway).
+    """
+
+    adj: np.ndarray
+    mask_bound: float = 1.0
+
+    def init_state(self, X):
+        return ()
+
+    def messages(self, X, key, rnd):
+        """Masked message from i to r for every edge (i, r). Returns a dict
+        {(i, r): vector} — materialized only for emulation-scale N."""
+        N, P = X.shape
+        out = {}
+        for r in range(N):
+            nbrs = [int(i) for i in np.nonzero(self.adj[r])[0]]
+            for i in nbrs:
+                msg = X[i].astype(jnp.float32)
+                for j in nbrs:
+                    if j == i:
+                        continue
+                    a, b = (i, j) if i < j else (j, i)
+                    sign = 1.0 if i < j else -1.0
+                    msg = msg + sign * _pair_mask(key, rnd, a, b, r, (P,), self.mask_bound)
+                out[(i, r)] = msg
+        return out
+
+    def round(self, X, W, state, key, degree: float, rnd: int = 0):
+        """Aggregate with masks. W must give equal weight w to all of a
+        receiver's neighbors (true for MH on regular graphs)."""
+        N, P = X.shape
+        Xf = X.astype(jnp.float32)
+        msgs = self.messages(Xf, key, rnd)
+        rows = []
+        Wn = np.asarray(W)
+        for r in range(N):
+            nbrs = [int(i) for i in np.nonzero(self.adj[r])[0]]
+            w = float(Wn[r, nbrs[0]]) if nbrs else 0.0
+            acc = (1.0 - w * len(nbrs)) * Xf[r]
+            for i in nbrs:
+                acc = acc + w * msgs[(i, r)]
+            rows.append(acc)
+        X2 = jnp.stack(rows).astype(X.dtype)
+        bytes_sent = degree * P * BYTES_VAL * (1.0 + METADATA_OVERHEAD)
+        return X2, state, bytes_sent

@@ -1,0 +1,162 @@
+"""Sharing module — message content + aggregation (paper §2.2 *Sharing*).
+
+Strategies operate on the node-stacked flat parameter matrix X (N, P)
+(DecentralizePy serializes the model into one message; ``utils.tree_vector``
+is our serializer).  Each returns the post-gossip X' plus the bytes each
+node sent this round, the paper's communication metric.
+
+Sparse aggregation follows DecentralizePy: weights of *missing* coordinates
+fall back to the receiver's own value,
+
+    x_i'[c] = x_i[c] + sum_j W_ij * m_j[c] * (x_j[c] - x_i[c])
+
+which in matrix form is  X' = X + W@(M*X) - X*(W@M).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BYTES_VAL = 4   # fp32 value on the wire
+BYTES_IDX = 4   # int32 index on the wire
+
+
+def _topk_mask(x_abs, k: int):
+    """Boolean mask of the k largest-|.| coords per row. x_abs: (N, P)."""
+    _, idx = jax.lax.top_k(x_abs, k)
+    return jnp.zeros_like(x_abs, bool).at[jnp.arange(x_abs.shape[0])[:, None], idx].set(True)
+
+
+def _randk_mask(key, shape, k: int):
+    """k random coords per row via top-k of iid uniforms (no replacement)."""
+    u = jax.random.uniform(key, shape)
+    return _topk_mask(u, k)
+
+
+def sparse_aggregate(X, W, M):
+    """Masked gossip with missing-coordinate fallback (see module doc)."""
+    Xf, Wf, Mf = X.astype(jnp.float32), W.astype(jnp.float32), M.astype(jnp.float32)
+    return (Xf + Wf @ (Mf * Xf) - Xf * (Wf @ Mf)).astype(X.dtype)
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FullSharing:
+    """Baseline: serialize the full parameter vector (D-PSGD)."""
+
+    def init_state(self, X):
+        return ()
+
+    def round(self, X, W, state, key, degree: float):
+        X2 = (W.astype(jnp.float32) @ X.astype(jnp.float32)).astype(X.dtype)
+        return X2, state, degree * X.shape[1] * BYTES_VAL
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomKSharing:
+    """Random sampling sparsification (paper Fig. 4): k random coords."""
+
+    budget: float  # fraction of parameters shared (paper: 0.10)
+
+    def init_state(self, X):
+        return ()
+
+    def round(self, X, W, state, key, degree: float):
+        k = max(1, int(self.budget * X.shape[1]))
+        M = _randk_mask(key, X.shape, k)
+        X2 = sparse_aggregate(X, W, M)
+        return X2, state, degree * k * (BYTES_VAL + BYTES_IDX)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKSharing:
+    """TopK sparsification [Alistarh et al. '18]: share the k coords whose
+    *accumulated change* since last share is largest; residual accumulation
+    stored in the Model-module extra state (paper §2.2 *Model*)."""
+
+    budget: float
+
+    def init_state(self, X):
+        return {"last_shared": X.astype(jnp.float32)}
+
+    def round(self, X, W, state, key, degree: float):
+        k = max(1, int(self.budget * X.shape[1]))
+        delta = X.astype(jnp.float32) - state["last_shared"]
+        M = _topk_mask(jnp.abs(delta), k)
+        X2 = sparse_aggregate(X, W, M)
+        new_last = jnp.where(M, X.astype(jnp.float32), state["last_shared"])
+        return X2, {"last_shared": new_last}, degree * k * (BYTES_VAL + BYTES_IDX)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChocoSGD:
+    """CHOCO-SGD [Koloskova et al. '19]: gossip on compressed *differences*
+    to a public copy x̂, with consensus step size gamma.
+
+        q_i  = C(x_i - x̂_i)          (top-k or random-k compressor)
+        x̂_i += q_i                    (all nodes track the same x̂'s)
+        x_i += gamma * sum_j W_ij (x̂_j - x̂_i)
+    """
+
+    budget: float
+    gamma: float = 0.3
+    compressor: str = "topk"  # 'topk' | 'randk'
+
+    def init_state(self, X):
+        return {"xhat": jnp.zeros_like(X, jnp.float32)}
+
+    def round(self, X, W, state, key, degree: float):
+        k = max(1, int(self.budget * X.shape[1]))
+        Xf = X.astype(jnp.float32)
+        diff = Xf - state["xhat"]
+        if self.compressor == "topk":
+            M = _topk_mask(jnp.abs(diff), k)
+        else:
+            M = _randk_mask(key, X.shape, k)
+        q = jnp.where(M, diff, 0.0)
+        xhat = state["xhat"] + q
+        Wf = W.astype(jnp.float32)
+        X2 = Xf + self.gamma * (Wf @ xhat - xhat)
+        return X2.astype(X.dtype), {"xhat": xhat}, degree * k * (BYTES_VAL + BYTES_IDX)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedSharing:
+    """Full sharing through the Compression module: int8 codes + per-node
+    scale on the wire (4x fewer bytes than fp32), dequantized before the
+    MH aggregation.  Accuracy cost is bounded by the quantization step
+    (see tests/test_substrate.py int8 roundtrip bounds)."""
+
+    stochastic: bool = True
+
+    def init_state(self, X):
+        return ()
+
+    def round(self, X, W, state, key, degree: float):
+        from repro.core.compression import dequantize_int8, quantize_int8
+
+        codes, scale = quantize_int8(X, key=key if self.stochastic else None)
+        Xq = dequantize_int8(codes, scale)  # what the receivers reconstruct
+        X2 = (W.astype(jnp.float32) @ Xq).astype(X.dtype)
+        return X2, state, degree * (X.shape[1] * 1 + 4)  # int8 + scale
+
+
+def make_sharing(name: str, budget: float = 0.1, **kw):
+    name = name.lower()
+    if name in ("full", "fullsharing", "d-psgd"):
+        return FullSharing()
+    if name in ("randomk", "random"):
+        return RandomKSharing(budget)
+    if name == "topk":
+        return TopKSharing(budget)
+    if name in ("choco", "choco-sgd", "chocosgd"):
+        return ChocoSGD(budget, **kw)
+    if name in ("quant", "quantized", "int8"):
+        return QuantizedSharing()
+    raise ValueError(f"unknown sharing strategy {name!r}")

@@ -1,0 +1,200 @@
+"""Graph module — the overlay topology (paper §2.2 *Graph*).
+
+Supports the paper's topologies (ring, d-regular, fully-connected, star),
+dynamic per-round regular graphs via a ``PeerSampler``, Metropolis–Hastings
+mixing weights, and graph-file I/O (edge list / adjacency list) so external
+generators can be plugged in, exactly like DecentralizePy's graph files.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    """Undirected overlay graph over ``n`` nodes; adjacency as a bool matrix
+    (no self loops stored; every node implicitly talks to itself)."""
+
+    adj: np.ndarray  # (n, n) bool, symmetric, zero diagonal
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def ring(n: int) -> "Graph":
+        adj = np.zeros((n, n), bool)
+        idx = np.arange(n)
+        adj[idx, (idx + 1) % n] = True
+        adj[(idx + 1) % n, idx] = True
+        return Graph(adj)
+
+    @staticmethod
+    def fully_connected(n: int) -> "Graph":
+        adj = np.ones((n, n), bool)
+        np.fill_diagonal(adj, False)
+        return Graph(adj)
+
+    @staticmethod
+    def star(n: int, center: int = 0) -> "Graph":
+        adj = np.zeros((n, n), bool)
+        adj[center, :] = True
+        adj[:, center] = True
+        adj[center, center] = False
+        return Graph(adj)
+
+    @staticmethod
+    def regular_circulant(n: int, degree: int) -> "Graph":
+        """d-regular circulant graph: neighbors at fixed offsets ±1,±2,…
+        (plus n/2 if degree is odd and n even).  These are the graphs whose
+        gossip lowers to `collective_permute` on TPU (static offsets)."""
+        assert 0 < degree < n
+        adj = np.zeros((n, n), bool)
+        idx = np.arange(n)
+        offs = circulant_offsets(n, degree)
+        for o in offs:
+            adj[idx, (idx + o) % n] = True
+            adj[(idx + o) % n, idx] = True
+        return Graph(adj)
+
+    @staticmethod
+    def random_regular(n: int, degree: int, seed: int) -> "Graph":
+        """Random d-regular graph — the paper's dynamic 5-regular per-round
+        topology.  Start from the circulant d-regular graph and apply many
+        random degree-preserving double-edge swaps (always yields a simple
+        graph; mixes to near-uniform)."""
+        assert 0 < degree < n and n * degree % 2 == 0, "n*degree must be even"
+        rng = np.random.default_rng(seed)
+        g = Graph.regular_circulant(n, degree)
+        adj = g.adj
+        edges = [tuple(e) for e in np.argwhere(np.triu(adj))]
+        swaps = 0
+        target = 10 * len(edges)
+        for _ in range(100 * target):
+            if swaps >= target:
+                break
+            i, j = rng.integers(0, len(edges), 2)
+            if i == j:
+                continue
+            (a, b), (c, d) = edges[i], edges[j]
+            if rng.random() < 0.5:
+                c, d = d, c
+            if len({a, b, c, d}) < 4 or adj[a, c] or adj[b, d]:
+                continue
+            adj[a, b] = adj[b, a] = adj[c, d] = adj[d, c] = False
+            adj[a, c] = adj[c, a] = adj[b, d] = adj[d, b] = True
+            edges[i], edges[j] = (a, c), (b, d)
+            swaps += 1
+        return Graph(adj)
+
+    # -- file I/O (paper: 'topology specification' files) -------------------
+    @staticmethod
+    def from_edge_list(path: str, n: int) -> "Graph":
+        adj = np.zeros((n, n), bool)
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                a, b = map(int, line.split()[:2])
+                adj[a, b] = adj[b, a] = True
+        np.fill_diagonal(adj, False)
+        return Graph(adj)
+
+    @staticmethod
+    def from_adjacency_json(path: str) -> "Graph":
+        with open(path) as f:
+            d = json.load(f)
+        n = len(d)
+        adj = np.zeros((n, n), bool)
+        for k, nbrs in d.items():
+            for j in nbrs:
+                adj[int(k), int(j)] = adj[int(j), int(k)] = True
+        np.fill_diagonal(adj, False)
+        return Graph(adj)
+
+    def to_edge_list(self, path: str) -> None:
+        with open(path, "w") as f:
+            for a, b in zip(*np.nonzero(np.triu(self.adj))):
+                f.write(f"{a} {b}\n")
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.adj.shape[0]
+
+    def degrees(self) -> np.ndarray:
+        return self.adj.sum(1)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.adj[i])[0]
+
+    def is_connected(self) -> bool:
+        seen = {0}
+        frontier = [0]
+        while frontier:
+            i = frontier.pop()
+            for j in np.nonzero(self.adj[i])[0]:
+                if j not in seen:
+                    seen.add(int(j))
+                    frontier.append(int(j))
+        return len(seen) == self.n
+
+    # -- runtime mutation (paper: graph modifiable at run time) --------------
+    def add_edge(self, a: int, b: int) -> None:
+        if a != b:
+            self.adj[a, b] = self.adj[b, a] = True
+
+    def remove_edge(self, a: int, b: int) -> None:
+        self.adj[a, b] = self.adj[b, a] = False
+
+    # -- mixing weights -------------------------------------------------------
+    def metropolis_hastings(self) -> np.ndarray:
+        """Symmetric doubly-stochastic mixing matrix W (Xiao–Boyd):
+        W_ij = 1 / (1 + max(deg_i, deg_j)) for edges, diagonal = residual."""
+        deg = self.degrees()
+        n = self.n
+        W = np.zeros((n, n))
+        ii, jj = np.nonzero(self.adj)
+        W[ii, jj] = 1.0 / (1.0 + np.maximum(deg[ii], deg[jj]))
+        W[np.arange(n), np.arange(n)] = 1.0 - W.sum(1)
+        return W
+
+    def uniform_weights(self) -> np.ndarray:
+        """W_ij = 1/(deg_i+1) — row-stochastic equal-neighbor weights."""
+        n = self.n
+        W = self.adj / (self.degrees()[:, None] + 1.0)
+        W[np.arange(n), np.arange(n)] = 1.0 / (self.degrees() + 1.0)
+        return W
+
+    def spectral_gap(self) -> float:
+        w = np.linalg.eigvalsh(self.metropolis_hastings())
+        return 1.0 - max(abs(w[0]), abs(w[-2]))
+
+
+def circulant_offsets(n: int, degree: int) -> List[int]:
+    """Offsets of the d-regular circulant graph used by CirculantMixing."""
+    offs = []
+    for k in range(1, degree // 2 + 1):
+        offs.append(k)
+    if degree % 2 == 1:
+        assert n % 2 == 0, "odd degree needs even n (antipodal offset)"
+        offs.append(n // 2)
+    return offs
+
+
+@dataclasses.dataclass
+class PeerSampler:
+    """Centralized peer sampler (paper §3.2): instantiates a new random
+    d-regular topology every round and hands each node its neighbor list."""
+
+    n: int
+    degree: int
+    seed: int = 0
+
+    def round_graph(self, round_idx: int) -> Graph:
+        return Graph.random_regular(self.n, self.degree, self.seed * 100003 + round_idx)
+
+    def round_weights(self, round_idx: int) -> np.ndarray:
+        return self.round_graph(round_idx).metropolis_hastings()

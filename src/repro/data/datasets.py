@@ -1,0 +1,138 @@
+"""Dataset module (paper §2.2 *Dataset*).
+
+The container is offline, so the CIFAR-10 / CelebA / LEAF workloads are
+replaced by *seeded synthetic datasets with the same statistical shape*:
+10-class 32x32x3 images (CIFAR-like), 2-class 64-dim attribute vectors
+rendered as images (CelebA-like), and a learnable LM token stream.  The
+class structure is real (class-conditional generators), so accuracy
+*orderings* across topologies/sharing strategies — the paper's findings —
+are meaningful; absolute accuracies are not comparable to real CIFAR-10
+and EXPERIMENTS.md says so.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticImages:
+    """k-Gaussian-blob image classification, CIFAR-10-shaped by default.
+
+    Each class c has a fixed random prototype image; samples are
+    prototype + sigma * noise, making the Bayes classifier non-trivial but
+    learnable by a small CNN.
+    """
+
+    n_train: int = 12_800
+    n_test: int = 2_048
+    n_classes: int = 10
+    shape: Tuple[int, int, int] = (32, 32, 3)
+    sigma: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.prototypes = rng.normal(0, 1, (self.n_classes, *self.shape)).astype(np.float32)
+        self.train_x, self.train_y = self._gen(rng, self.n_train)
+        self.test_x, self.test_y = self._gen(rng, self.n_test)
+
+    def _gen(self, rng, n):
+        y = rng.integers(0, self.n_classes, n)
+        x = self.prototypes[y] + self.sigma * rng.normal(0, 1, (n, *self.shape)).astype(np.float32)
+        # keep unit-ish input variance regardless of sigma so the same lr
+        # works across difficulty levels (sigma controls Bayes error only)
+        x = x / np.sqrt(1.0 + self.sigma**2)
+        return x.astype(np.float32), y.astype(np.int32)
+
+    @property
+    def kind(self):
+        return "images"
+
+
+@dataclasses.dataclass
+class TeacherImages:
+    """Teacher-student image classification: labels come from a fixed random
+    2-layer MLP teacher over Gaussian images.  Unlike the blob dataset, the
+    decision boundary is non-linear and sample-limited — accuracy climbs
+    gradually over hundreds of rounds, which is what the paper's topology /
+    sparsification orderings need to be visible (CIFAR-10-like dynamics)."""
+
+    n_train: int = 12_800
+    n_test: int = 2_048
+    n_classes: int = 10
+    shape: Tuple[int, int, int] = (32, 32, 3)
+    teacher_hidden: int = 48
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        d = int(np.prod(self.shape))
+        self._w1 = rng.normal(0, d**-0.5, (d, self.teacher_hidden)).astype(np.float32)
+        self._w2 = rng.normal(0, self.teacher_hidden**-0.5,
+                              (self.teacher_hidden, self.n_classes)).astype(np.float32)
+        self.train_x, self.train_y = self._gen(rng, self.n_train)
+        self.test_x, self.test_y = self._gen(rng, self.n_test)
+
+    def _gen(self, rng, n):
+        x = rng.normal(0, 1, (n, *self.shape)).astype(np.float32)
+        h = np.tanh(x.reshape(n, -1) @ self._w1)
+        y = (h @ self._w2).argmax(-1).astype(np.int32)
+        return x, y
+
+    @property
+    def kind(self):
+        return "images"
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Token stream with learnable bigram structure (class-conditional
+    Markov chains so non-IID sharding is meaningful)."""
+
+    n_train: int = 4_096      # number of sequences
+    n_test: int = 512
+    seq_len: int = 64
+    vocab: int = 128
+    n_classes: int = 8        # distinct Markov chains ("document classes")
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # sparse-ish transition matrices per class
+        trans = rng.dirichlet(np.full(self.vocab, 0.05), (self.n_classes, self.vocab))
+        self.trans = trans.astype(np.float64)
+        self.train_x, self.train_y = self._gen(rng, self.n_train)
+        self.test_x, self.test_y = self._gen(rng, self.n_test)
+
+    def _gen(self, rng, n):
+        cls = rng.integers(0, self.n_classes, n)
+        seqs = np.zeros((n, self.seq_len), np.int32)
+        tok = rng.integers(0, self.vocab, n)
+        for t in range(self.seq_len):
+            seqs[:, t] = tok
+            cum = np.cumsum(self.trans[cls, tok], axis=-1)
+            tok = (cum > rng.random((n, 1))).argmax(-1)
+        return seqs, cls.astype(np.int32)
+
+    @property
+    def kind(self):
+        return "lm"
+
+
+def make_dataset(name: str, **kw):
+    name = name.lower()
+    if name in ("cifar10", "images", "synthetic-cifar"):
+        return SyntheticImages(**kw)
+    if name in ("cifar10-hard", "teacher"):
+        kw.pop("sigma", None)
+        return TeacherImages(**kw)
+    if name in ("celeba", "celeba-like"):
+        kw.setdefault("n_classes", 2)
+        kw.setdefault("shape", (32, 32, 3))
+        return SyntheticImages(**kw)
+    if name in ("lm", "tokens"):
+        return SyntheticLM(**kw)
+    raise ValueError(f"unknown dataset {name!r}")

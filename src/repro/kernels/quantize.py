@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: int8 symmetric quantization codec (Compression
+module hot path — gossip messages are quantized before hitting the wire).
+
+Two passes over the row: (1) absmax reduce -> scale, (2) scale+round+clip.
+Fused here into one kernel per row-block: row fits VMEM (rows are
+parameter-shard slices, <= 128k floats each), so one HBM read produces
+both scale and codes; stochastic rounding takes pre-drawn uniforms (keeps
+the kernel bit-exactly testable against the jnp oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _q_kernel(x_ref, o_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (1, C)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    y = jnp.round(x / scale)
+    o_ref[...] = jnp.clip(y, -127, 127).astype(jnp.int8)
+    s_ref[...] = jnp.full(s_ref.shape, scale, jnp.float32)
+
+
+def _q_kernel_sr(x_ref, n_ref, o_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    y = jnp.floor(x / scale + n_ref[...].astype(jnp.float32))
+    o_ref[...] = jnp.clip(y, -127, 127).astype(jnp.int8)
+    s_ref[...] = jnp.full(s_ref.shape, scale, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize(x, noise=None, *, interpret: bool = False):
+    """x: (R, C) -> (codes (R, C) int8, scale (R, 1) fp32). Row-blocked."""
+    R, C = x.shape
+    if noise is None:
+        return pl.pallas_call(
+            _q_kernel,
+            grid=(R,),
+            in_specs=[pl.BlockSpec((1, C), lambda i: (i, 0))],
+            out_specs=[
+                pl.BlockSpec((1, C), lambda i: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((R, C), jnp.int8),
+                jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            ],
+            interpret=interpret,
+        )(x)
+    return pl.pallas_call(
+        _q_kernel_sr,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, C), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.int8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, noise)
+
+
+def _dq_kernel(c_ref, s_ref, o_ref):
+    o_ref[...] = c_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize(codes, scale, *, interpret: bool = False):
+    R, C = codes.shape
+    return pl.pallas_call(
+        _dq_kernel,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(codes, scale)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+the shape/dtype sweep tests assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gossip_mix_ref(neighbors, weights):
+    """neighbors: (K, M) stacked neighbor shards; weights: (K,).
+    out[m] = sum_k w_k * neighbors[k, m] (fp32 accumulate)."""
+    return jnp.einsum(
+        "k,km->m", weights.astype(jnp.float32), neighbors.astype(jnp.float32)
+    ).astype(neighbors.dtype)
+
+
+def abs_histogram_ref(x, edges):
+    """Histogram of |x| over bins defined by ``edges`` (ascending, E,).
+    Returns (E+1,) int32 counts; bin i = #{|x| in [edges[i-1], edges[i])}."""
+    a = jnp.abs(x.astype(jnp.float32)).reshape(-1)
+    idx = jnp.searchsorted(edges.astype(jnp.float32), a, side="right")
+    return jnp.zeros((edges.shape[0] + 1,), jnp.int32).at[idx].add(1)
+
+
+def threshold_mask_ref(x, threshold):
+    """Values of |x| >= threshold kept, else 0; plus boolean mask."""
+    m = jnp.abs(x.astype(jnp.float32)) >= threshold
+    return jnp.where(m, x, jnp.zeros((), x.dtype)), m
+
+
+def quantize_ref(x, noise=None):
+    """Per-row symmetric int8; optional stochastic rounding with uniform
+    noise in [0,1). x: (R, C) -> (codes int8, scale (R,1) fp32)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0, 1e-12)
+    y = xf / scale
+    y = jnp.round(y) if noise is None else jnp.floor(y + noise)
+    return jnp.clip(y, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_ref(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def mask_bits_to_uniform(bits, bound):
+    """uint32 random bits -> uniform float32 in [-bound, bound).
+    Mapping: top 24 bits -> [0,1) with 2^-24 quantization (shared by the
+    kernel and the oracle so they agree bit-exactly)."""
+    u01 = (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    return (u01 * 2.0 - 1.0) * bound
+
+
+def secure_mask_apply_ref(x, bits, signs, bound):
+    """x: (K, M) pair-lanes? No — x: (M,), bits: (K, M) one row per pair,
+    signs: (K,) ±1. out = x + sum_k signs[k] * uniform(bits[k])."""
+    masks = mask_bits_to_uniform(bits, bound)  # (K, M) fp32
+    return (x.astype(jnp.float32) + jnp.einsum("k,km->m", signs.astype(jnp.float32), masks)).astype(x.dtype)
+
+
+def ssd_chunk_ref(xdt, Bc, Cc, cum):
+    """One SSD chunk (single batch element).
+
+    xdt: (L, H, P) fp32 (x * dt), Bc/Cc: (L, N), cum: (L, H) cumsum(dt*A).
+    Returns (y_intra (L, H, P), state (H, N, P), decay_out (H,)):
+      y_intra[i] = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xdt_j
+      state      = sum_j exp(cum_L - cum_j) B_j (x) xdt_j
+      decay_out  = exp(cum_L)   (total chunk decay for the recurrence)
+    """
+    L = xdt.shape[0]
+    diff = cum[:, None, :] - cum[None, :, :]  # (L, L, H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Ldec = jnp.where(tri[:, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("in,jn->ij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    y = jnp.einsum("ijh,jhp->ihp", cb[:, :, None] * Ldec, xdt.astype(jnp.float32))
+    decay_to_end = jnp.exp(cum[-1:, :] - cum)  # (L, H)
+    state = jnp.einsum("jn,jhp->hnp", Bc.astype(jnp.float32),
+                       xdt.astype(jnp.float32) * decay_to_end[:, :, None])
+    return y, state, jnp.exp(cum[-1])
+
+
+def swa_attention_ref(q, k, v, window: int):
+    """Sliding-window causal attention, single head batch-merged.
+    q,k,v: (S, D). Query i attends keys (i-window, i]."""
+    S = q.shape[0]
+    scores = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * (q.shape[-1] ** -0.5)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = (kj <= qi) & (kj > qi - window)
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return (w @ v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: fused secure-aggregation mask apply.
+
+A sender adds one cancellable mask per co-neighbor pair before the message
+leaves the chip: out = x + sum_k sign_k * U(bits_k), U mapping uint32 PRF
+bits to uniform [-b, b).  Fusing the K mask materializations + adds into
+one pass avoids K HBM round-trips of the full parameter vector.  Bits are
+produced outside (threefry) so the kernel is bit-exact against the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 65536
+
+
+def _kernel(bound_ref, x_ref, bits_ref, signs_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (BN,)
+    bits = bits_ref[...]                        # (K, BN) uint32
+    signs = signs_ref[...].astype(jnp.float32)  # (K, 1)
+    bound = bound_ref[0]
+    u01 = (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    masks = (u01 * 2.0 - 1.0) * bound
+    o_ref[...] = (x + jnp.sum(masks * signs, axis=0)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def secure_mask_apply(x, bits, signs, bound: float = 1.0, *,
+                      interpret: bool = False, block_n: int = BLOCK_N):
+    """x: (M,); bits: (K, M) uint32; signs: (K,) ±1 -> masked x (M,)."""
+    K, M = bits.shape
+    pad = (-M) % block_n
+    xp = jnp.pad(x, (0, pad))
+    bp = jnp.pad(bits, ((0, 0), (0, pad)))
+    grid = (xp.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((K, block_n), lambda i: (0, i)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(bound, jnp.float32)[None], xp, bp, signs[:, None])
+    return out[:M]

@@ -1,0 +1,129 @@
+"""Pallas TPU kernels for top-k sparsification (sharing-module hot path).
+
+TPU has no fast global sort, so top-k over a multi-million-element
+parameter vector is done the TPU-idiomatic way:
+
+  1. ``abs_histogram`` — one HBM pass accumulating a histogram of |x| over
+     log-spaced bins (VMEM accumulator, sequential grid);
+  2. host/XLA picks the threshold bin so ~k elements survive;
+  3. ``threshold_mask`` — one more pass emitting masked values + bool mask.
+
+Both kernels are memory-bound single-pass; the exact-top-k oracle
+(lax.top_k) is the test reference: the approximate mask must contain every
+element strictly above the chosen bin edge and select k within one bin's
+population.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+NBINS = 128
+
+
+def _hist_kernel(x_ref, edges_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = jnp.abs(x_ref[...].astype(jnp.float32))  # (BLOCK,)
+    edges = edges_ref[...].astype(jnp.float32)   # (E,)
+    # bucket index = #edges <= a  (same as searchsorted right)
+    idx = jnp.sum(a[:, None] >= edges[None, :], axis=1)  # (BLOCK,) in [0, E]
+    onehot = idx[:, None] == jnp.arange(edges.shape[0] + 1)[None, :]
+    o_ref[...] += jnp.sum(onehot, axis=0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def abs_histogram(x, edges, *, interpret: bool = False, block: int = BLOCK):
+    """x: (M,), edges: (E,) ascending -> (E+1,) int32 counts (pad-aware)."""
+    M = x.shape[0]
+    pad = (-M) % block
+    # pad with +inf so padding lands in the last (overflow) bucket; we
+    # subtract it afterwards.
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad), constant_values=jnp.inf)
+    grid = (xp.shape[0] // block,)
+    E = edges.shape[0]
+    hist = pl.pallas_call(
+        _hist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((E,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((E + 1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((E + 1,), jnp.int32),
+        interpret=interpret,
+    )(xp, edges)
+    return hist - jnp.zeros_like(hist).at[E].set(pad)
+
+
+def _mask_kernel(x_ref, t_ref, v_ref, m_ref):
+    x = x_ref[...]
+    t = t_ref[0]
+    keep = jnp.abs(x.astype(jnp.float32)) >= t
+    v_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
+    m_ref[...] = keep
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def threshold_mask(x, threshold, *, interpret: bool = False, block: int = BLOCK):
+    """x: (M,) -> (masked values (M,), mask bool (M,))."""
+    M = x.shape[0]
+    pad = (-M) % block
+    xp = jnp.pad(x, (0, pad))
+    grid = (xp.shape[0] // block,)
+    vals, mask = pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0],), x.dtype),
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(xp, jnp.asarray(threshold, jnp.float32)[None])
+    return vals[:M], mask[:M]
+
+
+def _pick_edge(x, k, edges, interpret):
+    """Largest edge with #{|x| >= edge} >= k, and the next edge above it."""
+    nbins = edges.shape[0]
+    hist = abs_histogram(x, edges, interpret=interpret)
+    tail = jnp.cumsum(hist[::-1])[::-1]  # tail[i] = # >= edges[i-1]
+    surv = tail[1:]  # surv[i] = #{a >= edges[i]}
+    ok = surv >= k
+    idx = jnp.where(ok.any(), (jnp.arange(nbins) * ok).argmax(), 0)
+    t = jnp.where(ok.any(), edges[idx], 0.0)
+    t_hi = edges[jnp.minimum(idx + 1, nbins - 1)]
+    return t, t_hi, hist
+
+
+def topk_threshold(x, k: int, nbins: int = NBINS, interpret: bool = False):
+    """Histogram-based threshold t s.t. #{|x| >= t} ~ k (>= k, within one
+    *fine* bin).  Two passes: coarse log bins bracket the threshold, then a
+    linear re-binning inside the bracketing bin refines it (the log tail is
+    too coarse for small k otherwise).  Returns (threshold, hist, edges)."""
+    a = jnp.abs(x.astype(jnp.float32))
+    hi = jnp.max(a)
+    lo = jnp.maximum(hi * 1e-7, 1e-30)
+    edges = jnp.exp(jnp.linspace(jnp.log(lo), jnp.log(hi), nbins))
+    t0, t0_hi, hist = _pick_edge(x, k, edges, interpret)
+    # refinement: linear bins across the bracketing interval [t0, t0_hi]
+    fine = jnp.linspace(t0, jnp.maximum(t0_hi, t0 + 1e-30), nbins)
+    t1, _, _ = _pick_edge(x, k, fine, interpret)
+    t = jnp.maximum(t0, t1)
+    return t, hist, edges

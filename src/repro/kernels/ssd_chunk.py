@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk compute. [arXiv:2405.21060]
+
+Per (batch, chunk) grid cell, with L = chunk length, N = state dim,
+P = head dim, H = heads:
+
+    scores[i,j,h] = (C_i . B_j) * exp(cum_i[h] - cum_j[h]) * tril
+    y_intra[i,h]  = sum_j scores[i,j,h] * xdt[j,h]          (MXU matmuls)
+    state[h]      = sum_j exp(cum_L - cum_j)[h] B_j (x) xdt[j,h]
+    decay_out[h]  = exp(cum_L[h])
+
+TPU adaptation of the paper-family CUDA kernels: L and N are chosen as
+multiples of 128 so C.B^T and scores@xdt land on the MXU; the decay matrix
+is built in VMEM from the cumsum vector (never touches HBM); heads are a
+grid dimension so each cell's working set (L*N + L*L + L*P fp32 ~ 200 KB)
+fits VMEM comfortably.
+
+The inter-chunk recurrence (tiny, bandwidth-trivial) stays in jnp
+(``lax.scan`` in ssm.py / ops.ssd_scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xdt_ref, b_ref, c_ref, cum_ref, y_ref, st_ref, dec_ref):
+    # Blocks carry a leading 1 (grid cell): xdt (1,L,P), b/c (1,L,N),
+    # cum (1,L,1) — one (batch*chunk, head) cell.
+    xdt = xdt_ref[0].astype(jnp.float32)   # (L, P)
+    B = b_ref[0].astype(jnp.float32)       # (L, N)
+    C = c_ref[0].astype(jnp.float32)       # (L, N)
+    cum = cum_ref[0].astype(jnp.float32)[:, 0]  # (L,)
+    L = xdt.shape[0]
+
+    cb = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (L, L) MXU
+    diff = cum[:, None] - cum[None, :]
+    tri = jnp.tril(jnp.ones((L, L), jnp.bool_))
+    scores = jnp.where(tri, cb * jnp.exp(diff), 0.0)
+    y_ref[0] = jnp.dot(scores, xdt, preferred_element_type=jnp.float32).astype(
+        y_ref.dtype
+    )  # (L, P) MXU
+
+    decay_end = jnp.exp(cum[-1] - cum)  # (L,)
+    st_ref[0] = jnp.dot(
+        (B * decay_end[:, None]).T, xdt, preferred_element_type=jnp.float32
+    ).astype(st_ref.dtype)  # (N, P) MXU
+    dec_ref[0] = jnp.full((1, 1), jnp.exp(cum[-1]), dec_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(xdt, Bc, Cc, cum, *, interpret: bool = False):
+    """Batched intra-chunk SSD.
+
+    xdt: (G, L, H, P) fp32 where G = batch*chunks; Bc/Cc: (G, L, N);
+    cum: (G, L, H).  Returns (y (G, L, H, P), state (G, H, N, P),
+    decay (G, H))."""
+    G, L, H, P = xdt.shape
+    N = Bc.shape[-1]
+    # move heads next to G for the grid: (G, H, L, ...)
+    xdt_t = jnp.moveaxis(xdt, 2, 1).reshape(G * H, L, P)
+    cum_t = jnp.moveaxis(cum, 2, 1).reshape(G * H, L, 1)
+    # B/C shared across heads -> index_map repeats per head
+    grid = (G, H)
+    y, st, dec = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, P), lambda g, h, H=H: (g * H + h, 0, 0)),
+            pl.BlockSpec((1, L, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, L, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, L, 1), lambda g, h, H=H: (g * H + h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, P), lambda g, h, H=H: (g * H + h, 0, 0)),
+            pl.BlockSpec((1, N, P), lambda g, h, H=H: (g * H + h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda g, h, H=H: (g * H + h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G * H, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((G * H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((G * H, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt_t, Bc, Cc, cum_t)
+    y = jnp.moveaxis(y.reshape(G, H, L, P), 1, 2)
+    st = st.reshape(G, H, N, P)
+    dec = dec.reshape(G, H)
+    return y, st, dec

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: sliding-window flash attention (long_500k dense path).
+
+Flash-style running-softmax over key blocks, but the key-block loop is
+*bounded by the window*: query block qi only visits key blocks
+[qi - W/BK, qi], so total work is O(S * W) instead of O(S^2) — this is what
+makes a 512k-token dense decode/prefill shape viable at all.
+
+Grid: (batch*heads, q_blocks, k_blocks_per_window); BQ = BK = 128 (MXU
+native).  The running (m, l, acc) state lives in VMEM scratch across the
+innermost k-block dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, window, bq, bk):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)  # 0 .. kblocks_per_win-1, maps to absolute block
+    nkb = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute key block index = qi - (nkb - 1) + kj  (may be < 0 -> skip)
+    abs_kb = qi - (nkb - 1) + kj
+
+    @pl.when(abs_kb >= 0)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)  # (BK, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (q.shape[-1] ** -0.5)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = abs_kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kj == nkb - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret", "bq", "bk"))
+def swa_attention(q, k, v, window: int, *, interpret: bool = False,
+                  bq: int = BQ, bk: int = BK):
+    """q, k, v: (BH, S, D) merged batch*heads; causal sliding-window
+    attention with the given window. S % bq == 0, window % bk == 0."""
+    BH, S, D = q.shape
+    assert S % bq == 0 and window % bk == 0
+    nq = S // bq
+    nkb = window // bk + 1  # window span + the diagonal block
+    grid = (BH, nq, nkb)
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qi, kj: (b, qi, 0)),
+            pl.BlockSpec(
+                (1, bk, D),
+                lambda b, qi, kj, nkb=nkb: (b, jnp.maximum(qi - (nkb - 1) + kj, 0), 0),
+            ),
+            pl.BlockSpec(
+                (1, bk, D),
+                lambda b, qi, kj, nkb=nkb: (b, jnp.maximum(qi - (nkb - 1) + kj, 0), 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, kj: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+the production mesh (16x16 single-pod, 2x16x16 multi-pod), print
+memory_analysis / cost_analysis, and derive the roofline terms.
+
+The two lines above MUST precede any jax-importing import — jax locks the
+device count at first init.  Run one combination per process:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, supports_shape
+from repro.launch.mesh import make_production_mesh, n_node_slots, node_axes
+from repro.launch.roofline import Roofline, parse_collective_bytes
+from repro.launch.specs import batch_specs, plan_nodes
+from repro.models.api import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    model_flops,
+    param_specs,
+)
+from repro.optim import sgd
+from repro.training.trainer import TrainConfig, make_train_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def sanitize_specs(shapes, specs, mesh):
+    """Drop sharding on any dim the mesh axes don't divide (e.g. whisper's
+    51865 vocab over model=16)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(sds, spec):
+        entries = []
+        for dim, entry in zip(sds.shape, tuple(spec) + (None,) * (len(sds.shape) - len(spec))):
+            if entry is None:
+                entries.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            entries.append(entry if dim % total == 0 else None)
+        return P(*entries)
+
+    return jax.tree_util.tree_map(fix, shapes, specs)
+
+
+def _node_entry(n_nodes: int, naxes: tuple, mesh):
+    if n_nodes == 1:
+        return None
+    sizes = [mesh.shape[a] for a in naxes]
+    if n_nodes == int(np.prod(sizes)):
+        return naxes if len(naxes) > 1 else naxes[0]
+    if n_nodes == sizes[0]:
+        return naxes[0]
+    return None
+
+
+def build(arch: str, shape_name: str, multi_pod: bool, mixing_impl: str = "roll",
+          topology: str = "regular", overrides: Optional[dict] = None):
+    """-> (jitted fn, args, meta) ready to .lower()."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # unroll layer scans: XLA cost_analysis counts a while body once, so the
+    # roofline would under-count flops and in-loop collectives by ~n_layers.
+    ov = dict(overrides or {})
+    gossip_budget = ov.pop("gossip_budget", 0.1)
+    cfg = get_config(arch).replace(scan_unroll=True, **ov)
+    shape = INPUT_SHAPES[shape_name]
+    naxes = node_axes(mesh)
+    slots = n_node_slots(mesh)
+    n_nodes, B = plan_nodes(shape, slots)
+    nentry = _node_entry(n_nodes, naxes, mesh)
+
+    pshapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+    stacked_pshapes = jax.tree_util.tree_map(
+        lambda l: _sds((n_nodes, *l.shape), l.dtype), pshapes
+    )
+    pspecs = sanitize_specs(stacked_pshapes, param_specs(cfg, leading=(nentry,)), mesh)
+    pshard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    def shard_like(sds_tree, node_first=True):
+        return jax.tree_util.tree_map(
+            lambda l: NamedSharding(mesh, P(nentry, *((None,) * (l.ndim - 1)))), sds_tree
+        )
+
+    meta = dict(arch=arch, shape=shape_name, mode=shape.mode,
+                mesh="2x16x16" if multi_pod else "16x16",
+                n_nodes=n_nodes, batch_per_node=B, n_chips=int(mesh.size))
+
+    if shape.mode == "train":
+        tokens_per_step = shape.global_batch * shape.seq_len if cfg.family not in ("cnn",) else shape.global_batch
+        meta["model_flops"] = model_flops(cfg, tokens_per_step, "train")
+        opt = sgd(1e-2)
+        topo = topology if n_nodes > 5 else "fully"
+        tc = TrainConfig(n_nodes=n_nodes, topology=topo, degree=5,
+                         mixing_impl=mixing_impl, budget=gossip_budget)
+        step = make_train_step(cfg, opt, tc, mesh=mesh, node_axes=naxes, pspecs=pspecs)
+        batch = batch_specs(cfg, shape, n_nodes, B)
+        opt_sds = jax.eval_shape(jax.vmap(opt.init), stacked_pshapes)
+        opt_shard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                           sanitize_specs(opt_sds, jax.tree_util.tree_map(lambda l: P(*((None,) * l.ndim)), opt_sds), mesh)) if jax.tree_util.tree_leaves(opt_sds) else opt_sds
+        args = (stacked_pshapes, opt_sds, batch)
+        in_sh = (pshard, opt_shard, shard_like(batch))
+        fn = jax.jit(step, in_shardings=in_sh,
+                     out_shardings=(pshard, opt_shard, NamedSharding(mesh, P())))
+        return fn, args, meta
+
+    if shape.mode == "prefill":
+        meta["model_flops"] = model_flops(cfg, shape.global_batch * shape.seq_len, "infer")
+
+        def prefill(params, batch):
+            def one(p, b):
+                logits, _ = forward(p, cfg, b)
+                return logits[:, -1, :]  # next-token logits only
+
+            return jax.vmap(one)(params, batch)
+
+        batch = batch_specs(cfg, shape, n_nodes, B)
+        batch.pop("labels")
+        args = (stacked_pshapes, batch)
+        fn = jax.jit(prefill, in_shardings=(pshard, shard_like(batch)))
+        return fn, args, meta
+
+    # decode
+    meta["model_flops"] = model_flops(cfg, shape.global_batch, "infer")
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, shape.seq_len))
+    stacked_cache = jax.tree_util.tree_map(
+        lambda l: _sds((n_nodes, *l.shape), l.dtype), cache_shapes
+    )
+
+    def cache_spec(l):
+        # shard the trailing dim over 'model' when divisible (kv-head*hd,
+        # MLA latent, SSM channels), node axis in front.
+        entries = [nentry] + [None] * (l.ndim - 1)
+        if l.shape[-1] % mesh.shape["model"] == 0 and l.shape[-1] >= mesh.shape["model"]:
+            entries[-1] = "model"
+        return NamedSharding(mesh, P(*entries))
+
+    cache_shard = jax.tree_util.tree_map(cache_spec, stacked_cache)
+    tokens = _sds((n_nodes, B, 1), jnp.int32)
+    index = _sds((), jnp.int32)
+
+    def serve(params, cache, toks, idx):
+        def one(p, c, t):
+            return decode_step(p, cfg, c, t, idx)
+
+        return jax.vmap(one)(params, cache, toks)
+
+    args = (stacked_pshapes, stacked_cache, tokens, index)
+    in_sh = (pshard, cache_shard, shard_like(tokens), NamedSharding(mesh, P()))
+    fn = jax.jit(serve, in_shardings=in_sh)
+    return fn, args, meta
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, mixing_impl: str = "roll",
+            topology: str = "regular", verbose: bool = True,
+            overrides: Optional[dict] = None) -> dict:
+    ok, reason = supports_shape(arch, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    fn, args, meta = build(arch, shape_name, multi_pod, mixing_impl, topology, overrides)
+    meta["overrides"] = {**(overrides or {}), "mixing_impl": mixing_impl,
+                         "topology": topology}
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    rec = dict(meta)
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        flops_dev=float(cost.get("flops", 0.0)),
+        hbm_bytes_dev=float(cost.get("bytes accessed", 0.0)),
+        coll=coll,
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            generated_code_bytes=getattr(mem, "generated_code_size_in_bytes", None),
+        ),
+    )
+    r = Roofline(
+        arch=arch, shape=shape_name, mesh=rec["mesh"],
+        flops_dev=rec["flops_dev"], hbm_bytes_dev=rec["hbm_bytes_dev"],
+        coll_bytes_dev=float(coll["total"]), coll_breakdown=coll,
+        model_flops_total=meta["model_flops"], n_chips=meta["n_chips"],
+    )
+    rec["roofline"] = r.to_dict()
+    # complementary fused-HBM memory bound (see launch/analytic.py)
+    from repro.launch.analytic import fused_hbm_bytes
+    from repro.launch.mesh import HBM_BW
+
+    cfg_ov = {k: v for k, v in (overrides or {}).items() if k != "gossip_budget"}
+    cfg_eff = get_config(arch).replace(**cfg_ov)
+    fused = fused_hbm_bytes(cfg_eff, shape_name, meta["n_nodes"])
+    rec["roofline"]["hbm_bytes_fused"] = fused
+    rec["roofline"]["t_memory_fused"] = fused / HBM_BW
+    if verbose:
+        print(f"[dryrun] {r.row()}")
+        print(f"         mem {rec['memory']}  lower {t_lower:.0f}s compile {t_compile:.0f}s")
+        print(f"         collectives: " + ", ".join(
+            f"{k}={v/1e6:.1f}MB" for k, v in coll.items() if k not in ("count", "total") and v))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mixing", default="roll",
+                    choices=["roll", "shard_map", "dense", "sparse", "quant",
+                             "sparse+quant"])
+    ap.add_argument("--topology", default="regular",
+                    choices=["ring", "regular", "fully", "dense"])
+    ap.add_argument("--all", action="store_true", help="sweep every combo in subprocesses")
+    ap.add_argument("--out", default=None, help="JSON output path (or dir for --all)")
+    ap.add_argument("--attn", default=None, choices=["naive", "chunked"],
+                    help="attention impl override (perf iteration)")
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--remat", default=None, choices=["on", "off"])
+    ap.add_argument("--remat-policy", default=None, choices=["full", "save_comm"])
+    ap.add_argument("--gossip-budget", type=float, default=None)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        sweep(args.out or "results/dryrun", multi_pod=args.multi_pod)
+        return
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    overrides = {}
+    if args.attn:
+        overrides["attn_impl"] = args.attn
+    if args.attn_chunk:
+        overrides["attn_chunk"] = args.attn_chunk
+    if args.remat:
+        overrides["remat"] = args.remat == "on"
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+    if args.gossip_budget is not None:
+        overrides["gossip_budget"] = args.gossip_budget
+    rec = run_one(args.arch, args.shape, args.multi_pod, args.mixing, args.topology,
+                  overrides=overrides)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+def sweep(out_dir: str, multi_pod: bool = False, jobs: int = 4):
+    """Run every (arch x shape) in isolated subprocesses (device-count and
+    memory isolation); collect JSONs."""
+    import concurrent.futures as cf
+    import os as _os
+
+    _os.makedirs(out_dir, exist_ok=True)
+    combos = [(a, s) for a in ARCHS if a != "gn-lenet" for s in INPUT_SHAPES] + [
+        ("gn-lenet", "train_4k")
+    ]
+
+    def run(combo):
+        a, s = combo
+        tag = f"{a}__{s}__{'mp' if multi_pod else 'sp'}"
+        out = _os.path.join(out_dir, tag + ".json")
+        if _os.path.exists(out):
+            return tag, "cached"
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a, "--shape", s,
+               "--out", out]
+        if multi_pod:
+            cmd.append("--multi-pod")
+        p = subprocess.run(cmd, capture_output=True, text=True, timeout=3600)
+        if p.returncode != 0:
+            with open(out + ".err", "w") as f:
+                f.write(p.stdout + "\n" + p.stderr)
+            return tag, "FAILED"
+        return tag, "ok"
+
+    with cf.ThreadPoolExecutor(jobs) as ex:
+        for tag, status in ex.map(run, combos):
+            print(f"[sweep] {tag}: {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh: 16x16 (256 chips / pod, TPU v5e) single-pod, plus a
+2x16x16 multi-pod variant.  A function — importing this module never
+touches jax device state (device count is locked at first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def node_axes(mesh) -> tuple:
+    """Mesh axes that form the DL node dimension (everything except TP)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_node_slots(mesh) -> int:
+    n = 1
+    for a in node_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+# TPU v5e constants for the roofline model.
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

@@ -1,0 +1,162 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+``cost_analysis()`` gives the SPMD (per-device) module's FLOPs and HBM
+bytes; collective bytes are NOT in cost_analysis, so we parse the HLO text:
+build an instruction -> result-bytes map, then sum *operand* bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Approximation note (documented, consistent across perf iterations):
+operand bytes ~ bytes each device injects into the interconnect per op
+(exact for collective-permute & all-to-all; all-reduce moves ~2x(K-1)/K of
+operand; all-gather receives (K-1)x operand).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]+?\)?)\s+([\w\-]+)\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-type operand bytes summed over the module."""
+    result_bytes: Dict[str, int] = {}
+    # pass 1: result sizes of all instructions
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, shape_str, _op = m.groups()
+            result_bytes[name] = _shape_bytes(shape_str)
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    # pass 2: operand bytes of collectives
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        opc = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if opc is None:
+            continue
+        # operands: %names inside the first (...) group
+        args = line.split("(", 1)[1]
+        depth, end = 1, 0
+        for i, ch in enumerate(args):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                end = i
+                break
+        operand_names = re.findall(r"%([\w\.\-]+)", args[:end])
+        b = sum(result_bytes.get(n, 0) for n in operand_names)
+        if b == 0:  # fused formatting: fall back to result size
+            b = _shape_bytes(shape_str)
+        out[opc] += b
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_dev: float          # per-device HLO flops
+    hbm_bytes_dev: float      # per-device HBM traffic
+    coll_bytes_dev: float     # per-device collective operand bytes
+    coll_breakdown: Dict[str, int]
+    model_flops_total: float  # 6·N·D (train) / 2·N·D (inference)
+    n_chips: int
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_dev / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_dev / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_dev / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO flops (remat/redundancy waste detector)."""
+        total_hlo = self.flops_dev * self.n_chips
+        return self.model_flops_total / total_hlo if total_hlo else float("nan")
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            useful_flops_ratio=self.useful_flops_ratio,
+        )
+        return d
+
+    def suggestion(self) -> str:
+        """One sentence: what would move the dominant term down."""
+        b = self.bottleneck
+        decode = "decode" in self.shape or "500k" in self.shape
+        if b == "collective":
+            return ("compress the wire: sparse/int8 gossip for the permutes, "
+                    "chunked attention to stop score-tensor reshard ARs (§Perf)")
+        if b == "memory":
+            if decode:
+                return ("decode is weight/cache streaming-bound: batch more "
+                        "requests per replica; MLA/SSM-style cache compression "
+                        "shrinks the streamed bytes")
+            return ("chunked/flash attention deletes the O(S²) score HBM "
+                    "traffic that dominates the unfused bound (§Perf pair 2); "
+                    "remaining gap is fusion (see fused bound)")
+        return ("at the compute roofline: raise arithmetic intensity "
+                "(larger per-node batch) or add chips")
+
+    def row(self) -> str:
+        return (
+            f"{self.arch:26s} {self.shape:12s} {self.mesh:9s} "
+            f"C {self.t_compute*1e3:9.3f}ms  M {self.t_memory*1e3:9.3f}ms  "
+            f"X {self.t_collective*1e3:9.3f}ms  -> {self.bottleneck:10s} "
+            f"useful {self.useful_flops_ratio:6.2%}"
+        )

@@ -1,0 +1,97 @@
+"""Dry-run input specs: ShapeDtypeStruct stand-ins + NamedShardings for
+every (architecture x input-shape) combination — weak-type-correct,
+shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape, get_config
+from repro.models.api import cache_specs, init_cache, param_specs
+from repro.models.config import ModelConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def plan_nodes(shape: InputShape, n_slots: int) -> Tuple[int, int]:
+    """(n_nodes, batch_per_node): emulated-DL-node count for this input.
+
+    The node axis carries DL nodes; if the global batch cannot fill every
+    slot (long-context decode), the surplus slots replicate."""
+    n_nodes = min(n_slots, shape.global_batch)
+    assert shape.global_batch % n_nodes == 0
+    return n_nodes, shape.global_batch // n_nodes
+
+
+def node_spec(n_nodes: int, n_slots: int, node_axes: tuple):
+    """Leading-axis PartitionSpec entry for the node-stacked dimension."""
+    if n_nodes == n_slots:
+        return node_axes if len(node_axes) > 1 else node_axes[0]
+    if len(node_axes) > 1 and n_nodes == 1:
+        return None
+    if n_nodes == 1:
+        return None
+    # partial fill: shard over the first node axis only if it divides
+    first = node_axes[0]
+    return first if n_nodes % 1 == 0 else None
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, n_nodes: int, B: int) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct pytree, PartitionSpec pytree) for the *stacked*
+    train batch (leading node axis added by the caller's vmap)."""
+    S = shape.seq_len
+    tok = _sds((n_nodes, B, S), jnp.int32)
+    if cfg.family == "vlm":
+        batch = {
+            "embeddings": _sds((n_nodes, B, S, cfg.d_model), cfg.jdtype),
+            "positions": _sds((n_nodes, 3, B, S), jnp.int32),
+            "labels": tok,
+        }
+    elif cfg.family == "encdec":
+        batch = {
+            "frames": _sds((n_nodes, B, cfg.enc_seq, cfg.d_model), cfg.jdtype),
+            "tokens": tok,
+            "labels": tok,
+        }
+    elif cfg.family == "cnn":
+        batch = {
+            "images": _sds((n_nodes, B, 32, 32, 3), cfg.jdtype),
+            "labels": _sds((n_nodes, B), jnp.int32),
+        }
+    else:
+        batch = {"tokens": tok, "labels": tok}
+    return batch
+
+
+def batch_partition_specs(batch, node_entry):
+    return jax.tree_util.tree_map(
+        lambda l: P(node_entry, *((None,) * (l.ndim - 1))), batch
+    )
+
+
+def stacked_param_specs(cfg: ModelConfig, node_entry):
+    return param_specs(cfg, leading=(node_entry,))
+
+
+def stacked_param_shapes(cfg: ModelConfig, n_nodes: int):
+    shapes = jax.eval_shape(lambda k: __import__("repro.models.api", fromlist=["init_params"]).init_params(cfg, k), jax.random.key(0))
+    return jax.tree_util.tree_map(lambda l: _sds((n_nodes, *l.shape), l.dtype), shapes)
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, n_nodes: int, B: int):
+    """(cache_sds, tokens_sds, cache_pspecs) for one-token decode with a
+    seq_len-deep cache."""
+    max_len = shape.seq_len
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, max_len))
+    cache_sds = jax.tree_util.tree_map(
+        lambda l: _sds((n_nodes, *l.shape), l.dtype), cache_shapes
+    )
+    tokens = _sds((n_nodes, B, 1), jnp.int32)
+    return cache_sds, tokens

@@ -1,0 +1,12 @@
+from repro.models.config import ModelConfig
+from repro.models.api import (
+    init_params,
+    forward,
+    loss_fn,
+    init_cache,
+    decode_step,
+    param_specs,
+    model_flops,
+    param_count,
+    active_param_count,
+)

@@ -1,0 +1,231 @@
+"""Unified model API across all families.
+
+``init_params / forward / loss_fn / init_cache / decode_step`` dispatch on
+``cfg.family``; ``param_specs`` produces the tensor-parallel PartitionSpec
+pytree (the node axis is prepended by the DL layer, see core/node.py).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import cnn as _cnn
+from repro.models import encdec as _encdec
+from repro.models import hybrid as _hybrid
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    lm_head,
+    transformer_apply,
+    transformer_cache_init,
+    transformer_decode,
+    transformer_init,
+)
+
+
+# ---------------------------------------------------------------------------
+# init / forward / loss
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    cfg.validate()
+    if cfg.family == "cnn":
+        return _cnn.cnn_init(key, num_classes=cfg.vocab, dtype=cfg.jdtype)
+    if cfg.family in ("ssm", "hybrid"):
+        return _hybrid.hybrid_init(key, cfg)
+    if cfg.family == "encdec":
+        return _encdec.encdec_init(key, cfg)
+    return transformer_init(key, cfg)  # dense / moe / vlm
+
+
+def _positions(cfg: ModelConfig, B: int, S: int):
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(jnp.arange(S)[None, None, :], (3, B, S))
+    return jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """-> (logits, aux_loss)."""
+    if cfg.family == "cnn":
+        return _cnn.cnn_apply(params, batch["images"]), jnp.zeros((), jnp.float32)
+    if cfg.family == "encdec":
+        logits = _encdec.decode_train(params, cfg, batch["frames"], batch["tokens"])
+        return logits, jnp.zeros((), jnp.float32)
+    if "embeddings" in batch:  # vlm stub frontend
+        x = batch["embeddings"]
+        B, S = x.shape[:2]
+        positions = batch.get("positions", _positions(cfg, B, S))
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        positions = _positions(cfg, B, S)
+    if cfg.family in ("ssm", "hybrid"):
+        h, aux = _hybrid.hybrid_apply(params, cfg, x, positions)
+        return lm_head(params, cfg, h), aux
+    h, aux = transformer_apply(params, cfg, x, positions)
+    return lm_head(params, cfg, h), aux
+
+
+def cross_entropy(logits, labels, ignore: int = -1):
+    """Mean CE over valid labels. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    valid = labels != ignore
+    ce = jnp.where(valid, lse - gold, 0.0)
+    return ce.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward(params, cfg, batch)
+    return cross_entropy(logits, batch["labels"]) + aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Zeroed cache (also usable as dry-run ShapeDtypeStruct template)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return _hybrid.hybrid_cache_init(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return _encdec.encdec_cache_specs(cfg, batch, max_len)
+    return transformer_cache_init(cfg, batch, max_len)
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    """Real serving prefill for transformer families: one full pass that
+    returns (last-position logits (B,V), populated cache).  Decode then
+    continues from index = S.  (SSM/hybrid/enc-dec prefill paths live in
+    their modules; see encdec.encdec_cache_init.)"""
+    from repro.models.transformer import transformer_prefill
+
+    assert cfg.family in ("dense", "moe", "vlm"), cfg.family
+    if "embeddings" in batch:
+        x = batch["embeddings"]
+        B, S = x.shape[:2]
+        positions = batch.get("positions", _positions(cfg, B, S))
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        positions = _positions(cfg, B, S)
+    h, cache = transformer_prefill(params, cfg, x, positions, max_len)
+    return lm_head(params, cfg, h[:, -1]), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, index):
+    """tokens (B, 1) int32; index: scalar int32 position. -> (logits, cache)."""
+    x = params["embed"][tokens]
+    if cfg.family in ("ssm", "hybrid"):
+        h, new_cache = _hybrid.hybrid_decode(params, cfg, cache, x, index)
+    elif cfg.family == "encdec":
+        h, new_cache = _encdec.encdec_decode(params, cfg, cache, x, index)
+    else:
+        h, new_cache = transformer_decode(params, cfg, cache, x, index)
+    return lm_head(params, cfg, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# partition specs (tensor-parallel over the 'model' mesh axis)
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # (regex on dotted path, base rank, spec for the trailing base dims)
+    (r"embed$", 2, ("model", None)),
+    (r"enc_pos$", 2, (None, None)),
+    (r"lm_head$", 2, (None, "model")),
+    (r"(w_q|w_k|w_v)$", 2, (None, "model")),
+    (r"(b_q|b_k|b_v)$", 1, ("model",)),
+    (r"w_o$", 2, ("model", None)),
+    (r"w_dq$", 2, (None, None)),
+    (r"w_dkv$", 2, (None, None)),
+    (r"(w_uk|w_uv)$", 3, ("model", None, None)),
+    (r"moe\.router$", 2, (None, "model")),
+    (r"moe\.(w_gate|w_up|w_down)$", 3, ("model", None, None)),
+    (r"(w_gate|w_up)$", 2, (None, "model")),
+    (r"w_down$", 2, ("model", None)),
+    (r"in_proj$", 2, (None, "model")),
+    (r"conv_w$", 2, (None, "model")),
+    (r"conv_b$", 1, ("model",)),
+    (r"gate_norm$", 1, ("model",)),
+    (r"out_proj$", 2, ("model", None)),
+]
+
+
+def _path_str(path) -> str:
+    return ".".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(cfg: ModelConfig, leading=()):
+    """PartitionSpec pytree matching ``init_params`` output.
+
+    ``leading`` is prepended to every spec (e.g. the node axis
+    ``(('pod','data'),)`` from the DL layer).  Stacked layer dims get None.
+    """
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        for pat, base_rank, base_spec in _RULES:
+            if re.search(pat, name):
+                pad = (None,) * (leaf.ndim - base_rank)
+                return P(*leading, *pad, *base_spec)
+        return P(*leading, *((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, leading=()):
+    """PartitionSpecs for the KV/state cache: batch over node axis, heads/
+    channels over 'model' where the dim is head-like."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        # caches: (layers..., B, ...) — B is the first batch-like dim after
+        # stacked layer dims.  k/v: (..., B, S, Hkv, hd) -> heads sharded.
+        if re.search(r"(\bk$|\bv$|k$|v$)", name) and leaf.ndim >= 4:
+            pad = (None,) * (leaf.ndim - 4)
+            return P(*leading, *pad, None, "model", None)
+        return P(*leading, *((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+# ---------------------------------------------------------------------------
+# counting
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: only top-k routed experts active)."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+    total = 0
+
+    def walk(path, leaf):
+        nonlocal total
+        name = _path_str(path)
+        n = int(np.prod(leaf.shape))
+        if re.search(r"moe\.(w_gate|w_up|w_down)$", name):
+            n = int(n * cfg.moe_top_k / cfg.n_experts)
+        total += n
+
+    jax.tree_util.tree_map_with_path(walk, shapes)
+    return total
+
+
+def model_flops(cfg: ModelConfig, tokens: int, mode: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params."""
+    n = active_param_count(cfg)
+    return (6.0 if mode == "train" else 2.0) * n * tokens

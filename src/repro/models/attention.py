@@ -1,0 +1,381 @@
+"""Attention: GQA (+ qk-norm, QKV bias, RoPE / M-RoPE, sliding window),
+MLA (deepseek-v2 latent attention), and cross-attention — with KV caches.
+
+Layouts: activations (B, S, D); q/k/v (B, S, H, hd); caches (B, S_max, Hkv, hd).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_mrope, apply_rope, dense_init, rms_norm
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False):
+    d, H, Hkv, hd, dt = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.jdtype
+    ks = jax.random.split(key, 8)
+    if cfg.mla and not cross:
+        p = {
+            "w_q": dense_init(ks[0], (d, H * (cfg.qk_nope_dim + cfg.qk_rope_dim)), dt),
+            "w_dkv": dense_init(ks[1], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), dt),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), dt),
+            "w_uk": dense_init(ks[2], (H, cfg.kv_lora_rank, cfg.qk_nope_dim), dt),
+            "w_uv": dense_init(ks[3], (H, cfg.kv_lora_rank, cfg.v_head_dim), dt),
+            "w_o": dense_init(ks[4], (H * cfg.v_head_dim, d), dt),
+        }
+        if cfg.q_lora_rank:
+            p["w_dq"] = dense_init(ks[5], (d, cfg.q_lora_rank), dt)
+            p["q_norm"] = jnp.ones((cfg.q_lora_rank,), dt)
+            p["w_q"] = dense_init(ks[0], (cfg.q_lora_rank, H * (cfg.qk_nope_dim + cfg.qk_rope_dim)), dt)
+        return p
+    p = {
+        "w_q": dense_init(ks[0], (d, H * hd), dt),
+        "w_k": dense_init(ks[1], (d, Hkv * hd), dt),
+        "w_v": dense_init(ks[2], (d, Hkv * hd), dt),
+        "w_o": dense_init(ks[3], (H * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((H * hd,), dt)
+        p["b_k"] = jnp.zeros((Hkv * hd,), dt)
+        p["b_v"] = jnp.zeros((Hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int, layers: Optional[int] = None):
+    """Zeroed KV cache for ``layers`` stacked layers (or unstacked if None)."""
+    Hkv, hd, dt = cfg.n_kv_heads, cfg.hd, cfg.jdtype
+    if cfg.sliding_window is not None:
+        max_len = min(max_len, cfg.sliding_window)
+    if cfg.mla:
+        shp_c = (batch, max_len, cfg.kv_lora_rank)
+        shp_r = (batch, max_len, cfg.qk_rope_dim)
+        if layers is not None:
+            shp_c, shp_r = (layers, *shp_c), (layers, *shp_r)
+        return {"ckv": jnp.zeros(shp_c, dt), "krope": jnp.zeros(shp_r, dt)}
+    shp = (batch, max_len, Hkv, hd)
+    if layers is not None:
+        shp = (layers, *shp)
+    return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+
+
+# ---------------------------------------------------------------------------
+# core score/combine
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,hd), k: (B,T,Hkv,hd) -> (B,Hkv,G,S,T) fp32 scores."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    q = q.reshape(B, S, Hkv, H // Hkv, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_combine(w, v):
+    """w: (B,Hkv,G,S,T) fp32, v: (B,T,Hkv,hd) -> (B,S,H*hd)."""
+    B, Hkv, G, S, T = w.shape
+    o = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return o.reshape(B, S, Hkv * G * v.shape[-1])
+
+
+def _softmax_masked(scores, mask):
+    scores = jnp.where(mask, scores, NEG_INF)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def _chunked_gqa_attention(q, k, v, scale, *, causal=True, window=None, chunk=512,
+                           unroll=False):
+    """Flash-style running-softmax attention, scanned over KV chunks.
+
+    Removes the O(S^2) materialized score tensors from HBM: each scan
+    iteration's (B,Hkv,G,S,C) scores are fused into the softmax-accumulate
+    and never written back.  q: (B,S,H,hd); k/v: (B,T,Hkv,hd).
+    """
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    C = min(chunk, T)
+    assert T % C == 0, (T, C)
+    nc = T // C
+    qr = q.reshape(B, S, Hkv, G, hd)
+    ks = jnp.moveaxis(k.reshape(B, nc, C, Hkv, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nc, C, Hkv, hd), 1, 0)
+    q_pos = jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, j = inp
+        s = jnp.einsum("bskgd,btkd->bkgst", qr, kc, preferred_element_type=jnp.float32) * scale
+        k_pos = j * C + jnp.arange(C)
+        mask = jnp.ones((S, C), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l2 = l * alpha + p.sum(-1, keepdims=True)
+        acc2 = acc * alpha + jnp.einsum("bkgst,btkd->bkgsd", p.astype(vc.dtype), vc).astype(
+            jnp.float32
+        )
+        return (m_new, l2, acc2), None
+
+    m0 = jnp.full((B, Hkv, G, S, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, S, hd), jnp.float32)
+    # dry-run roofline must unroll: XLA cost_analysis counts a while body once
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, jnp.arange(nc)),
+                                  unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)
+    # (B,Hkv,G,S,hd) -> (B,S,H*hd)
+    return jnp.moveaxis(out, 3, 1).reshape(B, S, H * hd).astype(q.dtype)
+
+
+def causal_mask(S: int, T: int, offset: int = 0, window: Optional[int] = None):
+    """(S, T) boolean mask; query i attends key j iff j <= i + offset
+    (and j > i + offset - window for sliding window)."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def attn_apply(
+    p,
+    cfg: ModelConfig,
+    x,
+    positions,
+    *,
+    cache=None,
+    cache_index=None,
+    kv_src=None,
+    cross: bool = False,
+    causal: bool = True,
+):
+    """General attention.
+
+    cache=None            -> full self-attention over x (train/prefill).
+    cache given           -> decode: x is (B,1,D); write kv at cache_index.
+    cross=True            -> cross-attention onto kv_src (B,T,D) (no rope);
+                             at decode kv_src may be None (kv read from cache).
+    Returns (out, new_cache).
+    """
+    cross = cross or kv_src is not None
+    if cfg.mla and not cross:
+        return _mla_apply(p, cfg, x, positions, cache=cache, cache_index=cache_index)
+
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_src is None else kv_src
+    q = x @ p["w_q"]
+    if "b_q" in p:
+        q = q + p["b_q"]
+    q = q.reshape(B, S, H, hd)
+    scale = hd**-0.5
+
+    fresh_kv = not (cross and cache is not None)
+    if not fresh_kv:
+        # cross-attention decode: kv precomputed in cache at prefill time
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        k = src @ p["w_k"]
+        v = src @ p["w_v"]
+        if "b_k" in p:
+            k, v = k + p["b_k"], v + p["b_v"]
+        T0 = src.shape[1]
+        k = k.reshape(B, T0, Hkv, hd)
+        v = v.reshape(B, T0, Hkv, hd)
+        new_cache = None
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if fresh_kv:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if not cross:  # self-attention: rope
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None and not cross:
+        # decode: write new kv into the cache (ring-buffered for SWA)
+        T = cache["k"].shape[1]
+        if cfg.sliding_window is not None:
+            slot = cache_index % T
+        else:
+            slot = cache_index
+        k_all = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": k_all, "v": v_all}
+        scores = _gqa_scores(q, k_all) * scale  # (B,Hkv,G,1,T)
+        if cfg.sliding_window is not None:
+            # ring buffer: slots [0, min(index+1, T)) are valid
+            valid = jnp.arange(T) < jnp.minimum(cache_index + 1, T)
+        else:
+            valid = jnp.arange(T) <= cache_index
+        mask = valid[None, None, None, None, :]
+        w = _softmax_masked(scores, mask)
+        out = _gqa_combine(w, v_all)
+        return out @ p["w_o"], new_cache
+
+    T = k.shape[1]
+    if cache is None and fresh_kv:
+        # full pass: expose the (roped) kv — prefill collects it into the
+        # decode cache; train paths simply drop it
+        new_cache = {"k": k, "v": v}
+    if (cfg.attn_impl == "pallas_swa" and cfg.sliding_window and not cross
+            and cache is None and S % 128 == 0 and cfg.sliding_window % 128 == 0):
+        # Pallas sliding-window flash kernel (kernels/swa_attention.py)
+        from repro.kernels import ops as kops
+
+        G = H // Hkv
+        km = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        vm = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        qm = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        o = kops.swa_attention(qm, km, vm, cfg.sliding_window)
+        out = o.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+        return out @ p["w_o"], new_cache
+    if cfg.attn_impl == "chunked" and T % min(cfg.attn_chunk, T) == 0:
+        out = _chunked_gqa_attention(
+            q, k, v, scale,
+            causal=causal and not cross,
+            window=cfg.sliding_window if not cross else None,
+            chunk=cfg.attn_chunk,
+            unroll=cfg.scan_unroll,
+        )
+        return out @ p["w_o"], new_cache
+    scores = _gqa_scores(q, k) * scale
+    if cross:
+        mask = jnp.ones((S, T), bool)
+    else:
+        mask = causal_mask(S, T, window=cfg.sliding_window) if causal else jnp.ones((S, T), bool)
+    w = _softmax_masked(scores, mask[None, None, None])
+    out = _gqa_combine(w, v)
+    return out @ p["w_o"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
+    xq = x
+    if cfg.q_lora_rank:
+        xq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = (xq @ p["w_q"]).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = x @ p["w_dkv"]
+    ckv = rms_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora_rank :][:, :, None, :]  # (B,S,1,rd)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_apply(p, cfg: ModelConfig, x, positions, *, cache=None, cache_index=None):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, positions)
+
+    if cache is None:
+        if cfg.attn_impl == "chunked" and S % min(cfg.attn_chunk, S) == 0:
+            # flash-style over latent-cache chunks with W_uk/W_uv absorption:
+            # never materializes (B,H,S,S) scores nor per-head k/v
+            C = min(cfg.attn_chunk, S)
+            nc = S // C
+            q_eff = jnp.einsum("bshd,hcd->bshc", q_nope, p["w_uk"])
+            ckv_s = jnp.moveaxis(ckv.reshape(B, nc, C, -1), 1, 0)
+            kr_s = jnp.moveaxis(k_rope.reshape(B, nc, C, -1), 1, 0)
+            q_pos = jnp.arange(S)
+            cdim = ckv.shape[-1]
+
+            def body(carry, inp):
+                m, l, acc = carry
+                kc, rc, j = inp
+                s = (
+                    jnp.einsum("bshc,btc->bhst", q_eff, kc,
+                               preferred_element_type=jnp.float32)
+                    + jnp.einsum("bshd,btd->bhst", q_rope, rc,
+                                 preferred_element_type=jnp.float32)
+                ) * scale
+                k_pos = j * C + jnp.arange(C)
+                mask = k_pos[None, :] <= q_pos[:, None]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+                pv = jnp.exp(s - m_new)
+                alpha = jnp.exp(m - m_new)
+                l2 = l * alpha + pv.sum(-1, keepdims=True)
+                # acc layout (B,H,S,c): rescale by alpha (B,H,S,1)
+                acc2 = acc * alpha + jnp.einsum(
+                    "bhst,btc->bhsc", pv.astype(kc.dtype), kc
+                ).astype(jnp.float32)
+                return (m_new, l2, acc2), None
+
+            m0 = jnp.full((B, H, S, 1), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, H, S, 1), jnp.float32)
+            a0 = jnp.zeros((B, H, S, cdim), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0), (ckv_s, kr_s, jnp.arange(nc)),
+                unroll=True if cfg.scan_unroll else 1,
+            )
+            o_lat = (acc / jnp.maximum(l, 1e-30)).astype(ckv.dtype)  # (B,H,S,c)
+            o = jnp.einsum("bhsc,hcd->bshd", o_lat, p["w_uv"])
+            out = o.reshape(B, S, H * cfg.v_head_dim) @ p["w_o"]
+            return out, {"ckv": ckv, "krope": k_rope}
+        # train / prefill: materialize per-head k/v from the latent
+        k_nope = jnp.einsum("btc,hcd->bthd", ckv, p["w_uk"])
+        v = jnp.einsum("btc,hcd->bthd", ckv, p["w_uv"])
+        scores = (
+            jnp.einsum("bshd,bthd->bhst", q_nope, k_nope, preferred_element_type=jnp.float32)
+            + jnp.einsum("bshd,btd->bhst", q_rope, k_rope, preferred_element_type=jnp.float32)
+        ) * scale
+        mask = causal_mask(S, S)
+        w = _softmax_masked(scores, mask[None, None])
+        o = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v)
+        out = o.reshape(B, S, H * cfg.v_head_dim) @ p["w_o"]
+        return out, {"ckv": ckv, "krope": k_rope}
+
+    # decode with matrix absorption: attend directly over the latent cache.
+    T = cache["ckv"].shape[1]
+    ckv_all = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, cache_index, 0))
+    krope_all = jax.lax.dynamic_update_slice(cache["krope"], k_rope, (0, cache_index, 0))
+    new_cache = {"ckv": ckv_all, "krope": krope_all}
+    # absorb W_uk into q:  q_eff (B,1,H,c)
+    q_eff = jnp.einsum("bshd,hcd->bshc", q_nope, p["w_uk"])
+    scores = (
+        jnp.einsum("bshc,btc->bhst", q_eff, ckv_all, preferred_element_type=jnp.float32)
+        + jnp.einsum("bshd,btd->bhst", q_rope, krope_all, preferred_element_type=jnp.float32)
+    ) * scale
+    mask = (jnp.arange(T) <= cache_index)[None, None, None, :]
+    w = _softmax_masked(scores, mask)
+    o_lat = jnp.einsum("bhst,btc->bshc", w.astype(ckv_all.dtype), ckv_all)  # (B,1,H,c)
+    o = jnp.einsum("bshc,hcd->bshd", o_lat, p["w_uv"])
+    out = o.reshape(B, S, H * cfg.v_head_dim) @ p["w_o"]
+    return out, new_cache

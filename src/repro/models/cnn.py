@@ -1,0 +1,57 @@
+"""GN-LeNet CNN — the paper's own CIFAR-10 workload for the faithful
+reproduction experiments (D-PSGD, Fig. 3–6 style runs).
+
+Small conv net with GroupNorm (BatchNorm is unusable in DL since each node
+sees a non-IID slice; the DecentralizePy experiments use GN-style nets too).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def group_norm(x, gamma, beta, groups: int = 8, eps: float = 1e-5):
+    B, H, W, C = x.shape
+    xg = x.reshape(B, H, W, groups, C // groups).astype(jnp.float32)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, H, W, C) * gamma + beta).astype(x.dtype)
+
+
+def conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def cnn_init(key, num_classes: int = 10, channels: int = 3, width: int = 32, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    c1, c2 = width, 2 * width
+    return {
+        "conv1": {"w": dense_init(ks[0], (5, 5, channels, c1), dtype, scale=(25 * channels) ** -0.5),
+                  "b": jnp.zeros((c1,), dtype), "g": jnp.ones((c1,), dtype), "be": jnp.zeros((c1,), dtype)},
+        "conv2": {"w": dense_init(ks[1], (5, 5, c1, c2), dtype, scale=(25 * c1) ** -0.5),
+                  "b": jnp.zeros((c2,), dtype), "g": jnp.ones((c2,), dtype), "be": jnp.zeros((c2,), dtype)},
+        "fc1": {"w": dense_init(ks[2], (c2 * 8 * 8, 128), dtype), "b": jnp.zeros((128,), dtype)},
+        "fc2": {"w": dense_init(ks[3], (128, num_classes), dtype), "b": jnp.zeros((num_classes,), dtype)},
+    }
+
+
+def cnn_apply(params, images):
+    """images: (B, 32, 32, C) -> logits (B, num_classes)."""
+    x = images
+    x = conv(x, params["conv1"]["w"], params["conv1"]["b"])
+    x = group_norm(x, params["conv1"]["g"], params["conv1"]["be"])
+    x = jax.nn.relu(x)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = conv(x, params["conv2"]["w"], params["conv2"]["b"])
+    x = group_norm(x, params["conv2"]["g"], params["conv2"]["be"])
+    x = jax.nn.relu(x)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]

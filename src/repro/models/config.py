@@ -1,0 +1,108 @@
+"""Model configuration.
+
+One dataclass covers all six architecture families in the assigned pool
+(dense / MoE / SSM / hybrid / audio enc-dec / VLM).  Family-specific fields
+are ignored by families that do not use them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | encdec | vlm
+    # -- core transformer dims ------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1024
+    # -- attention options ----------------------------------------------------
+    qk_norm: bool = False          # qwen3
+    qkv_bias: bool = False         # qwen2
+    attn_impl: str = "naive"       # naive | chunked (flash-style, O(S·C) HBM)
+    #                                | pallas_swa (Pallas sliding-window kernel;
+    #                                  requires sliding_window set)
+    attn_chunk: int = 512          # kv-chunk for attn_impl='chunked'
+    ssm_impl: str = "jnp"          # jnp | pallas (kernels/ssd_chunk intra-chunk)
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None  # sub-quadratic dense variant
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+    # -- MLA (deepseek-v2) ----------------------------------------------------
+    mla: bool = False
+    kv_lora_rank: int = 512
+    q_lora_rank: Optional[int] = None
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # -- MoE --------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 1
+    d_expert: Optional[int] = None  # expert FFN hidden size (default d_ff)
+    moe_every: int = 1              # MoE layer every k-th layer (llama4: 2)
+    first_dense: int = 0            # leading dense layers (deepseek: 1)
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # -- SSM (mamba2 SSD) ------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    # -- hybrid (zamba2) ---------------------------------------------------
+    attn_every: int = 0  # shared attention block applied every k SSM layers
+    # -- enc-dec (whisper) -------------------------------------------------
+    n_enc_layers: int = 0
+    enc_seq: int = 0          # fixed encoder sequence (1500 for whisper)
+    # -- embeddings / misc -------------------------------------------------
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "float32"          # compute/param dtype ("bfloat16" on TPU)
+    remat: bool = False             # activation checkpointing of blocks
+    remat_policy: str = "full"      # full | save_comm (save post-all-reduce
+                                    # activations: remat recompute skips the
+                                    # TP collectives, 1/3 fewer ARs)
+    scan_unroll: bool = False       # unroll layer scans (dry-run: XLA's
+                                    # cost_analysis counts a while body once,
+                                    # so roofline runs must unroll)
+    # -- frontend stubs -----------------------------------------------------
+    stub_frontend: bool = False     # audio / vlm: inputs are embeddings
+
+    # ----------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_inner(self) -> int:  # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self) -> None:
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA group size"
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm_state > 0 and self.d_inner % self.ssm_headdim == 0
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.moe_top_k >= 1
+        if self.family == "encdec":
+            assert self.n_enc_layers > 0 and self.enc_seq > 0
+        if self.mrope_sections is not None:
+            assert sum(self.mrope_sections) == self.hd // 2, "M-RoPE sections cover half head_dim"

@@ -1,0 +1,146 @@
+"""Whisper-style encoder-decoder backbone. [arXiv:2212.04356]
+
+The mel-spectrogram + conv frontend is a STUB per spec: inputs are
+precomputed frame embeddings (B, enc_seq, D).  Everything downstream — the
+encoder self-attention stack, the decoder with cross-attention, and the
+cross/self KV caches — is fully implemented.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_cache_init, attn_init
+from repro.models.common import dense_init, embed_init, mlp_apply, mlp_init, rms_norm
+from repro.models.config import ModelConfig
+from repro.models.transformer import lm_head, stacked_init
+
+
+def enc_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "attn": attn_init(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.jdtype),
+    }
+
+
+def dec_block_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "attn": attn_init(k1, cfg),
+        "lnx": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "xattn": attn_init(k2, cfg, cross=True),
+        "ln2": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.jdtype),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig):
+    ke, kd, kt, kh, kp = jax.random.split(key, 5)
+    p = {
+        "embed": embed_init(kt, (cfg.vocab, cfg.d_model), cfg.jdtype),
+        "enc_pos": embed_init(kp, (cfg.enc_seq, cfg.d_model), cfg.jdtype),
+        "enc_layers": stacked_init(lambda k: enc_block_init(k, cfg), ke, cfg.n_enc_layers),
+        "enc_norm": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "dec_layers": stacked_init(lambda k: dec_block_init(k, cfg), kd, cfg.n_layers),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.jdtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab), cfg.jdtype)
+    return p
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: stub frontend embeddings (B, enc_seq, D)."""
+    x = frames + params["enc_pos"][None]
+    positions = jnp.arange(frames.shape[1])[None]
+
+    def blk(h, p):
+        a, _ = attn_apply(p["attn"], cfg, rms_norm(h, p["ln1"], cfg.norm_eps), positions, causal=False)
+        h = h + a
+        return h + mlp_apply(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps)), None
+
+    x, _ = jax.lax.scan(blk, x, params["enc_layers"], unroll=True if cfg.scan_unroll else 1)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(p, cfg, h, positions, enc_out, self_cache=None, cross_cache=None, index=None):
+    a, new_self = attn_apply(
+        p["attn"], cfg, rms_norm(h, p["ln1"], cfg.norm_eps), positions,
+        cache=self_cache, cache_index=index,
+    )
+    h = h + a
+    xa, new_cross = attn_apply(
+        p["xattn"], cfg, rms_norm(h, p["lnx"], cfg.norm_eps), positions,
+        kv_src=enc_out, cache=cross_cache, cross=True,
+    )
+    h = h + xa
+    return h + mlp_apply(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps)), new_self, new_cross
+
+
+def decode_train(params, cfg: ModelConfig, frames, tokens):
+    """Teacher-forced decoder pass -> logits (B, S, V)."""
+    enc_out = encode(params, cfg, frames)
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])[None]
+
+    def blk(h, p):
+        y, _, _ = _dec_block(p, cfg, h, positions, enc_out)
+        return y, None
+
+    x, _ = jax.lax.scan(blk, x, params["dec_layers"], unroll=True if cfg.scan_unroll else 1)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_head(params, cfg, h)
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def encdec_cache_init(params, cfg: ModelConfig, frames, batch: int, max_len: int):
+    """Self-attn cache + precomputed cross-attn KV per decoder layer."""
+    enc_out = encode(params, cfg, frames)
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def xkv(p):
+        k = (enc_out @ p["xattn"]["w_k"]).reshape(batch, -1, Hkv, hd)
+        v = (enc_out @ p["xattn"]["w_v"]).reshape(batch, -1, Hkv, hd)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(xkv)(params["dec_layers"])
+    return {
+        "self": attn_cache_init(cfg, batch, max_len, layers=cfg.n_layers),
+        "cross": cross,
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct-compatible zero cache (for dry-run input_specs)."""
+    Hkv, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    return {
+        "self": attn_cache_init(cfg, batch, max_len, layers=L),
+        "cross": {
+            "k": jnp.zeros((L, batch, cfg.enc_seq, Hkv, hd), cfg.jdtype),
+            "v": jnp.zeros((L, batch, cfg.enc_seq, Hkv, hd), cfg.jdtype),
+        },
+    }
+
+
+def encdec_decode(params, cfg: ModelConfig, cache, x, index):
+    """x: (B,1,D) embedded token -> (h, new_cache)."""
+    positions = jnp.broadcast_to(index, (x.shape[0], 1))
+
+    def blk(h, xs):
+        p, sc, cc = xs
+        y, new_self, _ = _dec_block(
+            p, cfg, h, positions, None, self_cache=sc, cross_cache=cc, index=index
+        )
+        return y, new_self
+
+    x, new_self = jax.lax.scan(blk, x, (params["dec_layers"], cache["self"], cache["cross"]),
+                               unroll=True if cfg.scan_unroll else 1)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return h, {"self": new_self, "cross": cache["cross"]}

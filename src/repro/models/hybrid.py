@@ -1,0 +1,138 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``attn_every`` SSM layers. [arXiv:2411.15242]
+
+The shared block's weights are reused at every application (Zamba's
+parameter-sharing trick); only its KV cache is per-application.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_cache_init
+from repro.models.common import embed_init, dense_init, rms_norm
+from repro.models.config import ModelConfig
+from repro.models.ssm import ssm_apply, ssm_cache_init, ssm_decode_step, ssm_init
+from repro.models.transformer import block_apply, block_init, stacked_init
+
+
+def _plan(cfg: ModelConfig):
+    if cfg.attn_every <= 0:
+        return 0, 0, cfg.n_layers
+    n_seg = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - n_seg * cfg.attn_every
+    return n_seg, cfg.attn_every, tail
+
+
+def mamba_block_init(key, cfg: ModelConfig):
+    return {"ln": jnp.ones((cfg.d_model,), cfg.jdtype), "ssm": ssm_init(key, cfg)}
+
+
+def hybrid_init(key, cfg: ModelConfig):
+    n_seg, per, tail = _plan(cfg)
+    ke, kh, ks, kt, ka = jax.random.split(key, 5)
+    params = {
+        "embed": embed_init(ke, (cfg.vocab, cfg.d_model), cfg.jdtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.jdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab), cfg.jdtype)
+    if n_seg:
+        params["mamba_seg"] = stacked_init(
+            lambda k: stacked_init(lambda kk: mamba_block_init(kk, cfg), k, per), ks, n_seg
+        )
+        params["shared_attn"] = block_init(ka, cfg, moe=False)
+    if tail:
+        params["mamba_tail"] = stacked_init(lambda k: mamba_block_init(k, cfg), kt, tail)
+    return params
+
+
+def _mamba_blk(p, cfg, x):
+    return x + ssm_apply(p["ssm"], cfg, rms_norm(x, p["ln"], cfg.norm_eps))
+
+
+def hybrid_apply(params, cfg: ModelConfig, x, positions):
+    n_seg, per, tail = _plan(cfg)
+
+    mblk = _mamba_blk
+    if cfg.remat:
+        mblk = jax.checkpoint(_mamba_blk, static_argnums=(1,))
+
+    u = True if cfg.scan_unroll else 1
+    if n_seg:
+
+        def seg_body(h, seg_params):
+            def inner(hh, lp):
+                return mblk(lp, cfg, hh), None
+
+            h, _ = jax.lax.scan(inner, h, seg_params, unroll=u)
+            h, _, _ = block_apply(params["shared_attn"], cfg, h, positions)
+            return h, None
+
+        x, _ = jax.lax.scan(seg_body, x, params["mamba_seg"], unroll=u)
+    if tail:
+        def inner(hh, lp):
+            return mblk(lp, cfg, hh), None
+
+        x, _ = jax.lax.scan(inner, x, params["mamba_tail"], unroll=u)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def hybrid_cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    n_seg, per, tail = _plan(cfg)
+    cache = {}
+    if n_seg:
+        seg = ssm_cache_init(cfg, batch, layers=n_seg * per)
+        cache["mamba_seg"] = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_seg, per, *a.shape[1:]), seg
+        )
+        cache["shared_attn"] = attn_cache_init(cfg, batch, max_len, layers=n_seg)
+    if tail:
+        cache["mamba_tail"] = ssm_cache_init(cfg, batch, layers=tail)
+    return cache
+
+
+def hybrid_decode(params, cfg: ModelConfig, cache, x, index):
+    n_seg, per, tail = _plan(cfg)
+    u = True if cfg.scan_unroll else 1
+    positions = jnp.broadcast_to(index, (x.shape[0], 1))
+    new_cache = {}
+
+    def mdec(lp, h, c):
+        y, nc = ssm_decode_step(lp["ssm"], cfg, rms_norm(h, lp["ln"], cfg.norm_eps), c)
+        return h + y, nc
+
+    if n_seg:
+
+        def seg_body(h, xs):
+            seg_params, seg_cache, attn_c = xs
+
+            def inner(hh, ixs):
+                lp, c = ixs
+                y, nc = mdec(lp, hh, c)
+                return y, nc
+
+            h, new_m = jax.lax.scan(inner, h, (seg_params, seg_cache), unroll=u)
+            h, _, new_a = block_apply(
+                params["shared_attn"], cfg, h, positions, cache=attn_c, cache_index=index
+            )
+            return h, (new_m, new_a)
+
+        x, (nm, na) = jax.lax.scan(
+            seg_body, x, (params["mamba_seg"], cache["mamba_seg"], cache["shared_attn"]),
+            unroll=u,
+        )
+        new_cache["mamba_seg"], new_cache["shared_attn"] = nm, na
+    if tail:
+
+        def inner(hh, ixs):
+            lp, c = ixs
+            return mdec(lp, hh, c)
+
+        x, nt = jax.lax.scan(inner, x, (params["mamba_tail"], cache["mamba_tail"]), unroll=u)
+        new_cache["mamba_tail"] = nt
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), new_cache

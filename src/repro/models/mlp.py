@@ -1,0 +1,26 @@
+"""Small MLP classifier — used for the 256/1024-node scalability study
+(paper Fig. 6), where the CNN would make CPU emulation of 1024 vmapped
+nodes needlessly slow.  Same API shape as cnn.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def mlp_init(key, in_dim: int = 32 * 32 * 3, hidden: int = 128, num_classes: int = 10,
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "fc1": {"w": dense_init(k1, (in_dim, hidden), dtype), "b": jnp.zeros((hidden,), dtype)},
+        "fc2": {"w": dense_init(k2, (hidden, hidden), dtype), "b": jnp.zeros((hidden,), dtype)},
+        "fc3": {"w": dense_init(k3, (hidden, num_classes), dtype), "b": jnp.zeros((num_classes,), dtype)},
+    }
+
+
+def mlp_apply(params, images):
+    x = images.reshape(images.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts layer: token-choice top-k router, capacity-based
+sort/gather dispatch (no O(T·E·C) one-hots), shared experts, aux
+load-balance loss.
+
+Expert weights are stacked on a leading E axis -> expert-parallel sharding
+P('model', ...) on the TPU mesh; the gather/scatter around the expert
+matmuls lowers to all-to-all style collectives under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, dff, E, dt = cfg.d_model, cfg.d_expert or cfg.d_ff, cfg.n_experts, cfg.jdtype
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dt, scale=d**-0.5),
+        "w_gate": dense_init(ks[1], (E, d, dff), dt),
+        "w_up": dense_init(ks[2], (E, d, dff), dt),
+        "w_down": dense_init(ks[3], (E, dff, d), dt),
+    }
+    if cfg.n_shared_experts:
+        ds = dff * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, (d, ds), dt),
+            "w_up": dense_init(k2, (d, ds), dt),
+            "w_down": dense_init(k3, (ds, d), dt),
+        }
+    return p
+
+
+def _capacity(T: int, top_k: int, E: int, factor: float) -> int:
+    c = int(T * top_k / E * factor)
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    C = _capacity(T, k, E, cfg.capacity_factor)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux load-balance loss (Switch-style) -----------------------------
+    me = probs.mean(axis=0)  # (E,) mean router prob
+    ce = jnp.zeros((E,)).at[expert_idx.reshape(-1)].add(1.0) / (T * k)  # frac tokens
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # --- capacity dispatch via stable sort --------------------------------
+    flat_e = expert_idx.reshape(-1)                       # (T*k,) expert ids
+    flat_t = jnp.repeat(jnp.arange(T), k)                 # (T*k,) token ids
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)              # group by expert
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # position of each entry within its expert group
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * k) - starts[se]
+    keep = pos_in_e < C
+    # dropped entries scatter to index E*C which mode='drop' discards
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)
+
+    # token index per (expert, slot); sentinel T = padded zero row
+    dispatch_tok = jnp.full((E * C,), T, jnp.int32).at[slot].set(st.astype(jnp.int32), mode="drop")
+    gate_per_slot = jnp.zeros((E * C,), jnp.float32).at[slot].set(sg, mode="drop")
+
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)
+    xg = x_pad[dispatch_tok].reshape(E, C, D)
+
+    # --- expert FFN (einsum over stacked experts; E is sharded) -----------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xg, p["w_up"]
+    )
+    yo = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, D)
+
+    # --- combine: scatter-add back to tokens ------------------------------
+    yw = yo * gate_per_slot[:, None].astype(yo.dtype)
+    out = jnp.zeros((T + 1, D), yo.dtype).at[dispatch_tok].add(yw)[:T]
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_up"])
+        out = out + hs @ sp["w_down"]
+    return out.reshape(B, S, D), aux

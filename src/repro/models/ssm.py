@@ -1,0 +1,168 @@
+"""Mamba2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Chunked SSD form: intra-chunk attention-like matmuls (MXU-friendly) plus an
+inter-chunk state recurrence via ``lax.scan``.  Decode keeps a constant-size
+recurrent state -> O(1) per token, which is what makes ``long_500k`` viable.
+
+Layout: n_groups = 1 (B/C shared across SSD heads).
+x (B,S,d_model); inner (B,S,H,P) with H = d_inner/headdim, P = headdim,
+N = ssm_state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+from repro.models.config import ModelConfig
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d, di, N, H, dt = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.jdtype
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_ch), dt, scale=cfg.ssm_conv**-0.5),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -3.0, jnp.float32),  # softplus^-1-ish small dt
+        "gate_norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[2], (di, d), dt),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, width W via shifted adds. xbc: (B,S,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _split_zxbcdt(p, cfg: ModelConfig, x):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xbc, dt
+
+
+def ssm_apply(p, cfg: ModelConfig, x):
+    """Full-sequence chunked SSD. x: (B,S,D) -> (B,S,D)."""
+    B, S, _ = x.shape
+    di, N, H, P, Lc = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_chunk
+    assert S % Lc == 0, f"seq {S} not divisible by chunk {Lc}"
+    nc = S // Lc
+
+    z, xbc, dtr = _split_zxbcdt(p, cfg, x)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(B, S, H, P)
+    Bm = xbc[..., di : di + N]  # (B,S,N)
+    Cm = xbc[..., di + N :]     # (B,S,N)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    dA = dt * A  # (B,S,H)
+
+    # chunk
+    c = lambda t, tail: t.reshape(B, nc, Lc, *tail)
+    xs_c, B_c, C_c = c(xs, (H, P)), c(Bm, (N,)), c(Cm, (N,))
+    dt_c, dA_c = c(dt, (H,)), c(dA, (H,))
+    cum = jnp.cumsum(dA_c, axis=2)  # (B,nc,Lc,H)
+
+    xdt = xs_c.astype(jnp.float32) * dt_c[..., None]  # (B,nc,Lc,H,P)
+    if cfg.ssm_impl == "pallas":
+        # Pallas intra-chunk kernel (kernels/ssd_chunk.py): MXU matmuls with
+        # the decay matrix built in VMEM
+        from repro.kernels import ops as kops
+
+        g = lambda t: t.reshape(B * nc, *t.shape[2:])
+        y_intra, state_contrib, chunk_decay = kops.ssd_chunk(
+            g(xdt), g(B_c.astype(jnp.float32)), g(C_c.astype(jnp.float32)), g(cum)
+        )
+        y_intra = y_intra.reshape(B, nc, Lc, H, P)
+        state_contrib = state_contrib.reshape(B, nc, H, N, P)
+        chunk_decay = chunk_decay.reshape(B, nc, H)
+    else:
+        # intra-chunk: decay matrix L[i,j] = exp(cum_i - cum_j), j <= i
+        diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Lc,Lc,H)
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)  # fp32
+        cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c, preferred_element_type=jnp.float32)
+        scores = cb[..., None] * L  # (B,nc,Lc,Lc,H)
+        y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xdt)
+
+        # chunk boundary states: S_chunk = sum_j exp(cum_last-cum_j) dt_j B_j x_j
+        decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Lc,H)
+        state_contrib = jnp.einsum(
+            "bcjn,bcjhp->bchnp", B_c.astype(jnp.float32), xdt * decay_to_end[..., None]
+        )  # (B,nc,H,N,P)
+        chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) total decay per chunk
+
+    def scan_fn(h_prev, inp):
+        s_c, dec = inp  # (B,H,N,P), (B,H)
+        h = h_prev * dec[..., None, None] + s_c
+        return h, h_prev
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_before = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(state_contrib, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    h_before = jnp.moveaxis(h_before, 0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    # inter-chunk: y_i += C_i · h_before * exp(cum_i)
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", C_c.astype(jnp.float32), h_before) * jnp.exp(
+        cum
+    )[..., None]
+
+    y = (y_intra + y_inter).reshape(B, S, H, P) + p["D"][None, None, :, None] * xs.astype(
+        jnp.float32
+    )
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, layers=None):
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    conv_ch = di + 2 * N
+    shp_c = (batch, cfg.ssm_conv - 1, conv_ch)
+    shp_s = (batch, H, N, P)
+    if layers is not None:
+        shp_c, shp_s = (layers, *shp_c), (layers, *shp_s)
+    return {"conv": jnp.zeros(shp_c, cfg.jdtype), "state": jnp.zeros(shp_s, jnp.float32)}
+
+
+def ssm_decode_step(p, cfg: ModelConfig, x, cache):
+    """x: (B,1,D); cache {'conv': (B,W-1,C), 'state': (B,H,N,P)} -> (y, cache)."""
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    z, xbc, dtr = _split_zxbcdt(p, cfg, x)  # (B,1,*)
+    # conv ring: history + current
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,W,C)
+    w = p["conv_w"]
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"])[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    xs = conv_out[..., :di].reshape(B, H, P)
+    Bm = conv_out[:, 0, di : di + N]  # (B,N)
+    Cm = conv_out[:, 0, di + N :]
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    dA = jnp.exp(dt * -jnp.exp(p["A_log"]))  # (B,H)
+
+    h = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bm.astype(jnp.float32), xs.astype(jnp.float32) * dt[..., None]
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h) + p["D"][None, :, None] * xs.astype(
+        jnp.float32
+    )
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": new_conv, "state": h}

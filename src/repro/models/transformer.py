@@ -1,0 +1,270 @@
+"""Decoder-only transformer assembly (dense / MoE / VLM backbones).
+
+Layers are *stacked* on a leading L axis and applied with ``lax.scan`` —
+essential to keep compile times sane for the 60–88-layer dry-run configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_cache_init, attn_init
+from repro.models.common import dense_init, embed_init, mlp_apply, mlp_init, rms_norm
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_apply, moe_init
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, moe: bool = False):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "attn": attn_init(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.jdtype),
+    }
+    if moe:
+        p["moe"] = moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.jdtype)
+    return p
+
+
+def block_apply(p, cfg: ModelConfig, x, positions, cache=None, cache_index=None):
+    """Pre-norm block. Returns (x, aux_loss, new_attn_cache)."""
+    h, new_cache = attn_apply(
+        p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+        cache=cache, cache_index=cache_index,
+    )
+    if cfg.remat_policy == "save_comm":
+        # the attention/MLP outputs sit just after the TP all-reduce; saving
+        # them means the remat recompute never re-issues those collectives
+        h = jax.ad_checkpoint.checkpoint_name(h, "attn_out")
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        m, aux = moe_apply(p["moe"], cfg, h2)
+    else:
+        m = mlp_apply(p["mlp"], h2)
+    if cfg.remat_policy == "save_comm":
+        m = jax.ad_checkpoint.checkpoint_name(m, "mlp_out")
+    return x + m, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# layer stacking helpers
+# ---------------------------------------------------------------------------
+
+def stacked_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _layer_plan(cfg: ModelConfig):
+    """(n_prefix_dense, n_groups, dense_per_group) — see config.moe_every."""
+    if cfg.family not in ("moe",):
+        return cfg.n_layers, 0, 0
+    rest = cfg.n_layers - cfg.first_dense
+    assert rest % cfg.moe_every == 0
+    return cfg.first_dense, rest // cfg.moe_every, cfg.moe_every - 1
+
+
+def transformer_init(key, cfg: ModelConfig):
+    kp, kg, ke, kh, kf = jax.random.split(key, 5)
+    n_pre, n_grp, dpg = _layer_plan(cfg)
+    params = {
+        "final_norm": jnp.ones((cfg.d_model,), cfg.jdtype),
+    }
+    if not cfg.stub_frontend:
+        params["embed"] = embed_init(ke, (cfg.vocab, cfg.d_model), cfg.jdtype)
+    else:
+        # VLM backbone: stub frontend supplies embeddings, but the LM still
+        # embeds text tokens; keep the table (used by examples) — inputs may
+        # bypass it with precomputed embeddings.
+        params["embed"] = embed_init(ke, (cfg.vocab, cfg.d_model), cfg.jdtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab), cfg.jdtype)
+    if n_pre:
+        params["dense_layers"] = stacked_init(lambda k: block_init(k, cfg, moe=False), kp, n_pre)
+    if n_grp:
+        if dpg:
+            params["group_dense"] = stacked_init(
+                lambda k: stacked_init(lambda kk: block_init(kk, cfg, moe=False), k, dpg), kg, n_grp
+            )
+        params["group_moe"] = stacked_init(lambda k: block_init(k, cfg, moe=True), kf, n_grp)
+    return params
+
+
+def _scan_stack(fn, stacked, x, extra_xs=None, unroll: bool = False):
+    """Scan ``fn(layer_params, x[, extra]) -> (x, aux[, ys])`` over layer axis."""
+
+    def body(carry, xs):
+        x, aux = carry
+        if extra_xs is None:
+            lp = xs
+            y, a, ys = fn(lp, x)
+        else:
+            lp, ex = xs
+            y, a, ys = fn(lp, x, ex)
+        return (y, aux + a), ys
+
+    xs = stacked if extra_xs is None else (stacked, extra_xs)
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
+                                unroll=True if unroll else 1)
+    return x, aux, ys
+
+
+def transformer_apply(params, cfg: ModelConfig, x, positions):
+    """x: (B,S,D) embedded input -> (hidden (B,S,D), aux)."""
+    n_pre, n_grp, dpg = _layer_plan(cfg)
+
+    def blk(p, h):
+        y, a, _ = block_apply(p, cfg, h, positions)
+        return y, a, None
+
+    if cfg.remat:
+        if cfg.remat_policy == "save_comm":
+            blk = jax.checkpoint(
+                blk,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "attn_out", "mlp_out"
+                ),
+            )
+        else:
+            blk = jax.checkpoint(blk)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    u = cfg.scan_unroll
+    if n_pre:
+        x, aux, _ = _scan_stack(blk, params["dense_layers"], x, unroll=u)
+        aux_total += aux
+    if n_grp:
+
+        def group(gp, h):
+            a_tot = jnp.zeros((), jnp.float32)
+            if dpg:
+                h, a, _ = _scan_stack(blk, gp["group_dense"], h, unroll=u)
+                a_tot += a
+            h, a, _ = blk(gp["group_moe"], h)
+            return h, a_tot + a, None
+
+        gparams = {"group_moe": params["group_moe"]}
+        if dpg:
+            gparams["group_dense"] = params["group_dense"]
+        x, aux, _ = _scan_stack(group, gparams, x, unroll=u)
+        aux_total += aux
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux_total
+
+
+def lm_head(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T
+    return h @ params["lm_head"]
+
+
+def transformer_prefill(params, cfg: ModelConfig, x, positions, max_len: int):
+    """Full pass that also RETURNS the populated KV cache (real serving
+    prefill, not just logits).  x: (B,S,D); cache padded to max_len.
+    Returns (hidden (B,S,D), cache)."""
+    n_pre, n_grp, dpg = _layer_plan(cfg)
+    S = x.shape[1]
+    eff_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    assert S <= eff_len, (S, eff_len)
+
+    def blk(p, h):
+        return block_apply(p, cfg, h, positions)
+
+    u = cfg.scan_unroll
+    cache = {}
+    if n_pre:
+        x, _, cache["dense_layers"] = _scan_stack(blk, params["dense_layers"], x, unroll=u)
+    if n_grp:
+
+        def group(gp, h):
+            ys = {}
+            a_tot = jnp.zeros((), jnp.float32)
+            if dpg:
+                h, a, ys["group_dense"] = _scan_stack(blk, gp["group_dense"], h, unroll=u)
+                a_tot += a
+            h, a, ys["group_moe"] = blk(gp["group_moe"], h)
+            return h, a_tot + a, ys
+
+        gparams = {"group_moe": params["group_moe"]}
+        if dpg:
+            gparams["group_dense"] = params["group_dense"]
+        x, _, ys = _scan_stack(group, gparams, x, unroll=u)
+        cache.update(ys)
+
+    def pad(path, a):
+        # time axis: -3 for k/v (.., S, Hkv, hd); -2 for MLA latents (.., S, c)
+        name = str(getattr(path[-1], "key", ""))
+        t_axis = a.ndim - 3 if name in ("k", "v") else a.ndim - 2
+        widths = [(0, 0)] * a.ndim
+        widths[t_axis] = (0, eff_len - a.shape[t_axis])
+        return jnp.pad(a, widths)
+
+    cache = jax.tree_util.tree_map_with_path(pad, cache)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def transformer_cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    n_pre, n_grp, dpg = _layer_plan(cfg)
+    cache = {}
+    if n_pre:
+        cache["dense_layers"] = attn_cache_init(cfg, batch, max_len, layers=n_pre)
+    if n_grp:
+        if dpg:
+            cache["group_dense"] = jax.tree_util.tree_map(
+                lambda a: a.reshape(n_grp, dpg, *a.shape[1:]),
+                attn_cache_init(cfg, batch, max_len, layers=n_grp * dpg),
+            )
+        cache["group_moe"] = attn_cache_init(cfg, batch, max_len, layers=n_grp)
+    return cache
+
+
+def transformer_decode(params, cfg: ModelConfig, cache, x, index):
+    """x: (B,1,D) embedded token; index: scalar position. -> (h, new_cache)."""
+    n_pre, n_grp, dpg = _layer_plan(cfg)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(index, (3, x.shape[0], 1))
+    else:
+        positions = jnp.broadcast_to(index, (x.shape[0], 1))
+
+    def blk(p, h, c):
+        y, a, nc = block_apply(p, cfg, h, positions, cache=c, cache_index=index)
+        return y, a, nc
+
+    new_cache = {}
+    u = cfg.scan_unroll
+    if n_pre:
+        x, _, new_cache["dense_layers"] = _scan_stack(
+            blk, params["dense_layers"], x, extra_xs=cache["dense_layers"], unroll=u
+        )
+    if n_grp:
+
+        def group(gp, h, gc):
+            ys = {}
+            if dpg:
+                h, _, ys["group_dense"] = _scan_stack(blk, gp["group_dense"], h,
+                                                      extra_xs=gc["group_dense"], unroll=u)
+            h, _, ys["group_moe"] = blk(gp["group_moe"], h, gc["group_moe"])
+            return h, jnp.zeros((), jnp.float32), ys
+
+        gparams = {"group_moe": params["group_moe"]}
+        gcache = {"group_moe": cache["group_moe"]}
+        if dpg:
+            gparams["group_dense"] = params["group_dense"]
+            gcache["group_dense"] = cache["group_dense"]
+        x, _, ys = _scan_stack(group, gparams, x, extra_xs=gcache, unroll=u)
+        new_cache.update(ys)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), new_cache

@@ -1,0 +1,93 @@
+"""Optimizers (pure JAX, optax-style (init, update) pairs).
+
+The paper tunes plain SGD without momentum — that is the D-PSGD default
+here; momentum/AdamW are provided for the large-model trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        buf = jax.tree_util.tree_map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: -lr * (beta * m + g), buf, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, buf)
+        return upd, buf
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": z, "nu": jax.tree_util.tree_map(jnp.copy, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return (-lr * (step + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "t": t}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    name = name.lower()
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

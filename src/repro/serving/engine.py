@@ -1,0 +1,74 @@
+"""Batched serving runtime.
+
+``make_serve_step`` builds the one-token decode function the decode-shape
+dry-runs lower (KV cache of seq_len, one new token per request).
+``ServingEngine`` drives it: batched requests, greedy/temperature sampling,
+EOS tracking — a small but real continuous-decode loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 8
+    max_len: int = 1024
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: int = 0
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, cache, tokens (B,1), index) -> (logits (B,1,V), new_cache)."""
+
+    def serve_step(params, cache, tokens, index):
+        return decode_step(params, cfg, cache, tokens, index)
+
+    return serve_step
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, sc: ServeConfig, params):
+        self.cfg, self.sc, self.params = cfg, sc, params
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def generate(self, prompts, max_new: int = 32, key=None):
+        """prompts: (B, S0) int32 (right-aligned, no padding support needed
+        for the demo engine). Returns (B, max_new) generated ids."""
+        sc = self.sc
+        B, S0 = prompts.shape
+        if self.cfg.family in ("dense", "moe", "vlm"):
+            # one-shot prefill: full pass populates the cache
+            last, cache = jax.jit(
+                lambda p, t: prefill(p, self.cfg, {"tokens": t}, sc.max_len)
+            )(self.params, prompts)
+            logits = last[:, None, :]
+        else:
+            # recurrent-state families: token-by-token prefill
+            cache = init_cache(self.cfg, B, sc.max_len)
+            for i in range(S0):
+                logits, cache = self._step(
+                    self.params, cache, prompts[:, i : i + 1], jnp.int32(i)
+                )
+        out = []
+        done = jnp.zeros((B,), bool)
+        if key is None:
+            key = jax.random.key(0)
+        for t in range(max_new):
+            if sc.temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits[:, -1] / sc.temperature)[:, None]
+            else:
+                nxt = logits[:, -1].argmax(-1)[:, None]
+            nxt = jnp.where(done[:, None], sc.eos_id, nxt).astype(jnp.int32)
+            out.append(nxt)
+            done = done | (nxt[:, 0] == sc.eos_id)
+            logits, cache = self._step(self.params, cache, nxt, jnp.int32(S0 + t))
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,1 @@
+from repro.training.trainer import TrainConfig, make_train_step, make_node_train_step

@@ -1,0 +1,7 @@
+from repro.utils.pytree import (
+    tree_vector,
+    tree_unvector,
+    tree_size,
+    tree_bytes,
+    tree_map_with_path_names,
+)

@@ -1,0 +1,60 @@
+"""Pytree <-> flat-vector utilities.
+
+The DL sharing modules (sparsification, secure aggregation, compression)
+operate on the *flattened parameter vector* of a node, exactly like
+DecentralizePy serializes the full model into one message.  These helpers
+convert a parameter pytree into a single 1-D array and back, preserving
+structure and dtypes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree's leaves."""
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_vector(tree) -> jax.Array:
+    """Flatten a pytree of arrays into a single 1-D fp32 vector."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def tree_unvector(vec: jax.Array, like):
+    """Inverse of :func:`tree_vector` given a template pytree ``like``."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    off = 0
+    for l in leaves:
+        n = int(np.prod(l.shape))
+        out.append(vec[off : off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_map_with_path_names(fn, tree):
+    """tree_map where ``fn(name, leaf)`` receives a dotted path string."""
+
+    def _fn(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        return fn(name, leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def segment_starts(sorted_ids: jax.Array, num_segments: int) -> jax.Array:
+    """Start offset of each segment id in a sorted id vector."""
+    counts = jnp.bincount(sorted_ids, length=num_segments)
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)])

@@ -1,0 +1,171 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+class TestGossipMix:
+    @pytest.mark.parametrize("K", [2, 3, 6, 10])
+    @pytest.mark.parametrize("M", [1000, 65536, 70000])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, K, M, dtype):
+        nb = jax.random.normal(jax.random.key(K * M), (K, M), jnp.float32).astype(dtype)
+        w = jax.random.dirichlet(jax.random.key(1), jnp.ones(K))
+        got = ops.gossip_mix(nb, w)
+        want = ref.gossip_mix_ref(nb, w)
+        tol = 1e-5 if dtype == jnp.float32 else 1e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+        )
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("R,C", [(1, 256), (8, 1024), (3, 4096)])
+    def test_deterministic(self, R, C):
+        x = jax.random.normal(jax.random.key(R * C), (R, C)) * 3.0
+        c, s = ops.quantize(x)
+        cr, sr = ref.quantize_ref(x)
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+    def test_stochastic_matches_ref_bits(self):
+        x = jax.random.normal(jax.random.key(0), (4, 512))
+        noise = jax.random.uniform(jax.random.key(1), (4, 512))
+        c, s = ops.quantize(x, noise)
+        cr, sr = ref.quantize_ref(x, noise)
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+
+    def test_roundtrip_error_bounded(self):
+        x = jax.random.normal(jax.random.key(2), (2, 2048))
+        c, s = ops.quantize(x)
+        y = ops.dequantize(c, s)
+        assert float(jnp.max(jnp.abs(y - x))) <= float(jnp.max(s)) * 0.51
+
+    def test_dequantize(self):
+        c = jnp.array([[-127, 0, 64, 127]], jnp.int8)
+        s = jnp.array([[0.01]], jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ops.dequantize(c, s)), [[-1.27, 0.0, 0.64, 1.27]], rtol=1e-6
+        )
+
+
+class TestSecureMaskKernel:
+    @pytest.mark.parametrize("K,M", [(1, 4096), (4, 65536), (7, 70001)])
+    def test_sweep(self, K, M):
+        x = jax.random.normal(jax.random.key(M), (M,))
+        bits = jax.random.bits(jax.random.key(K), (K, M), jnp.uint32)
+        signs = jnp.where(jnp.arange(K) % 2 == 0, 1.0, -1.0)
+        got = ops.secure_mask_apply(x, bits, signs, 0.7)
+        want = ref.secure_mask_apply_ref(x, bits, signs, 0.7)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_pairwise_cancellation(self):
+        """+mask and -mask from identical bits cancel exactly."""
+        M = 10_000
+        x = jax.random.normal(jax.random.key(0), (M,))
+        bits = jax.random.bits(jax.random.key(1), (1, M), jnp.uint32)
+        plus = ops.secure_mask_apply(x, bits, jnp.array([1.0]), 2.0)
+        both = ops.secure_mask_apply(
+            x, jnp.concatenate([bits, bits]), jnp.array([1.0, -1.0]), 2.0
+        )
+        np.testing.assert_allclose(np.asarray(both), np.asarray(x), atol=1e-6)
+        assert float(jnp.abs(plus - x).mean()) > 0.5
+
+
+class TestSparsify:
+    @pytest.mark.parametrize("M", [50_000, 65536, 131072])
+    def test_histogram_exact(self, M):
+        x = jax.random.normal(jax.random.key(M), (M,))
+        edges = jnp.exp(jnp.linspace(jnp.log(1e-6), jnp.log(6.0), 96))
+        np.testing.assert_array_equal(
+            np.asarray(ops.abs_histogram(x, edges)),
+            np.asarray(ref.abs_histogram_ref(x, edges)),
+        )
+
+    def test_threshold_mask_exact(self):
+        x = jax.random.normal(jax.random.key(5), (70_000,))
+        vals, mask = ops.threshold_mask(x, 0.9)
+        vr, mr = ref.threshold_mask_ref(x, 0.9)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(mr))
+        np.testing.assert_allclose(np.asarray(vals), np.asarray(vr), rtol=1e-6)
+
+    @pytest.mark.parametrize("k_frac", [0.01, 0.1, 0.3])
+    def test_topk_approx_quality(self, k_frac):
+        M = 100_000
+        k = int(M * k_frac)
+        x = jax.random.normal(jax.random.key(77), (M,))
+        vals, mask, t = ops.topk_mask_approx(x, k)
+        nsel = int(mask.sum())
+        assert k <= nsel <= int(k * 1.35) + 8, (k, nsel)
+        # everything selected must dominate everything dropped
+        amin_sel = float(jnp.min(jnp.where(mask, jnp.abs(x), jnp.inf)))
+        amax_drop = float(jnp.max(jnp.where(mask, 0.0, jnp.abs(x))))
+        assert amin_sel >= amax_drop - 1e-6 or nsel == M
+
+
+class TestSSDChunk:
+    @pytest.mark.parametrize("L,N,P,H", [(32, 16, 16, 2), (64, 32, 32, 4), (128, 64, 64, 2)])
+    def test_sweep(self, L, N, P, H):
+        G = 2
+        key = jax.random.key(L * N)
+        xdt = jax.random.normal(key, (G, L, H, P)) * 0.2
+        Bc = jax.random.normal(jax.random.fold_in(key, 1), (G, L, N)) * 0.4
+        Cc = jax.random.normal(jax.random.fold_in(key, 2), (G, L, N)) * 0.4
+        cum = -jnp.cumsum(jax.random.uniform(jax.random.fold_in(key, 3), (G, L, H)) * 0.1, axis=1)
+        y, st, dec = ops.ssd_chunk(xdt, Bc, Cc, cum)
+        for g in range(G):
+            yr, sr, dr = ref.ssd_chunk_ref(xdt[g], Bc[g], Cc[g], cum[g])
+            np.testing.assert_allclose(np.asarray(y[g]), np.asarray(yr), rtol=3e-4, atol=2e-5)
+            np.testing.assert_allclose(np.asarray(st[g]), np.asarray(sr), rtol=3e-4, atol=2e-5)
+            np.testing.assert_allclose(np.asarray(dec[g]), np.asarray(dr), rtol=1e-5)
+
+    def test_ssd_scan_equals_sequential_recurrence(self):
+        B, nc, L, H, P, N = 1, 3, 16, 2, 8, 8
+        key = jax.random.key(0)
+        xdt = jax.random.normal(key, (B, nc, L, H, P)) * 0.2
+        Bc = jax.random.normal(jax.random.fold_in(key, 1), (B, nc, L, N)) * 0.3
+        Cc = jax.random.normal(jax.random.fold_in(key, 2), (B, nc, L, N)) * 0.3
+        cum = -jnp.cumsum(jax.random.uniform(jax.random.fold_in(key, 3), (B, nc, L, H)) * 0.05, axis=2)
+        yk = np.asarray(ops.ssd_scan(xdt, Bc, Cc, cum))
+        S = nc * L
+        xf = np.asarray(xdt).reshape(B, S, H, P)
+        Bf = np.asarray(Bc).reshape(B, S, N)
+        Cf = np.asarray(Cc).reshape(B, S, N)
+        dA = np.diff(np.asarray(cum), axis=2, prepend=np.zeros((B, nc, 1, H))).reshape(B, S, H)
+        h = np.zeros((B, H, N, P))
+        ys = []
+        for t in range(S):
+            h = h * np.exp(dA[:, t])[:, :, None, None] + np.einsum(
+                "bn,bhp->bhnp", Bf[:, t], xf[:, t]
+            )
+            ys.append(np.einsum("bn,bhnp->bhp", Cf[:, t], h))
+        want = np.stack(ys, 1).reshape(B, nc, L, H, P)
+        np.testing.assert_allclose(yk, want, rtol=3e-3, atol=1e-4)
+
+
+class TestSWAAttention:
+    @pytest.mark.parametrize("S,W,D", [(256, 128, 32), (512, 256, 64), (384, 128, 64)])
+    def test_sweep(self, S, W, D):
+        BH = 2
+        key = jax.random.key(S + W)
+        q = jax.random.normal(key, (BH, S, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (BH, S, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (BH, S, D))
+        o = ops.swa_attention(q, k, v, W)
+        for b in range(BH):
+            want = ref.swa_attention_ref(q[b], k[b], v[b], W)
+            np.testing.assert_allclose(np.asarray(o[b]), np.asarray(want), rtol=3e-4, atol=3e-5)
+
+    def test_bf16(self):
+        BH, S, W, D = 1, 256, 128, 32
+        q = jax.random.normal(jax.random.key(0), (BH, S, D)).astype(jnp.bfloat16)
+        k = jax.random.normal(jax.random.key(1), (BH, S, D)).astype(jnp.bfloat16)
+        v = jax.random.normal(jax.random.key(2), (BH, S, D)).astype(jnp.bfloat16)
+        o = ops.swa_attention(q, k, v, W)
+        want = ref.swa_attention_ref(q[0], k[0], v[0], W)
+        np.testing.assert_allclose(
+            np.asarray(o[0], np.float32), np.asarray(want, np.float32), rtol=3e-2, atol=3e-2
+        )

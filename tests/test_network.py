@@ -1,0 +1,71 @@
+"""Network emulation model: Fig. 3b mechanics (denser topologies take
+longer per round) and deployment portability (LAN vs WAN by config swap)."""
+import numpy as np
+import pytest
+
+from repro.core.network import (
+    LAN,
+    WAN,
+    LinkSpec,
+    Mapping,
+    NetworkModel,
+    paper_testbed,
+    wan_deployment,
+)
+from repro.core.topology import Graph
+
+
+class TestLinkSpec:
+    def test_transfer_time(self):
+        l = LinkSpec(bandwidth_bps=1e9, latency_s=1e-3)
+        assert l.transfer_time(1e9 / 8) == pytest.approx(1.001)
+
+    def test_drop_derates_goodput(self):
+        clean = LinkSpec(1e9, 0.0)
+        lossy = LinkSpec(1e9, 0.0, drop_rate=0.5)
+        assert lossy.transfer_time(1e6) == pytest.approx(2 * clean.transfer_time(1e6))
+
+
+class TestMapping:
+    def test_round_robin(self):
+        m = Mapping(48, 16)
+        assert m.machine(0) == m.machine(16) == m.machine(32)
+        assert not m.same_machine(0, 1)
+
+
+class TestRoundTime:
+    def test_fully_connected_slower_per_round(self):
+        """Paper Fig. 3b: same rounds, fully-connected takes several x the
+        wall-clock of sparse topologies (uplink serialization)."""
+        n = 32
+        net = paper_testbed(n)
+        nbytes = 4 * 100_000  # ~100k-param fp32 model
+        t_ring = net.round_time(Graph.ring(n), nbytes, compute_time_s=0.01)
+        t_reg = net.round_time(Graph.regular_circulant(n, 5), nbytes, compute_time_s=0.01)
+        t_full = net.round_time(Graph.fully_connected(n), nbytes, compute_time_s=0.01)
+        assert t_ring < t_reg < t_full
+        assert t_full / t_reg > 2.5  # paper: ~3x
+
+    def test_wan_slower_than_lan(self):
+        n = 16
+        g = Graph.regular_circulant(n, 5)
+        nbytes = 4e6
+        t_lan = paper_testbed(n).round_time(g, nbytes)
+        t_wan = wan_deployment(n).round_time(g, nbytes)
+        assert t_wan > 5 * t_lan
+
+    def test_local_links_free_ish(self):
+        """Nodes co-located on one machine talk over loopback."""
+        n = 8
+        g = Graph.ring(n)
+        all_local = NetworkModel(Mapping(n, 1))
+        all_remote = NetworkModel(Mapping(n, n))
+        assert all_local.round_time(g, 1e7) < all_remote.round_time(g, 1e7) / 10
+
+    def test_experiment_time_scales_with_rounds(self):
+        n = 8
+        g = Graph.ring(n)
+        net = paper_testbed(n)
+        assert net.experiment_time(g, 1e6, 0.01, 100) == pytest.approx(
+            100 * net.round_time(g, 1e6, 0.01)
+        )
