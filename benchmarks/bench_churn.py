@@ -1,0 +1,50 @@
+"""Participation churn (the paper's missing scenario axis): accuracy /
+bytes / simulated wall-clock vs per-round node participation probability.
+
+A node that is down for a round does no local step and is removed from the
+mixing matrix for that round (sharing.participation_reweight); everything
+runs inside the engine's scanned chunks.  Expected shape: communication
+drops roughly linearly with participation while accuracy degrades slowly —
+gossip averaging is robust to moderate churn.
+
+    PYTHONPATH=src:. python benchmarks/bench_churn.py --rounds 40
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import DLConfig
+
+from benchmarks.common import dl_experiment, save_results
+
+
+def run(nodes: int = 32, rounds: int = 40, model: str = "mlp", seeds: int = 1,
+        log: bool = True):
+    recs = []
+    for p in (1.0, 0.9, 0.7, 0.5):
+        dl = DLConfig(n_nodes=nodes, topology="regular", degree=5, rounds=rounds,
+                      eval_every=max(rounds // 4, 1), local_steps=2, batch_size=8,
+                      participation=p, network="lan")
+        recs.append(
+            dl_experiment(f"participation-{p:.1f}", dl, model=model, width=8,
+                          seeds=seeds, log=log)
+        )
+    save_results("bench_churn", recs)
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--seeds", type=int, default=1)
+    args = ap.parse_args()
+    recs = run(args.nodes, args.rounds, seeds=args.seeds)
+    print("\nname,acc,bytes_per_node_MB,sim_time_s")
+    for r in recs:
+        print(f"{r['name']},{r['acc_mean']:.4f},{r['bytes_per_node']/1e6:.1f},"
+              f"{r['sim_time_s']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Engine throughput: legacy per-round dispatch vs scanned chunks.
+
+Measures rounds/sec of the RoundEngine at chunk sizes 0 (legacy host-driven
+per-round dispatch with host-stacked batches), 1, 8, 32 for N in {64, 256}.
+
+The workload is a distributed-consensus round — each node pulls its local
+batch toward its mean with a quadratic loss, then gossips — deliberately
+the cheapest possible per-round device program, so the measurement isolates
+the *execution machinery* (per-round dispatch, host batch staging,
+host<->device metric syncs) rather than model FLOPs, which are identical
+across chunk sizes.  Training benchmarks (bench_scalability etc.) cover the
+model-bound regime.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py --rounds 64
+
+Results go through benchmarks/common.save_results so the perf trajectory
+is recorded (results/bench_engine.json).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DLConfig, RoundEngine
+from repro.data import NodeBatcher, make_dataset, sharding_partition
+from repro.optim import make_optimizer
+
+from benchmarks.common import save_results
+
+SHAPE = (2, 2, 1)  # 4-dim inputs -> 4-param consensus state per node
+
+
+def _init(key):
+    return {"w": jax.random.normal(key, (SHAPE[0] * SHAPE[1] * SHAPE[2],))}
+
+
+def _loss(p, x, y):
+    return jnp.mean((p["w"] - x.reshape(x.shape[0], -1).mean(0)) ** 2)
+
+
+def _acc(p, x, y):
+    return -_loss(p, x, y)  # consensus error, negated so bigger = better
+
+
+def _engine(n_nodes: int, chunk: int) -> RoundEngine:
+    ds = make_dataset("cifar10", n_train=2048, n_test=64, shape=SHAPE, sigma=2.0)
+    parts = sharding_partition(ds.train_y, n_nodes, 2, seed=0)
+    batcher = NodeBatcher(ds.train_x, ds.train_y, parts, batch_size=4, seed=0)
+    dl = DLConfig(n_nodes=n_nodes, topology="regular", degree=5,
+                  eval_every=10**9, local_steps=1, batch_size=4,
+                  chunk_rounds=chunk)
+    return RoundEngine(dl, _init, _loss, _acc, make_optimizer("sgd", 0.05), batcher)
+
+
+def run(rounds: int = 64, nodes=(64, 256), chunks=(0, 1, 8, 32), repeats: int = 5,
+        log: bool = True):
+    recs = []
+    for n in nodes:
+        rps = {}
+        for chunk in chunks:
+            eng = _engine(n, chunk)
+            # warm up with the same round count so every scan length the
+            # timed run needs (full chunks + remainder) is already compiled
+            eng.run(rounds=rounds, log=False)
+            best = 0.0
+            for _ in range(repeats):
+                t0 = time.time()
+                eng.run(rounds=rounds, log=False)
+                best = max(best, rounds / (time.time() - t0))
+            rps[chunk] = best
+            name = "legacy" if chunk == 0 else f"chunk{chunk}"
+            recs.append({
+                "name": f"N{n}-{name}", "n_nodes": n, "chunk": chunk,
+                "rounds": rounds, "rounds_per_s": best,
+            })
+            if log:
+                print(f"  N={n:4d} {name:8s} {best:8.1f} rounds/s", flush=True)
+        if log and 1 in rps and 32 in rps:
+            line = f"  N={n:4d} speedup chunk32/chunk1: {rps[32] / rps[1]:.2f}x"
+            if 0 in rps:
+                line += f", chunk32/legacy: {rps[32] / rps[0]:.2f}x"
+            print(line, flush=True)
+    save_results("bench_engine", recs)
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=64)
+    ap.add_argument("--nodes", type=int, nargs="+", default=[64, 256])
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args()
+    recs = run(args.rounds, tuple(args.nodes), repeats=args.repeats)
+    print("\nname,rounds_per_s")
+    for r in recs:
+        print(f"{r['name']},{r['rounds_per_s']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -72,7 +72,8 @@ def dl_experiment(
         r = DecentralizedRunner(dls, init, loss, acc, make_optimizer("sgd", lr), batcher)
         t0 = time.time()
         hist = r.run(log=False)
-        runs.append({"history": hist, "bytes": r.bytes_sent, "wall": time.time() - t0})
+        runs.append({"history": hist, "bytes": r.bytes_sent, "wall": time.time() - t0,
+                     "sim_time": r.sim_time_s})
         if log:
             print(
                 f"  [{name} seed{s}] final acc {hist[-1]['acc_mean']:.4f} "
@@ -86,6 +87,7 @@ def dl_experiment(
         "acc_mean": float(np.mean(finals)),
         "acc_ci95": float(1.96 * np.std(finals) / max(np.sqrt(len(finals)), 1)),
         "bytes_per_node": runs[0]["bytes"],
+        "sim_time_s": runs[0]["sim_time"],
         "wall_s": float(np.mean([r["wall"] for r in runs])),
         "history": runs[0]["history"],
         "runs": len(runs),

@@ -3,11 +3,17 @@
 16 nodes, 5-regular static topology, GN-LeNet on the synthetic CIFAR-10
 stand-in with 2-sharding non-IID data, plain SGD (the paper's recipe).
 
+Execution goes through the RoundEngine: chunks of rounds are compiled into
+a single ``lax.scan`` (batches gathered from the device-resident dataset,
+per-round metrics collected on device), so the emulation runs as fast as
+the hardware allows.  Optionally attach a simulated network (--network lan)
+to also get the paper's simulated wall-clock axis.
+
     PYTHONPATH=src python examples/quickstart.py [--rounds 60]
 """
 import argparse
 
-from repro.core import DLConfig, DecentralizedRunner
+from repro.core import DLConfig, RoundEngine
 from repro.data import NodeBatcher, make_dataset, sharding_partition
 from repro.models.api import cross_entropy
 from repro.models.cnn import cnn_apply, cnn_init
@@ -18,6 +24,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--nodes", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=10,
+                    help="rounds per compiled scan chunk (0 = legacy per-round)")
+    ap.add_argument("--network", default="none", choices=["none", "lan", "wan"],
+                    help="simulated deployment for the wall-clock axis")
     args = ap.parse_args()
 
     # Dataset module: read, partition (non-IID 2-sharding), evaluate.
@@ -38,16 +48,20 @@ def main():
         topology="regular", degree=5,   # Graph module
         sharing="full",                 # Sharing module (D-PSGD full sharing)
         local_steps=2, rounds=args.rounds, eval_every=10,
+        chunk_rounds=args.chunk,        # rounds per compiled lax.scan
+        network=args.network,           # NetworkModel (simulated time)
         results_dir="results/quickstart",
     )
-    runner = DecentralizedRunner(
+    engine = RoundEngine(
         dl, lambda k: cnn_init(k, width=16), loss_fn, acc_fn,
         make_optimizer("sgd", 0.05), batcher,
     )
-    hist = runner.run()
+    hist = engine.run()
     print(f"\nfinal: acc {hist[-1]['acc_mean']:.4f} ± {hist[-1]['acc_std']:.4f}, "
-          f"{runner.bytes_sent / 1e6:.1f} MB sent/node "
-          f"(results in results/quickstart/results.json)")
+          f"{engine.bytes_sent / 1e6:.1f} MB sent/node "
+          + (f"simulated {engine.sim_time_s:.1f}s on {args.network}, "
+             if args.network != "none" else "")
+          + "(results in results/quickstart/results.json)")
 
 
 if __name__ == "__main__":

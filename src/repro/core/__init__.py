@@ -1,7 +1,7 @@
 # The paper's primary contribution: decentralized learning as a composable
 # JAX feature — overlay topologies, gossip mixing, sparsified sharing,
 # secure aggregation, and the node/runner that ties them together.
-from repro.core.topology import Graph, PeerSampler, circulant_offsets
+from repro.core.topology import Graph, PeerSampler, circulant_offsets, neighbor_table
 from repro.core.mixing import (
     mix_dense,
     mix_fully,
@@ -16,6 +16,7 @@ from repro.core.sharing import (
     ChocoSGD,
     QuantizedSharing,
     make_sharing,
+    participation_reweight,
     sparse_aggregate,
 )
 from repro.core.network import (
@@ -26,5 +27,6 @@ from repro.core.network import (
     wan_deployment,
 )
 from repro.core.secure import SecureAggregation
+from repro.core.engine import RoundEngine, build_network
 from repro.core.node import DLConfig, DecentralizedRunner, build_graph
 from repro.core.federated import FLConfig, FederatedRunner

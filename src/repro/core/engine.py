@@ -1,0 +1,453 @@
+"""RoundEngine — the compiled multi-round execution core of the DL
+emulator (paper Fig. 2 loop, compiled R rounds at a time).
+
+## Execution model
+
+The engine executes rounds in **chunks of R rounds compiled into a single
+``lax.scan``** instead of one host-driven jit dispatch per round:
+
+* **Batches are pre-stacked on device.**  The full (synthetic) dataset is
+  resident on the device; the host only produces a tiny ``(R, L, N, B)``
+  int32 index tensor per chunk (``NodeBatcher.chunk_indices``) and each
+  scanned round gathers its batch with one ``take``.  No per-round
+  host->device batch transfer, no per-round ``np.stack``.
+* **Mixing matrices are traced scan inputs.**  Per-round W for dynamic
+  topologies is pre-generated as an ``(R, N, N)`` stack
+  (``PeerSampler.weights_stack``) and threaded through the scan as a traced
+  value; static topologies broadcast one W.  The mean degree used for byte
+  accounting is likewise a traced per-round scalar — this removes the old
+  ``self._cur_degree`` Python-closure recompile hazard in ``core/node.py``.
+* **Metrics are traced per-round outputs.**  Bytes-sent and (when a
+  ``NetworkModel`` is configured) the simulated synchronous-round
+  wall-clock are collected by the scan as ``(R,)`` arrays and synced to the
+  host once per chunk, not once per round.
+* **Secure aggregation runs inside the scan.**  ``core/secure.py``'s
+  vectorized masked-mixing path is jittable (padded neighbor tables +
+  traced round index for the PRF), so ``secure=True`` uses the same scanned
+  loop as every other sharing strategy.
+* **Participation masks (churn / stragglers).**  An ``(R, N)`` per-round
+  activity mask is threaded through the scan; down nodes skip their local
+  update and are cut out of W on the fly (``sharing.participation_reweight``),
+  with the freed mass returned to the surviving diagonals.
+
+Chunk boundaries are aligned to the eval cadence, so the recorded history
+is identical to per-round execution; distinct chunk lengths (full chunks
+vs the remainder before an eval round) each compile once and are cached.
+``chunk_rounds=0`` selects the legacy per-round dispatch path (host-stacked
+batches, one jit call and one host sync per round) — kept as the baseline
+``benchmarks/bench_engine.py`` measures against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sharing as sharing_lib
+from repro.core.network import NetworkModel, paper_testbed, wan_deployment
+from repro.core.secure import SecureAggregation
+from repro.core.sharing import participation_reweight
+from repro.core.topology import Graph, PeerSampler
+from repro.optim import Optimizer
+from repro.optim.optimizers import apply_updates
+from repro.utils.pytree import tree_unvector, tree_vector
+
+# cap on the (R, N, N) mixing-matrix stack a single chunk materializes;
+# chunks shrink automatically at very large N.
+_W_STACK_BYTES_CAP = 64 * 1024 * 1024
+# cap on the pre-gathered (R, L, N, B, ...) batch stack; above it the scan
+# falls back to gathering each round's batch inside the loop body.
+_BATCH_STACK_BYTES_CAP = 256 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class DLConfig:
+    """Experiment specification (paper Fig. 1 'specifications' input)."""
+
+    n_nodes: int = 16
+    topology: str = "regular"  # ring | regular | fully | star | dynamic | file:<path>
+    degree: int = 5
+    sharing: str = "full"      # full | randomk | topk | choco
+    budget: float = 0.1        # sparsification budget
+    choco_gamma: float = 0.3
+    secure: bool = False       # secure aggregation (masked full sharing)
+    local_steps: int = 1
+    batch_size: int = 8
+    rounds: int = 100
+    eval_every: int = 10
+    seed: int = 0
+    results_dir: Optional[str] = None
+    # --- engine (scan) execution ------------------------------------------
+    chunk_rounds: int = 8      # rounds per compiled lax.scan chunk; 0 = legacy
+    # --- scenario axes -----------------------------------------------------
+    participation: float = 1.0  # P(node active in a round); <1 models churn
+    network: str = "none"       # simulated network: none | lan | wan
+    compute_time_s: float = 0.0  # per-round local compute in the time model
+    parallel_sends: bool = False  # overlap a node's sends (dedicated NICs)
+
+
+def build_graph(cfg: DLConfig) -> Optional[Graph]:
+    t = cfg.topology
+    if t == "ring":
+        return Graph.ring(cfg.n_nodes)
+    if t == "regular":
+        return Graph.regular_circulant(cfg.n_nodes, cfg.degree)
+    if t == "random-regular":
+        return Graph.random_regular(cfg.n_nodes, cfg.degree, cfg.seed)
+    if t == "fully":
+        return Graph.fully_connected(cfg.n_nodes)
+    if t == "star":
+        return Graph.star(cfg.n_nodes)
+    if t == "dynamic":
+        return None  # per-round via PeerSampler
+    if t.startswith("file:"):
+        return Graph.from_edge_list(t[5:], cfg.n_nodes)
+    raise ValueError(f"unknown topology {t!r}")
+
+
+def build_network(cfg: DLConfig) -> Optional[NetworkModel]:
+    if cfg.network in (None, "", "none"):
+        return None
+    if cfg.network == "lan":
+        return paper_testbed(cfg.n_nodes)
+    if cfg.network == "wan":
+        return wan_deployment(cfg.n_nodes)
+    raise ValueError(f"unknown network model {cfg.network!r} (none|lan|wan)")
+
+
+class RoundEngine:
+    """Emulates N DL nodes with node-stacked state and scanned rounds.
+
+    loss_fn(params, batch_x, batch_y) -> scalar    (single node)
+    acc_fn(params, batch_x, batch_y) -> scalar     (single node)
+    heterogeneous_lrs: optional (N,) per-node learning-rate multipliers
+    applied to each node's optimizer updates (system heterogeneity axis).
+    """
+
+    def __init__(
+        self,
+        dl: DLConfig,
+        init_params_fn: Callable[[jax.Array], Any],
+        loss_fn: Callable,
+        acc_fn: Callable,
+        optimizer: Optimizer,
+        batcher,
+        heterogeneous_lrs: Optional[np.ndarray] = None,
+    ):
+        self.dl = dl
+        self.loss_fn = loss_fn
+        self.acc_fn = acc_fn
+        self.opt = optimizer
+        self.batcher = batcher
+        if heterogeneous_lrs is not None:
+            lrs = np.asarray(heterogeneous_lrs, np.float32)
+            assert lrs.shape == (dl.n_nodes,), "heterogeneous_lrs must be (n_nodes,)"
+            self.lr_scales = jnp.asarray(lrs)
+        else:
+            self.lr_scales = None
+        key = jax.random.key(dl.seed)
+        keys = jax.random.split(key, dl.n_nodes)
+        # fully-decentralized: every node initializes its *own* model
+        self.params = jax.vmap(init_params_fn)(keys)
+        self.opt_state = jax.vmap(self.opt.init)(self.params)
+        self.template = jax.tree_util.tree_map(lambda a: a[0], self.params)
+        self.graph = build_graph(dl)
+        self.sampler = PeerSampler(dl.n_nodes, dl.degree, dl.seed) if dl.topology == "dynamic" else None
+        if dl.secure:
+            assert self.graph is not None, "secure aggregation needs a static graph"
+            if dl.participation < 1.0:
+                raise ValueError(
+                    "secure=True is incompatible with participation < 1: a "
+                    "dropped node's pairwise masks would not cancel (seed "
+                    "recovery is not modeled); run churn without secure."
+                )
+            self.sharing = SecureAggregation(self.graph.adj)
+        else:
+            kw = {"gamma": dl.choco_gamma} if dl.sharing.startswith("choco") else {}
+            self.sharing = sharing_lib.make_sharing(dl.sharing, dl.budget, **kw)
+        X0 = jax.vmap(tree_vector)(self.params)
+        self.share_state = self.sharing.init_state(X0)
+        self.n_params = int(X0.shape[1])
+        if self.graph is not None:
+            self._W_np = self.graph.metropolis_hastings().astype(np.float32)
+            # static topology: W is a captured device constant of the scan,
+            # not a per-chunk (R, N, N) host transfer
+            self._W_dev = jnp.asarray(self._W_np)
+            self._mean_degree = float(self.graph.degrees().mean())
+        else:
+            self._W_np = self._W_dev = None
+            self._mean_degree = float(dl.degree)  # PeerSampler is d-regular
+        self.network_model = build_network(dl)
+        if self.network_model is not None:
+            lat, gp = self.network_model.matrices()
+            self._lat = jnp.asarray(lat)
+            self._goodput = jnp.asarray(gp)
+        else:
+            self._lat = self._goodput = None
+        # device-resident dataset for in-scan batch gathers
+        self._dev_x = jnp.asarray(batcher.x)
+        self._dev_y = jnp.asarray(batcher.y)
+        self._base_key = jax.random.key(dl.seed + 17)
+        n = dl.n_nodes
+        if dl.chunk_rounds <= 0:
+            self.chunk = 0
+        elif self.sampler is not None:
+            # dynamic topologies stage an (R, N, N) W stack per chunk; bound it
+            self.chunk = max(1, min(dl.chunk_rounds, _W_STACK_BYTES_CAP // (4 * n * n)))
+        else:
+            self.chunk = dl.chunk_rounds  # static W is a captured constant
+        self.history: List[Dict] = []
+        self.bytes_sent = 0.0
+        self.sim_time_s = 0.0
+        self._chunk_jit = jax.jit(self._chunk_fn)
+        self._legacy_jit = jax.jit(self._legacy_round)
+        self._eval_jit = jax.jit(self._eval)
+
+    # ------------------------------------------------------------------
+    # traced round program (shared by scan body and legacy dispatch)
+    # ------------------------------------------------------------------
+    def _node_scale(self, tree, scale):
+        """Multiply every node-stacked leaf by a per-node (N,) factor."""
+
+        def f(a):
+            return a * scale.reshape((scale.shape[0],) + (1,) * (a.ndim - 1))
+
+        return jax.tree_util.tree_map(f, tree)
+
+    def _node_where(self, mask, new, old):
+        """Per-node select between two node-stacked pytrees."""
+
+        def f(n, o):
+            m = mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1))
+            return jnp.where(m > 0, n, o)
+
+        return jax.tree_util.tree_map(f, new, old)
+
+    def _local_train(self, params, opt_state, bx, by, active):
+        def node_grad(p, x, y):
+            return jax.grad(self.loss_fn)(p, x, y)
+
+        # local_steps is small and static: unroll instead of nesting a scan
+        for s in range(bx.shape[0]):
+            grads = jax.vmap(node_grad)(params, bx[s], by[s])
+            updates, new_opt = jax.vmap(self.opt.update)(grads, opt_state, params)
+            if self.lr_scales is not None:
+                updates = self._node_scale(updates, self.lr_scales)
+            if active is not None:
+                # down nodes do no local work: zero update, frozen opt state
+                updates = self._node_scale(updates, active)
+                new_opt = self._node_where(active, new_opt, opt_state)
+            params, opt_state = apply_updates(params, updates), new_opt
+        return params, opt_state
+
+    def _round_time(self, Wm, active, nbytes, deg_eff):
+        """Simulated synchronous-round wall-clock, traced (network.py's
+        round_time vectorized over the reweighted mixing matrix)."""
+        n = Wm.shape[0]
+        offdiag = 1.0 - jnp.eye(n, dtype=jnp.float32)
+        A = (Wm * offdiag > 0).astype(jnp.float32)
+        per_edge = jnp.where(deg_eff > 0, nbytes / jnp.maximum(deg_eff, 1e-9), 0.0)
+        t_edge = self._lat + per_edge * 8.0 / self._goodput
+        if self.dl.parallel_sends:
+            comm = jnp.max(A * t_edge, axis=1)
+        else:
+            comm = jnp.sum(A * t_edge, axis=1)
+        node_t = self.dl.compute_time_s + comm
+        if active is not None:
+            node_t = active * node_t
+        return jnp.max(node_t)
+
+    def _train_and_mix(self, params, opt_state, share_state, bx, by, W, active, rnd):
+        """One round.  ``active`` is None for full participation (statically
+        skips masking/reweighting: W flows through untouched and the degree
+        stays a Python float, exactly like per-round dispatch did)."""
+        key = jax.random.fold_in(self._base_key, rnd)
+        params, opt_state = self._local_train(params, opt_state, bx, by, active)
+        if active is not None:
+            Wm, deg_eff = participation_reweight(W, active)
+        else:
+            Wm, deg_eff = W, self._mean_degree
+        X = jax.vmap(tree_vector)(params)
+        X2, new_share, nbytes = self.sharing.round(
+            X, Wm, share_state, key, degree=deg_eff, rnd=rnd
+        )
+        if active is not None:
+            # a down node transmitted nothing: its sharing bookkeeping
+            # (TopK last_shared, CHOCO xhat — node-stacked leaves) must not
+            # record this round's payload as sent
+            share_state = self._node_where(active, new_share, share_state)
+        else:
+            share_state = new_share
+        new_params = jax.vmap(lambda v: tree_unvector(v, self.template))(X2)
+        if active is not None:
+            # don't trust each strategy's W-row-identity property for down
+            # nodes (e.g. QuantizedSharing would hand them the int8
+            # roundtrip of their own params): freeze them explicitly
+            params = self._node_where(active, new_params, params)
+        else:
+            params = new_params
+        nbytes = jnp.asarray(nbytes, jnp.float32)
+        if self._lat is not None:
+            sim_t = self._round_time(Wm, active, nbytes, deg_eff)
+        else:
+            sim_t = jnp.float32(0.0)
+        return params, opt_state, share_state, nbytes, sim_t
+
+    def _chunk_fn(self, params, opt_state, share_state, xs):
+        """R rounds in one lax.scan.  ``xs`` is a dict of per-round scan
+        inputs: always idx (R,L,N,B) int32 and rnd (R,) int32; plus W
+        (R,N,N) f32 for dynamic topologies (static W is a captured device
+        constant) and act (R,N) f32 when participation < 1."""
+
+        def body(carry, xs_r):
+            params, opt_state, share_state = carry
+            W = xs_r["W"] if "W" in xs_r else self._W_dev
+            act = xs_r.get("act")
+            if "bx" in xs_r:  # chunk batches pre-gathered on device
+                bx, by = xs_r["bx"], xs_r["by"]
+            else:  # oversized chunk: gather (L, N, B, ...) per round
+                bx = jnp.take(self._dev_x, xs_r["idx"], axis=0)
+                by = jnp.take(self._dev_y, xs_r["idx"], axis=0)
+            params, opt_state, share_state, nbytes, sim_t = self._train_and_mix(
+                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"]
+            )
+            return (params, opt_state, share_state), (nbytes, sim_t)
+
+        carry, (nbytes, times) = jax.lax.scan(
+            body, (params, opt_state, share_state), xs
+        )
+        return carry + (nbytes, times)
+
+    def _legacy_round(self, params, opt_state, share_state, bx, by, W, active, rnd):
+        return self._train_and_mix(params, opt_state, share_state, bx, by, W, active, rnd)
+
+    def _eval(self, params, tx, ty):
+        return jax.vmap(lambda p: self.acc_fn(p, tx, ty))(params)
+
+    # ------------------------------------------------------------------
+    # host-side chunk staging
+    # ------------------------------------------------------------------
+    def _round_W(self, rnd: int) -> np.ndarray:
+        if self.sampler is not None:
+            return self.sampler.round_weights(rnd).astype(np.float32)
+        return self._W_np
+
+    def _participation_mask(self, start: int, n_rounds: int) -> np.ndarray:
+        n = self.dl.n_nodes
+        if self.dl.participation >= 1.0:
+            return np.ones((n_rounds, n), np.float32)
+        out = np.empty((n_rounds, n), np.float32)
+        for r in range(n_rounds):
+            rng = np.random.default_rng(
+                (self.dl.seed * 1_000_003 + start + r) * 1_000_003 + 7_919
+            )
+            m = rng.random(n) < self.dl.participation
+            if not m.any():  # keep at least one node alive per round
+                m[rng.integers(0, n)] = True
+            out[r] = m
+        return out
+
+    def _run_chunk(self, start: int, n_rounds: int):
+        dl = self.dl
+        idx = self.batcher.chunk_indices(start, n_rounds, dl.local_steps)
+        xs = {"rnd": jnp.asarray(np.arange(start, start + n_rounds, dtype=np.int32))}
+        item_bytes = self._dev_x.nbytes // max(self._dev_x.shape[0], 1)
+        if idx.size * item_bytes <= _BATCH_STACK_BYTES_CAP:
+            # pre-stack the whole chunk's batches on device: one gather per
+            # chunk instead of one per scanned round
+            idx_dev = jnp.asarray(idx)
+            xs["bx"] = jnp.take(self._dev_x, idx_dev, axis=0)  # (R, L, N, B, ...)
+            xs["by"] = jnp.take(self._dev_y, idx_dev, axis=0)
+        else:
+            xs["idx"] = jnp.asarray(idx)
+        if self.sampler is not None:
+            xs["W"] = jnp.asarray(self.sampler.weights_stack(start, n_rounds))
+        if dl.participation < 1.0:
+            xs["act"] = jnp.asarray(self._participation_mask(start, n_rounds))
+        out = self._chunk_jit(self.params, self.opt_state, self.share_state, xs)
+        self.params, self.opt_state, self.share_state, nbytes, times = out
+        # ONE host sync per chunk for all per-round metrics
+        self.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
+        self.sim_time_s += float(np.asarray(times, np.float64).sum())
+
+    def _run_legacy_round(self, rnd: int):
+        """Per-round dispatch baseline: host-gathered full batches, one jit
+        call and one metric sync per round.  Samples the same round_indices
+        as the scanned path so both execute the identical workload."""
+        dl = self.dl
+        idx = self.batcher.round_indices(rnd, dl.local_steps)  # (L, N, B)
+        bx = jnp.asarray(self.batcher.x[idx])
+        by = jnp.asarray(self.batcher.y[idx])
+        W = jnp.asarray(self._round_W(rnd))
+        act = (
+            jnp.asarray(self._participation_mask(rnd, 1)[0])
+            if dl.participation < 1.0 else None
+        )
+        out = self._legacy_jit(
+            self.params, self.opt_state, self.share_state, bx, by, W, act,
+            jnp.int32(rnd),
+        )
+        self.params, self.opt_state, self.share_state, nbytes, sim_t = out
+        self.bytes_sent += float(nbytes)
+        self.sim_time_s += float(sim_t)
+
+    # ------------------------------------------------------------------
+    def _record(self, rnd: int, tx, ty, t0: float, log: bool):
+        accs = np.asarray(self._eval_jit(self.params, tx, ty))
+        rec = {
+            "round": rnd,
+            "acc_mean": float(accs.mean()),
+            "acc_std": float(accs.std()),
+            "bytes_per_node": self.bytes_sent,
+            "wall_s": time.time() - t0,
+            "sim_time_s": self.sim_time_s,
+        }
+        self.history.append(rec)
+        if log:
+            print(
+                f"[{self.dl.topology}/{type(self.sharing).__name__}] round {rnd:4d} "
+                f"acc {rec['acc_mean']:.4f}±{rec['acc_std']:.4f} "
+                f"MB/node {self.bytes_sent / 1e6:.1f}"
+                + (f" sim {self.sim_time_s:.1f}s" if self.network_model else "")
+            )
+
+    def run(self, rounds: Optional[int] = None, log: bool = True) -> List[Dict]:
+        dl = self.dl
+        rounds = rounds if rounds is not None else dl.rounds
+        tx, ty = self.batcher.test_batch()
+        tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+        ev = max(dl.eval_every, 1)
+        t0 = time.time()
+        if self.chunk == 0:  # legacy per-round dispatch
+            for rnd in range(rounds):
+                self._run_legacy_round(rnd)
+                if rnd % ev == 0 or rnd == rounds - 1:
+                    self._record(rnd, tx, ty, t0, log)
+        else:
+            rnd = 0
+            while rnd < rounds:
+                nxt = -(-rnd // ev) * ev  # next eval round >= rnd
+                if nxt >= rounds:
+                    nxt = rounds - 1
+                end = nxt + 1
+                while rnd < end:
+                    r = min(self.chunk, end - rnd)
+                    self._run_chunk(rnd, r)
+                    rnd += r
+                self._record(nxt, tx, ty, t0, log)
+        self._dump_results()
+        return self.history
+
+    def _dump_results(self):
+        """Per-node JSON results, DecentralizePy-style (aggregated later)."""
+        if not self.dl.results_dir:
+            return
+        os.makedirs(self.dl.results_dir, exist_ok=True)
+        with open(os.path.join(self.dl.results_dir, "results.json"), "w") as f:
+            json.dump({"config": dataclasses.asdict(self.dl), "history": self.history}, f, indent=1)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.topology import Graph, circulant_offsets
+from repro.utils.compat import shard_map
 
 
 def mix_dense(stacked, W):
@@ -121,7 +122,7 @@ def mix_circulant_shmap(stacked, mesh, node_axes, degree: int,
         spec_leaves = [P(node_axes, *((None,) * (l.ndim - 1))) for l in leaves]
     in_specs = (P(),) + tuple(spec_leaves)
     out_specs = tuple(spec_leaves)
-    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                        check_vma=False)
     mixed = fn(weights, *leaves)
     return jax.tree_util.tree_unflatten(treedef, mixed)
@@ -212,7 +213,7 @@ def mix_compressed_circulant_shmap(
                         delta = delta + w_nbr * (r_vals - f32)
             return (f32 + delta).reshape(-1)[:size].reshape(shape).astype(x.dtype)
 
-        fn = jax.shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=spec,
+        fn = shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=spec,
                            check_vma=False)
         return fn(leaf)
 

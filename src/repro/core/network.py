@@ -31,9 +31,12 @@ class LinkSpec:
     latency_s: float
     drop_rate: float = 0.0  # fraction; derates goodput ~1/(1-p)
 
+    def goodput_bps(self) -> float:
+        """Payload goodput after drop-rate derating (TCP retransmission)."""
+        return self.bandwidth_bps * max(1.0 - self.drop_rate, 1e-3)
+
     def transfer_time(self, nbytes: float) -> float:
-        goodput = self.bandwidth_bps * max(1.0 - self.drop_rate, 1e-3)
-        return self.latency_s + nbytes * 8.0 / goodput
+        return self.latency_s + nbytes * 8.0 / self.goodput_bps()
 
 
 LOOPBACK = LinkSpec(bandwidth_bps=20e9, latency_s=20e-6)
@@ -64,6 +67,18 @@ class NetworkModel:
 
     def link(self, a: int, b: int) -> LinkSpec:
         return self.local if self.mapping.same_machine(a, b) else self.remote
+
+    def matrices(self) -> "tuple[np.ndarray, np.ndarray]":
+        """(latency_s, goodput_bps) as (N, N) float32 matrices over all
+        ordered node pairs — the dense form the RoundEngine closes over so
+        per-round simulated wall-clock is a *traced* output of the scanned
+        chunk instead of a per-round host computation."""
+        n = self.mapping.n_nodes
+        machines = np.array([self.mapping.machine(i) for i in range(n)])
+        same = machines[:, None] == machines[None, :]
+        lat = np.where(same, self.local.latency_s, self.remote.latency_s)
+        gp = np.where(same, self.local.goodput_bps(), self.remote.goodput_bps())
+        return lat.astype(np.float32), gp.astype(np.float32)
 
     def round_time(
         self,

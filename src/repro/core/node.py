@@ -5,83 +5,42 @@ node axis (one mesh slot on TPU, emulated slots on CPU).
 
 The per-round program is exactly Fig. 2 of the paper:
 
-    for round:                      # DecentralizedRunner.run
+    for round:                      # RoundEngine.run
         trainer.train(dataset)      #   local SGD steps      (vmap over nodes)
         to_send = sharing.get()     #   sharing strategy     (core/sharing.py)
         comm.send/recv              #   gossip               (core/mixing.py)
         sharing.aggregate()         #   MH-weighted merge
         dataset.test(model)         #   per-node eval
+
+Execution now lives in ``core/engine.py``: the RoundEngine compiles chunks
+of R rounds into a single ``lax.scan`` (see its module docstring for the
+execution model).  ``DecentralizedRunner`` is kept as a thin wrapper so all
+existing entry points — examples, benchmarks, tests — keep working
+unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import json
-import os
-import time
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sharing as sharing_lib
-from repro.core.secure import SecureAggregation
-from repro.core.topology import Graph, PeerSampler
+# Re-exported for backwards compatibility: these historically lived here.
+from repro.core.engine import DLConfig, RoundEngine, build_graph, build_network  # noqa: F401
 from repro.optim import Optimizer
-from repro.optim.optimizers import apply_updates
-from repro.utils.pytree import tree_unvector, tree_vector
-
-
-@dataclasses.dataclass
-class DLConfig:
-    """Experiment specification (paper Fig. 1 'specifications' input)."""
-
-    n_nodes: int = 16
-    topology: str = "regular"  # ring | regular | fully | star | dynamic | file:<path>
-    degree: int = 5
-    sharing: str = "full"      # full | randomk | topk | choco
-    budget: float = 0.1        # sparsification budget
-    choco_gamma: float = 0.3
-    secure: bool = False       # secure aggregation (masked full sharing)
-    local_steps: int = 1
-    batch_size: int = 8
-    rounds: int = 100
-    eval_every: int = 10
-    seed: int = 0
-    results_dir: Optional[str] = None
-
-
-def build_graph(cfg: DLConfig) -> Optional[Graph]:
-    t = cfg.topology
-    if t == "ring":
-        return Graph.ring(cfg.n_nodes)
-    if t == "regular":
-        return Graph.regular_circulant(cfg.n_nodes, cfg.degree)
-    if t == "random-regular":
-        return Graph.random_regular(cfg.n_nodes, cfg.degree, cfg.seed)
-    if t == "fully":
-        return Graph.fully_connected(cfg.n_nodes)
-    if t == "star":
-        return Graph.star(cfg.n_nodes)
-    if t == "dynamic":
-        return None  # per-round via PeerSampler
-    if t.startswith("file:"):
-        return Graph.from_edge_list(t[5:], cfg.n_nodes)
-    raise ValueError(f"unknown topology {t!r}")
 
 
 class DecentralizedRunner:
-    """Emulates N DL nodes with node-stacked state and a jitted round.
+    """Thin wrapper over :class:`repro.core.engine.RoundEngine`.
 
     loss_fn(params, batch_x, batch_y) -> scalar    (single node)
     acc_fn(params, batch_x, batch_y) -> scalar     (single node)
+    heterogeneous_lrs: optional (N,) per-node learning-rate multipliers.
     """
 
     def __init__(
         self,
         dl: DLConfig,
-        init_params_fn: Callable[[jax.Array], Any],
+        init_params_fn: Callable,
         loss_fn: Callable,
         acc_fn: Callable,
         optimizer: Optimizer,
@@ -89,129 +48,51 @@ class DecentralizedRunner:
         heterogeneous_lrs: Optional[np.ndarray] = None,
     ):
         self.dl = dl
-        self.loss_fn = loss_fn
-        self.acc_fn = acc_fn
-        self.opt = optimizer
-        self.batcher = batcher
-        key = jax.random.key(dl.seed)
-        keys = jax.random.split(key, dl.n_nodes)
-        # fully-decentralized: every node initializes its *own* model
-        self.params = jax.vmap(init_params_fn)(keys)
-        self.opt_state = jax.vmap(self.opt.init)(self.params)
-        self.template = jax.tree_util.tree_map(lambda a: a[0], self.params)
-        self.graph = build_graph(dl)
-        self.sampler = PeerSampler(dl.n_nodes, dl.degree, dl.seed) if dl.topology == "dynamic" else None
-        if dl.secure:
-            assert self.graph is not None, "secure aggregation needs a static graph"
-            self.sharing = SecureAggregation(self.graph.adj)
-        else:
-            kw = {"gamma": dl.choco_gamma} if dl.sharing.startswith("choco") else {}
-            self.sharing = sharing_lib.make_sharing(dl.sharing, dl.budget, **kw)
-        X0 = jax.vmap(tree_vector)(self.params)
-        self.share_state = self.sharing.init_state(X0)
-        self.n_params = int(X0.shape[1])
-        self.history: List[Dict] = []
-        self.bytes_sent = 0.0
-        self._round_jit = jax.jit(self._round)
-        self._eval_jit = jax.jit(self._eval)
-
-    # ------------------------------------------------------------------
-    def _degree(self, graph: Graph) -> float:
-        return float(graph.degrees().mean())
-
-    def _round(self, params, opt_state, share_state, bx, by, W, key):
-        """One DL round: local_steps SGD steps then gossip. bx: (L,N,B,...)."""
-
-        def node_grad(p, x, y):
-            return jax.grad(self.loss_fn)(p, x, y)
-
-        def local_step(carry, batch):
-            params, opt_state = carry
-            x, y = batch
-            grads = jax.vmap(node_grad)(params, x, y)
-            updates, opt_state = jax.vmap(self.opt.update)(grads, opt_state, params)
-            return (apply_updates(params, updates), opt_state), ()
-
-        (params, opt_state), _ = jax.lax.scan(local_step, (params, opt_state), (bx, by))
-
-        X = jax.vmap(tree_vector)(params)
-        X2, share_state, nbytes = self.sharing.round(
-            X, W, share_state, key, degree=float(self._cur_degree)
+        self.engine = RoundEngine(
+            dl, init_params_fn, loss_fn, acc_fn, optimizer, batcher,
+            heterogeneous_lrs=heterogeneous_lrs,
         )
-        params = jax.vmap(lambda v: tree_unvector(v, self.template))(X2)
-        return params, opt_state, share_state, nbytes
 
-    def _eval(self, params, tx, ty):
-        return jax.vmap(lambda p: self.acc_fn(p, tx, ty))(params)
-
-    # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, log: bool = True) -> List[Dict]:
-        dl = self.dl
-        rounds = rounds if rounds is not None else dl.rounds
-        tx, ty = self.batcher.test_batch()
-        tx, ty = jnp.asarray(tx), jnp.asarray(ty)
-        t0 = time.time()
-        for rnd in range(rounds):
-            graph = self.sampler.round_graph(rnd) if self.sampler else self.graph
-            W = jnp.asarray(graph.metropolis_hastings(), jnp.float32)
-            self._cur_degree = self._degree(graph)
-            bxs, bys = [], []
-            for s in range(dl.local_steps):
-                x, y = self.batcher.batch(rnd, s)
-                bxs.append(x)
-                bys.append(y)
-            bx = jnp.asarray(np.stack(bxs))
-            by = jnp.asarray(np.stack(bys))
-            key = jax.random.fold_in(jax.random.key(dl.seed + 17), rnd)
-            if isinstance(self.sharing, SecureAggregation):
-                # masked path is python-scheduled (static pair program)
-                self.params, self.opt_state, self.share_state, nbytes = self._secure_round(
-                    bx, by, W, key, rnd
-                )
-            else:
-                self.params, self.opt_state, self.share_state, nbytes = self._round_jit(
-                    self.params, self.opt_state, self.share_state, bx, by, W, key
-                )
-            self.bytes_sent += float(nbytes)
-            if rnd % dl.eval_every == 0 or rnd == rounds - 1:
-                accs = np.asarray(self._eval_jit(self.params, tx, ty))
-                rec = {
-                    "round": rnd,
-                    "acc_mean": float(accs.mean()),
-                    "acc_std": float(accs.std()),
-                    "bytes_per_node": self.bytes_sent,
-                    "wall_s": time.time() - t0,
-                }
-                self.history.append(rec)
-                if log:
-                    print(
-                        f"[{dl.topology}/{type(self.sharing).__name__}] round {rnd:4d} "
-                        f"acc {rec['acc_mean']:.4f}±{rec['acc_std']:.4f} "
-                        f"MB/node {self.bytes_sent / 1e6:.1f}"
-                    )
-        self._dump_results()
-        return self.history
+        return self.engine.run(rounds, log)
 
-    def _secure_round(self, bx, by, W, key, rnd):
-        def node_grad(p, x, y):
-            return jax.grad(self.loss_fn)(p, x, y)
+    # -- state/metrics live on the engine; expose the historical surface ----
+    @property
+    def params(self):
+        return self.engine.params
 
-        params, opt_state = self.params, self.opt_state
-        for s in range(bx.shape[0]):
-            grads = jax.vmap(node_grad)(params, bx[s], by[s])
-            updates, opt_state = jax.vmap(self.opt.update)(grads, opt_state, params)
-            params = apply_updates(params, updates)
-        X = jax.vmap(tree_vector)(params)
-        X2, st, nbytes = self.sharing.round(
-            X, W, self.share_state, key, degree=self._cur_degree, rnd=rnd
-        )
-        params = jax.vmap(lambda v: tree_unvector(v, self.template))(X2)
-        return params, opt_state, st, nbytes
+    @property
+    def opt_state(self):
+        return self.engine.opt_state
 
-    def _dump_results(self):
-        """Per-node JSON results, DecentralizePy-style (aggregated later)."""
-        if not self.dl.results_dir:
-            return
-        os.makedirs(self.dl.results_dir, exist_ok=True)
-        with open(os.path.join(self.dl.results_dir, "results.json"), "w") as f:
-            json.dump({"config": dataclasses.asdict(self.dl), "history": self.history}, f, indent=1)
+    @property
+    def share_state(self):
+        return self.engine.share_state
+
+    @property
+    def history(self) -> List[Dict]:
+        return self.engine.history
+
+    @property
+    def bytes_sent(self) -> float:
+        return self.engine.bytes_sent
+
+    @property
+    def sim_time_s(self) -> float:
+        return self.engine.sim_time_s
+
+    @property
+    def sharing(self):
+        return self.engine.sharing
+
+    @property
+    def graph(self):
+        return self.engine.graph
+
+    @property
+    def template(self):
+        return self.engine.template
+
+    @property
+    def n_params(self) -> int:
+        return self.engine.n_params

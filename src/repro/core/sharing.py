@@ -11,6 +11,14 @@ fall back to the receiver's own value,
     x_i'[c] = x_i[c] + sum_j W_ij * m_j[c] * (x_j[c] - x_i[c])
 
 which in matrix form is  X' = X + W@(M*X) - X*(W@M).
+
+Every strategy's ``round`` accepts ``degree`` as either a Python float or a
+traced scalar: the RoundEngine scans whole chunks of rounds, so the degree
+(and with participation churn, the *effective* degree) is a per-round
+traced value and byte accounting happens on device.  ``round`` also takes
+the (possibly traced) round index ``rnd`` — used by PRF-keyed strategies
+such as secure aggregation, ignored by the rest — so the engine can call
+every strategy uniformly from inside the scan.
 """
 from __future__ import annotations
 
@@ -42,6 +50,31 @@ def sparse_aggregate(X, W, M):
     return (Xf + Wf @ (Mf * Xf) - Xf * (Wf @ Mf)).astype(X.dtype)
 
 
+def participation_reweight(W, active):
+    """Reweight a row-stochastic mixing matrix for a per-round node
+    participation mask (churn / straggler dropout), fully traceable.
+
+    active: (N,) {0,1} — 0 means the node is down this round: it neither
+    sends nor receives, so every edge touching it is removed and the freed
+    mass returns to each surviving row's diagonal (keeping rows stochastic;
+    for symmetric W the result stays symmetric, hence doubly stochastic on
+    the active subgraph).  A down node's row becomes e_i, i.e. it keeps its
+    own parameters unchanged through the gossip step.
+
+    Returns (W', deg_eff) where deg_eff is the mean number of live outgoing
+    edges per *active* node — the traced degree the byte accounting uses.
+    """
+    Wf = W.astype(jnp.float32)
+    m = active.astype(jnp.float32)
+    n = Wf.shape[0]
+    eye = jnp.eye(n, dtype=jnp.float32)
+    off = Wf * (1.0 - eye) * m[:, None] * m[None, :]
+    Wm = off + jnp.diag(1.0 - off.sum(1))
+    edges = jnp.sum((off > 0).astype(jnp.float32))
+    deg_eff = edges / jnp.maximum(m.sum(), 1.0)
+    return Wm, deg_eff
+
+
 # ---------------------------------------------------------------------------
 # strategies
 # ---------------------------------------------------------------------------
@@ -53,7 +86,7 @@ class FullSharing:
     def init_state(self, X):
         return ()
 
-    def round(self, X, W, state, key, degree: float):
+    def round(self, X, W, state, key, degree, rnd=0):
         X2 = (W.astype(jnp.float32) @ X.astype(jnp.float32)).astype(X.dtype)
         return X2, state, degree * X.shape[1] * BYTES_VAL
 
@@ -67,7 +100,7 @@ class RandomKSharing:
     def init_state(self, X):
         return ()
 
-    def round(self, X, W, state, key, degree: float):
+    def round(self, X, W, state, key, degree, rnd=0):
         k = max(1, int(self.budget * X.shape[1]))
         M = _randk_mask(key, X.shape, k)
         X2 = sparse_aggregate(X, W, M)
@@ -85,7 +118,7 @@ class TopKSharing:
     def init_state(self, X):
         return {"last_shared": X.astype(jnp.float32)}
 
-    def round(self, X, W, state, key, degree: float):
+    def round(self, X, W, state, key, degree, rnd=0):
         k = max(1, int(self.budget * X.shape[1]))
         delta = X.astype(jnp.float32) - state["last_shared"]
         M = _topk_mask(jnp.abs(delta), k)
@@ -111,7 +144,7 @@ class ChocoSGD:
     def init_state(self, X):
         return {"xhat": jnp.zeros_like(X, jnp.float32)}
 
-    def round(self, X, W, state, key, degree: float):
+    def round(self, X, W, state, key, degree, rnd=0):
         k = max(1, int(self.budget * X.shape[1]))
         Xf = X.astype(jnp.float32)
         diff = Xf - state["xhat"]
@@ -138,7 +171,7 @@ class QuantizedSharing:
     def init_state(self, X):
         return ()
 
-    def round(self, X, W, state, key, degree: float):
+    def round(self, X, W, state, key, degree, rnd=0):
         from repro.core.compression import dequantize_int8, quantize_int8
 
         codes, scale = quantize_int8(X, key=key if self.stochastic else None)

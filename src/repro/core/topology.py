@@ -149,6 +149,12 @@ class Graph:
     def remove_edge(self, a: int, b: int) -> None:
         self.adj[a, b] = self.adj[b, a] = False
 
+    def neighbor_table(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded fixed-width neighbor lists — the static schedule the
+        jittable secure-aggregation path and other vectorized per-receiver
+        programs index with.  See :func:`neighbor_table`."""
+        return neighbor_table(self.adj)
+
     # -- mixing weights -------------------------------------------------------
     def metropolis_hastings(self) -> np.ndarray:
         """Symmetric doubly-stochastic mixing matrix W (Xiao–Boyd):
@@ -171,6 +177,25 @@ class Graph:
     def spectral_gap(self) -> float:
         w = np.linalg.eigvalsh(self.metropolis_hastings())
         return 1.0 - max(abs(w[0]), abs(w[-2]))
+
+
+def neighbor_table(adj: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(nbr (N, dmax) int32, valid (N, dmax) bool) padded neighbor lists.
+
+    Rows shorter than dmax are padded with the node's own index (a harmless
+    gather target) and marked invalid.  This rectangular form is what lets
+    per-receiver programs (e.g. the vectorized secure-aggregation mask sum)
+    run under vmap instead of Python loops over ragged neighbor sets.
+    """
+    n = adj.shape[0]
+    dmax = max(int(adj.sum(1).max()) if n else 0, 1)
+    nbr = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, dmax))
+    valid = np.zeros((n, dmax), bool)
+    for r in range(n):
+        ns = np.nonzero(adj[r])[0]
+        nbr[r, : len(ns)] = ns
+        valid[r, : len(ns)] = True
+    return nbr, valid
 
 
 def circulant_offsets(n: int, degree: int) -> List[int]:
@@ -198,3 +223,11 @@ class PeerSampler:
 
     def round_weights(self, round_idx: int) -> np.ndarray:
         return self.round_graph(round_idx).metropolis_hastings()
+
+    def weights_stack(self, start: int, n_rounds: int) -> np.ndarray:
+        """(R, N, N) float32 stack of per-round mixing matrices for rounds
+        [start, start + n_rounds) — pre-generated on the host so a whole
+        scan chunk threads W as a traced value (no per-round recompiles)."""
+        return np.stack(
+            [self.round_weights(start + r) for r in range(n_rounds)]
+        ).astype(np.float32)

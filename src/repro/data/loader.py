@@ -18,8 +18,22 @@ class NodeBatcher:
         self.seed = seed
         self.n_nodes = len(parts)
 
+        lens = np.array([len(p) for p in parts], np.int64)
+        if (lens == 0).any():
+            raise ValueError(
+                f"empty partition for node(s) {np.nonzero(lens == 0)[0].tolist()}: "
+                "n_nodes * shards_per_node exceeds the dataset size"
+            )
+        pad = np.zeros((self.n_nodes, int(lens.max())), np.int64)
+        for i, p in enumerate(parts):
+            pad[i, : len(p)] = p
+            pad[i, len(p):] = p[0]
+        self._lens, self._parts_pad = lens, pad
+
     def batch(self, round_idx: int, step: int = 0):
-        """-> (xs (N,B,...), ys (N,B,...)) sampled with replacement per node."""
+        """-> (xs (N,B,...), ys (N,B,...)) sampled per node — without
+        replacement when the partition holds >= batch_size samples (used by
+        the FL runner; the engine paths sample via round_indices)."""
         xs, ys = [], []
         for i, part in enumerate(self.parts):
             rng = np.random.default_rng(
@@ -29,6 +43,29 @@ class NodeBatcher:
             xs.append(self.x[take])
             ys.append(self.y[take])
         return np.stack(xs), np.stack(ys)
+
+    def round_indices(self, round_idx: int, steps: int = 1) -> np.ndarray:
+        """(steps, N, B) int32 global sample indices for one round, drawn
+        uniformly (with replacement) from each node's partition with ONE
+        vectorized generator.  Deterministic per round — independent of how
+        rounds are grouped into chunks — so scanned execution samples the
+        same data regardless of chunk size."""
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + round_idx) * 1_000_003 + 99_991
+        )
+        u = rng.random((steps, self.n_nodes, self.bs))
+        loc = (u * self._lens[None, :, None]).astype(np.int64)
+        return self._parts_pad[
+            np.arange(self.n_nodes)[None, :, None], loc
+        ].astype(np.int32)
+
+    def chunk_indices(self, start_round: int, n_rounds: int, steps: int = 1) -> np.ndarray:
+        """(R, steps, N, B) int32 indices for rounds [start, start+R) — the
+        host side of the engine's pre-stacked-on-device batching: only these
+        indices cross to the device; the dataset lives there already."""
+        return np.stack(
+            [self.round_indices(start_round + r, steps) for r in range(n_rounds)]
+        )
 
     def test_batch(self, max_n: int = 512):
         return self.x[:max_n], self.y[:max_n]

@@ -61,6 +61,9 @@ def main():
                     choices=["ring", "regular", "fully"])
     ap.add_argument("--degree", type=int, default=5)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "momentum", "adamw"])
+    ap.add_argument("--chunk-steps", type=int, default=8,
+                    help="steps compiled into one lax.scan dispatch "
+                         "(RoundEngine-style chunking; 1 = per-step dispatch)")
     ap.add_argument("--ckpt-dir", default="results/train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
@@ -84,8 +87,23 @@ def main():
 
     tc = TrainConfig(n_nodes=N, topology=args.topology, degree=args.degree,
                      mixing_impl="roll", grad_clip=1.0)
-    step_fn = jax.jit(make_train_step(cfg, opt, tc))
+    step_fn = make_train_step(cfg, opt, tc)
     batch_fn = build_lm_batcher(cfg, N, args.batch, args.seq)
+
+    # RoundEngine-style chunking: scan `chunk` steps per dispatch over
+    # host-pre-stacked token batches (tokens are tiny; the models are not).
+    # Per-step losses are still collected, so the logging cadence is intact.
+    def chunk_fn(params, opt_state, batches):
+        def body(carry, batch):
+            params, opt_state = carry
+            params, opt_state, loss = step_fn(params, opt_state, batch)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(body, (params, opt_state), batches)
+        return params, opt_state, losses
+
+    chunk_jit = jax.jit(chunk_fn)
+    chunk = max(args.chunk_steps, 1)
 
     start = 0
     if args.resume and latest_checkpoint(args.ckpt_dir) is not None:
@@ -97,15 +115,24 @@ def main():
     os.makedirs(args.ckpt_dir, exist_ok=True)
     hist = []
     t0 = time.time()
-    for step in range(start, args.steps):
-        batch = batch_fn(step)
-        params, opt_state, loss = step_fn(params, opt_state, batch)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            l = float(loss)
-            hist.append({"step": step, "loss": l, "wall_s": time.time() - t0})
-            print(f"[train] step {step:5d} loss {l:.4f} "
-                  f"({(time.time() - t0) / max(step - start + 1, 1):.2f}s/step)", flush=True)
-        if step and step % args.ckpt_every == 0:
+    step = start
+    while step < args.steps:
+        r = min(chunk, args.steps - step)
+        batches = jax.tree_util.tree_map(
+            lambda *bs: jnp.stack(bs), *[batch_fn(step + s) for s in range(r)]
+        )
+        params, opt_state, losses = chunk_jit(params, opt_state, batches)
+        losses = np.asarray(losses)
+        for s in range(r):
+            gstep = step + s
+            if gstep % args.log_every == 0 or gstep == args.steps - 1:
+                l = float(losses[s])
+                hist.append({"step": gstep, "loss": l, "wall_s": time.time() - t0})
+                print(f"[train] step {gstep:5d} loss {l:.4f} "
+                      f"({(time.time() - t0) / max(gstep - start + 1, 1):.2f}s/step)",
+                      flush=True)
+        step += r
+        if (step // args.ckpt_every) > ((step - r) // args.ckpt_every) and step < args.steps:
             save_checkpoint(args.ckpt_dir, step, params=params)
     save_checkpoint(args.ckpt_dir, args.steps, params=params)
     with open(os.path.join(args.ckpt_dir, "history.json"), "w") as f:

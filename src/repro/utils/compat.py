@@ -1,0 +1,22 @@
+"""Version-compat helpers for the jax API surface.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` (and its
+``check_rep`` kwarg became ``check_vma``) in newer jax releases; the
+container pins an older jax.  Import :func:`shard_map` from here instead of
+from jax directly so both API generations work.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map_experimental(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )

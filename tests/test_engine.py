@@ -1,0 +1,236 @@
+"""RoundEngine: chunk-size invariance, participation (churn) semantics,
+heterogeneous per-node learning rates, secure-in-scan, simulated time."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DLConfig, DecentralizedRunner, RoundEngine, participation_reweight
+from repro.core.topology import Graph
+from repro.data import NodeBatcher, make_dataset, sharding_partition
+from repro.models.api import cross_entropy
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.optim import make_optimizer
+
+
+def _setup(n_nodes=8, n_train=512, bs=8, hidden=32):
+    ds = make_dataset("cifar10", n_train=n_train, n_test=128, sigma=0.8,
+                      shape=(8, 8, 3))
+    parts = sharding_partition(ds.train_y, n_nodes, 2, seed=0)
+    batcher = NodeBatcher(ds.train_x, ds.train_y, parts, bs, seed=0)
+
+    def loss_fn(p, x, y):
+        return cross_entropy(mlp_apply(p, x), y)
+
+    def acc_fn(p, x, y):
+        return (mlp_apply(p, x).argmax(-1) == y).mean()
+
+    init = lambda k: mlp_init(k, in_dim=8 * 8 * 3, hidden=hidden)
+    return init, loss_fn, acc_fn, batcher
+
+
+def _engine(dl, hlrs=None, opt=None):
+    init, loss, acc, batcher = _setup(n_nodes=dl.n_nodes)
+    return RoundEngine(dl, init, loss, acc, opt or make_optimizer("sgd", 0.05),
+                       batcher, heterogeneous_lrs=hlrs)
+
+
+def _flat(params):
+    return np.concatenate([np.asarray(l).reshape(-1)
+                           for l in jax.tree_util.tree_leaves(params)])
+
+
+class TestChunkInvariance:
+    def test_chunk_sizes_give_identical_trajectories(self):
+        """Scanned execution is a pure re-batching of the same per-round
+        program: chunk sizes 1, 3, 8 must produce identical params/bytes."""
+        results = {}
+        for chunk in (0, 1, 3, 8):  # 0 = legacy per-round dispatch
+            dl = DLConfig(n_nodes=8, topology="regular", degree=4, rounds=8,
+                          eval_every=4, local_steps=2, chunk_rounds=chunk)
+            e = _engine(dl)
+            e.run(log=False)
+            results[chunk] = (_flat(e.params), e.bytes_sent)
+        base, base_bytes = results[1]
+        for chunk in (0, 3, 8):
+            got, got_bytes = results[chunk]
+            np.testing.assert_allclose(got, base, rtol=2e-5, atol=1e-6)
+            assert got_bytes == pytest.approx(base_bytes, rel=1e-6)
+
+    def test_history_cadence_matches_legacy(self):
+        dl = DLConfig(n_nodes=8, rounds=11, eval_every=4, chunk_rounds=8)
+        e = _engine(dl)
+        hist = e.run(log=False)
+        assert [h["round"] for h in hist] == [0, 4, 8, 10]
+
+
+class TestParticipationReweight:
+    def test_full_participation_is_identity_on_edges(self):
+        g = Graph.regular_circulant(8, 4)
+        W = jnp.asarray(g.metropolis_hastings(), jnp.float32)
+        Wm, deg = participation_reweight(W, jnp.ones(8))
+        np.testing.assert_allclose(np.asarray(Wm), np.asarray(W), atol=1e-6)
+        assert float(deg) == pytest.approx(4.0)
+
+    def test_down_nodes_become_identity_rows(self):
+        g = Graph.regular_circulant(8, 4)
+        W = jnp.asarray(g.metropolis_hastings(), jnp.float32)
+        act = jnp.asarray([1, 1, 0, 1, 1, 0, 1, 1], jnp.float32)
+        Wm, deg = participation_reweight(W, act)
+        Wm = np.asarray(Wm)
+        for i in (2, 5):
+            want = np.zeros(8)
+            want[i] = 1.0
+            np.testing.assert_allclose(Wm[i], want, atol=1e-6)
+            np.testing.assert_allclose(Wm[:, i], want, atol=1e-6)  # symmetric
+        np.testing.assert_allclose(Wm.sum(1), np.ones(8), atol=1e-5)
+        # effective degree only counts live-live edges, averaged over live nodes
+        assert float(deg) < 4.0
+
+    def test_churn_run_sends_fewer_bytes(self):
+        accs = {}
+        byts = {}
+        for p in (1.0, 0.5):
+            dl = DLConfig(n_nodes=8, topology="regular", degree=4, rounds=6,
+                          eval_every=5, participation=p, seed=3)
+            e = _engine(dl)
+            e.run(log=False)
+            byts[p] = e.bytes_sent
+            accs[p] = e.history[-1]["acc_mean"]
+        assert byts[0.5] < 0.7 * byts[1.0]
+        assert accs[0.5] > 0.1  # still trains
+
+    @pytest.mark.parametrize("sharing", ["full", "quant"])
+    def test_down_node_params_frozen_through_round(self, sharing):
+        """A node that never participates keeps its initial params — even
+        for strategies like quant whose identity-row aggregation would
+        otherwise hand it a lossy roundtrip of its own params."""
+        dl = DLConfig(n_nodes=4, topology="fully", rounds=3, eval_every=2,
+                      participation=0.5, seed=0, sharing=sharing)
+        e = _engine(dl)
+        p0 = jax.tree_util.tree_map(np.asarray, e.params)
+        masks = e._participation_mask(0, 3)
+        e.run(log=False)
+        never_active = np.nonzero(~masks.any(0).astype(bool))[0]
+        for i in never_active:
+            for a, b in zip(jax.tree_util.tree_leaves(p0),
+                            jax.tree_util.tree_leaves(e.params)):
+                np.testing.assert_allclose(np.asarray(b)[i], a[i], atol=1e-6)
+
+    def test_down_node_sharing_state_frozen(self):
+        """A down node transmits nothing, so its sharing bookkeeping (TopK
+        last_shared) must not advance for that round."""
+        dl = DLConfig(n_nodes=4, topology="fully", rounds=3, eval_every=2,
+                      participation=0.5, sharing="topk", budget=0.2, seed=0)
+        e = _engine(dl)
+        s0 = np.asarray(e.share_state["last_shared"]).copy()
+        masks = e._participation_mask(0, 3)
+        e.run(log=False)
+        never_active = np.nonzero(~masks.any(0).astype(bool))[0]
+        s1 = np.asarray(e.share_state["last_shared"])
+        for i in never_active:
+            np.testing.assert_allclose(s1[i], s0[i], atol=1e-6)
+
+    def test_secure_plus_churn_rejected(self):
+        dl = DLConfig(n_nodes=8, topology="regular", degree=4, secure=True,
+                      participation=0.9)
+        with pytest.raises(ValueError):
+            _engine(dl)
+
+
+class TestHeterogeneousLRs:
+    def test_zero_scales_equal_zero_lr(self):
+        dl = DLConfig(n_nodes=8, topology="regular", degree=4, rounds=4,
+                      eval_every=3)
+        e0 = _engine(dl, hlrs=np.zeros(8), opt=make_optimizer("sgd", 0.05))
+        e0.run(log=False)
+        e1 = _engine(dl, opt=make_optimizer("sgd", 0.0))
+        e1.run(log=False)
+        np.testing.assert_allclose(_flat(e0.params), _flat(e1.params),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_unit_scales_equal_default(self):
+        dl = DLConfig(n_nodes=8, topology="regular", degree=4, rounds=4,
+                      eval_every=3)
+        e0 = _engine(dl, hlrs=np.ones(8))
+        e0.run(log=False)
+        e1 = _engine(dl)
+        e1.run(log=False)
+        np.testing.assert_allclose(_flat(e0.params), _flat(e1.params),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_runner_forwards_heterogeneous_lrs(self):
+        init, loss, acc, batcher = _setup()
+        dl = DLConfig(n_nodes=8, topology="regular", degree=4, rounds=2,
+                      eval_every=1)
+        r = DecentralizedRunner(dl, init, loss, acc, make_optimizer("sgd", 0.05),
+                                batcher, heterogeneous_lrs=np.zeros(8))
+        assert r.engine.lr_scales is not None
+        r.run(log=False)
+
+    def test_bad_shape_rejected(self):
+        dl = DLConfig(n_nodes=8)
+        with pytest.raises(AssertionError):
+            _engine(dl, hlrs=np.ones(4))
+
+
+class TestSecureInScan:
+    def test_secure_runs_through_chunked_scan(self):
+        """secure=True goes through the same compiled chunk path and keeps
+        the paper's 3% byte overhead and the plain-MH trajectory."""
+        hists = {}
+        byts = {}
+        for secure in (False, True):
+            dl = DLConfig(n_nodes=8, topology="regular", degree=4, rounds=8,
+                          eval_every=7, secure=secure, seed=5, chunk_rounds=4)
+            e = _engine(dl)
+            assert e.chunk == 4
+            hists[secure] = e.run(log=False)
+            byts[secure] = e.bytes_sent
+        assert byts[True] == pytest.approx(1.03 * byts[False], rel=1e-6)
+        assert abs(hists[True][-1]["acc_mean"] - hists[False][-1]["acc_mean"]) < 0.06
+
+
+class TestSimulatedTime:
+    def test_sim_time_collected_per_chunk(self):
+        dl = DLConfig(n_nodes=8, topology="regular", degree=4, rounds=4,
+                      eval_every=3, network="lan", compute_time_s=0.01)
+        e = _engine(dl)
+        hist = e.run(log=False)
+        assert e.sim_time_s > 4 * 0.01  # at least compute time per round
+        assert hist[-1]["sim_time_s"] == pytest.approx(e.sim_time_s)
+
+    def test_denser_topology_takes_longer_simulated(self):
+        """Paper Fig. 3b inside the engine: fully-connected rounds cost more
+        simulated wall-clock than ring at equal round count."""
+        times = {}
+        for topo in ("ring", "fully"):
+            dl = DLConfig(n_nodes=16, topology=topo, rounds=3, eval_every=2,
+                          network="lan")
+            e = _engine(dl)
+            e.run(log=False)
+            times[topo] = e.sim_time_s
+        assert times["fully"] > 2.5 * times["ring"]
+
+    def test_wan_slower_than_lan(self):
+        times = {}
+        for net in ("lan", "wan"):
+            dl = DLConfig(n_nodes=8, topology="regular", degree=4, rounds=3,
+                          eval_every=2, network=net)
+            e = _engine(dl)
+            e.run(log=False)
+            times[net] = e.sim_time_s
+        assert times["wan"] > 5 * times["lan"]
+
+
+class TestLegacyPath:
+    def test_legacy_dispatch_still_works(self):
+        dl = DLConfig(n_nodes=8, topology="regular", degree=4, rounds=4,
+                      eval_every=3, chunk_rounds=0)
+        e = _engine(dl)
+        assert e.chunk == 0
+        hist = e.run(log=False)
+        assert [h["round"] for h in hist] == [0, 3]
+        assert e.bytes_sent > 0

@@ -69,3 +69,51 @@ class TestRoundTime:
         assert net.experiment_time(g, 1e6, 0.01, 100) == pytest.approx(
             100 * net.round_time(g, 1e6, 0.01)
         )
+
+    def test_parallel_sends_bounded_by_serialized(self):
+        """Dedicated-NIC overlap: per-node comm is the max link time, so a
+        d-regular round collapses to ~one link time instead of d."""
+        n = 16
+        g = Graph.regular_circulant(n, 4)
+        net = NetworkModel(Mapping(n, n))  # all links identical (LAN)
+        nbytes = 4e6
+        t_ser = net.round_time(g, nbytes, parallel_sends=False)
+        t_par = net.round_time(g, nbytes, parallel_sends=True)
+        assert t_par <= t_ser
+        assert t_ser == pytest.approx(4 * t_par)  # equal links: sum = d * max
+
+    def test_parallel_equals_serialized_for_single_neighbor(self):
+        g = Graph.ring(2)  # each node has exactly one neighbor
+        net = NetworkModel(Mapping(2, 2))
+        assert net.round_time(g, 1e6, parallel_sends=True) == pytest.approx(
+            net.round_time(g, 1e6, parallel_sends=False)
+        )
+
+    def test_drop_rate_derates_round_time(self):
+        n = 8
+        g = Graph.ring(n)
+        clean = NetworkModel(Mapping(n, n), remote=LinkSpec(1e9, 0.0))
+        lossy = NetworkModel(Mapping(n, n), remote=LinkSpec(1e9, 0.0, drop_rate=0.5))
+        assert lossy.round_time(g, 1e6) == pytest.approx(2 * clean.round_time(g, 1e6))
+
+    def test_empty_neighbor_set_costs_compute_only(self):
+        """A disconnected node sends nothing: round time = compute time."""
+        n = 4
+        g = Graph(np.zeros((n, n), bool))
+        net = paper_testbed(n)
+        assert net.round_time(g, 1e9, compute_time_s=0.25) == pytest.approx(0.25)
+        assert net.round_time(g, 1e9) == 0.0
+
+
+class TestLinkMatrices:
+    def test_matrices_match_link(self):
+        net = paper_testbed(6)
+        lat, gp = net.matrices()
+        assert lat.shape == gp.shape == (6, 6)
+        for i in range(6):
+            for j in range(6):
+                spec = net.link(i, j)
+                assert lat[i, j] == pytest.approx(spec.latency_s)
+                assert gp[i, j] == pytest.approx(
+                    spec.bandwidth_bps * max(1 - spec.drop_rate, 1e-3), rel=1e-6
+                )

@@ -135,12 +135,13 @@ class TestRooflineParser:
             import jax, jax.numpy as jnp
             from jax.sharding import PartitionSpec as P
             from repro.launch.roofline import parse_collective_bytes
+            from repro.utils.compat import shard_map
             mesh = jax.make_mesh((4,), ("d",))
             def f(x):
                 y = jax.lax.psum(x, "d")
                 z = jax.lax.ppermute(x, "d", [(i, (i+1) % 4) for i in range(4)])
                 return y + z
-            fn = jax.shard_map(f, mesh=mesh, in_specs=P(None), out_specs=P(None),
+            fn = shard_map(f, mesh=mesh, in_specs=P(None), out_specs=P(None),
                                check_vma=False)
             x = jax.ShapeDtypeStruct((1024,), jnp.float32)
             hlo = jax.jit(fn).lower(x).compile().as_text()
