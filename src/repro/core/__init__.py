@@ -1,9 +1,19 @@
 # The paper's primary contribution: decentralized learning as a composable
 # JAX feature — overlay topologies, gossip mixing, sparsified sharing,
 # secure aggregation, and the node/runner that ties them together.
-from repro.core.topology import Graph, PeerSampler, circulant_offsets, neighbor_table
+from repro.core.topology import (
+    Graph,
+    PeerSampler,
+    SparseTopology,
+    circulant_offsets,
+    mh_weight_table,
+    neighbor_table,
+    random_regular_neighbors,
+)
 from repro.core.mixing import (
+    apply_W,
     mix_dense,
+    mix_sparse,
     mix_fully,
     mix_circulant,
     mix_circulant_shmap,
@@ -17,6 +27,7 @@ from repro.core.sharing import (
     QuantizedSharing,
     make_sharing,
     participation_reweight,
+    participation_reweight_sparse,
     sparse_aggregate,
 )
 from repro.core.network import (

@@ -11,12 +11,20 @@ The engine executes rounds in **chunks of R rounds compiled into a single
   int32 index tensor per chunk (``NodeBatcher.chunk_indices``) and each
   scanned round gathers its batch with one ``take``.  No per-round
   host->device batch transfer, no per-round ``np.stack``.
-* **Mixing matrices are traced scan inputs.**  Per-round W for dynamic
-  topologies is pre-generated as an ``(R, N, N)`` stack
-  (``PeerSampler.weights_stack``) and threaded through the scan as a traced
-  value; static topologies broadcast one W.  The mean degree used for byte
-  accounting is likewise a traced per-round scalar — this removes the old
-  ``self._cur_degree`` Python-closure recompile hazard in ``core/node.py``.
+* **Mixing topologies are traced scan inputs — sparse by default.**  For
+  sparse overlays (ring, d-regular, the paper's dynamic 5-regular: d ≪ N)
+  the round program mixes in neighbor-indexed form: a ``SparseTopology``
+  of padded (N, D) neighbor + weight tables, gathered and contracted in
+  O(N·D·P) instead of the dense O(N²·P) ``W @ X``.  Dynamic topologies
+  stage an (R, N, D) per-chunk table stack (``PeerSampler.sparse_stack``,
+  O(N·d) per round) instead of the (R, N, N) ``weights_stack``, so chunk
+  length no longer shrinks under the W-stack byte cap at N=1024+.  The
+  dense path survives behind ``mixing="dense"`` — the right lowering for
+  ``fully``/``star`` (D ≈ N) and the equivalence oracle the sparse path is
+  property-tested against; ``mixing="auto"`` (default) picks per topology.
+  Either way the per-round mixing operand is a traced scan input, so
+  dynamic topologies never recompile, and the mean degree used for byte
+  accounting is a traced per-round scalar.
 * **Metrics are traced per-round outputs.**  Bytes-sent and (when a
   ``NetworkModel`` is configured) the simulated synchronous-round
   wall-clock are collected by the scan as ``(R,)`` arrays and synced to the
@@ -27,8 +35,13 @@ The engine executes rounds in **chunks of R rounds compiled into a single
   loop as every other sharing strategy.
 * **Participation masks (churn / stragglers).**  An ``(R, N)`` per-round
   activity mask is threaded through the scan; down nodes skip their local
-  update and are cut out of W on the fly (``sharing.participation_reweight``),
-  with the freed mass returned to the surviving diagonals.
+  update and are cut out of the mixing operand on the fly
+  (``sharing.participation_reweight`` dense, ``participation_reweight_sparse``
+  for neighbor tables — slot masking, freed mass back to the diagonal),
+  with byte accounting following the effective degree.  Masks come from a
+  single batched counter-based draw per chunk (splitmix64 over (seed,
+  absolute round, node)), so they are chunk-boundary invariant without a
+  per-round ``default_rng`` host loop.
 
 Chunk boundaries are aligned to the eval cadence, so the recorded history
 is identical to per-round execution; distinct chunk lengths (full chunks
@@ -52,14 +65,15 @@ import numpy as np
 from repro.core import sharing as sharing_lib
 from repro.core.network import NetworkModel, paper_testbed, wan_deployment
 from repro.core.secure import SecureAggregation
-from repro.core.sharing import participation_reweight
-from repro.core.topology import Graph, PeerSampler
+from repro.core.sharing import participation_reweight, participation_reweight_sparse
+from repro.core.topology import Graph, PeerSampler, SparseTopology
 from repro.optim import Optimizer
 from repro.optim.optimizers import apply_updates
 from repro.utils.pytree import tree_unvector, tree_vector
 
-# cap on the (R, N, N) mixing-matrix stack a single chunk materializes;
-# chunks shrink automatically at very large N.
+# cap on the (R, N, N) mixing-matrix stack a single *dense-path* chunk
+# materializes; dense chunks shrink automatically at very large N.  The
+# sparse path stages O(N·d) tables per round and is exempt.
 _W_STACK_BYTES_CAP = 64 * 1024 * 1024
 # cap on the pre-gathered (R, L, N, B, ...) batch stack; above it the scan
 # falls back to gathering each round's batch inside the loop body.
@@ -85,6 +99,7 @@ class DLConfig:
     results_dir: Optional[str] = None
     # --- engine (scan) execution ------------------------------------------
     chunk_rounds: int = 8      # rounds per compiled lax.scan chunk; 0 = legacy
+    mixing: str = "auto"       # auto | sparse (neighbor tables) | dense (N,N W)
     # --- scenario axes -----------------------------------------------------
     participation: float = 1.0  # P(node active in a round); <1 models churn
     network: str = "none"       # simulated network: none | lan | wan
@@ -174,14 +189,28 @@ class RoundEngine:
         X0 = jax.vmap(tree_vector)(self.params)
         self.share_state = self.sharing.init_state(X0)
         self.n_params = int(X0.shape[1])
+        self.mix_mode = self._resolve_mix_mode()
+        # peak host->device bytes staged per chunk (or once, if static) for
+        # the mixing topology — O(N·d) sparse vs 4·N² dense; the perf gate
+        # benchmarks record it
+        self.topo_stage_bytes_peak = 0
         if self.graph is not None:
-            self._W_np = self.graph.metropolis_hastings().astype(np.float32)
-            # static topology: W is a captured device constant of the scan,
-            # not a per-chunk (R, N, N) host transfer
-            self._W_dev = jnp.asarray(self._W_np)
             self._mean_degree = float(self.graph.degrees().mean())
+            # static topology: the mixing operand is a captured device
+            # constant of the scan, not a per-chunk host transfer
+            if self.mix_mode == "sparse":
+                # never materialize the (N, N) W on the sparse path
+                st = SparseTopology.from_graph(self.graph)
+                self._mix_static = SparseTopology(
+                    jnp.asarray(st.nbr), jnp.asarray(st.w), jnp.asarray(st.w_self)
+                )
+                self.topo_stage_bytes_peak = st.stage_bytes()
+            else:
+                W_np = self.graph.metropolis_hastings().astype(np.float32)
+                self._mix_static = jnp.asarray(W_np)
+                self.topo_stage_bytes_peak = int(W_np.nbytes)
         else:
-            self._W_np = self._W_dev = None
+            self._mix_static = None
             self._mean_degree = float(dl.degree)  # PeerSampler is d-regular
         self.network_model = build_network(dl)
         if self.network_model is not None:
@@ -197,17 +226,33 @@ class RoundEngine:
         n = dl.n_nodes
         if dl.chunk_rounds <= 0:
             self.chunk = 0
-        elif self.sampler is not None:
-            # dynamic topologies stage an (R, N, N) W stack per chunk; bound it
+        elif self.sampler is not None and self.mix_mode == "dense":
+            # dense dynamic topologies stage an (R, N, N) W stack per chunk;
+            # bound it.  (The sparse path stages (R, N, D) — no cap needed,
+            # chunks stay full-length at N=1024+.)
             self.chunk = max(1, min(dl.chunk_rounds, _W_STACK_BYTES_CAP // (4 * n * n)))
         else:
-            self.chunk = dl.chunk_rounds  # static W is a captured constant
+            self.chunk = dl.chunk_rounds
         self.history: List[Dict] = []
         self.bytes_sent = 0.0
         self.sim_time_s = 0.0
         self._chunk_jit = jax.jit(self._chunk_fn)
         self._legacy_jit = jax.jit(self._legacy_round)
         self._eval_jit = jax.jit(self._eval)
+
+    def _resolve_mix_mode(self) -> str:
+        """'sparse' (neighbor-indexed O(N·d·P) gossip) for sparse overlays,
+        'dense' (W @ X) where the graph is effectively complete."""
+        m = self.dl.mixing
+        if m not in ("auto", "sparse", "dense"):
+            raise ValueError(f"unknown mixing mode {m!r} (auto|sparse|dense)")
+        if m != "auto":
+            return m
+        if self.dl.topology in ("fully", "star"):
+            return "dense"  # D ~ N: padded tables would be the dense matrix
+        if self.graph is not None and int(self.graph.degrees().max()) >= self.dl.n_nodes - 1:
+            return "dense"
+        return "sparse"
 
     # ------------------------------------------------------------------
     # traced round program (shared by scan body and legacy dispatch)
@@ -248,12 +293,22 @@ class RoundEngine:
 
     def _round_time(self, Wm, active, nbytes, deg_eff):
         """Simulated synchronous-round wall-clock, traced (network.py's
-        round_time vectorized over the reweighted mixing matrix)."""
-        n = Wm.shape[0]
-        offdiag = 1.0 - jnp.eye(n, dtype=jnp.float32)
-        A = (Wm * offdiag > 0).astype(jnp.float32)
+        round_time vectorized over the reweighted mixing operand).  For a
+        SparseTopology the per-edge latency/goodput are gathered through the
+        neighbor table — O(N·D) — instead of masking (N, N) matrices."""
         per_edge = jnp.where(deg_eff > 0, nbytes / jnp.maximum(deg_eff, 1e-9), 0.0)
-        t_edge = self._lat + per_edge * 8.0 / self._goodput
+        if isinstance(Wm, SparseTopology):
+            rows = jnp.arange(Wm.nbr.shape[0])[:, None]
+            A = (Wm.w > 0).astype(jnp.float32)  # live edge slots post-reweight
+            t_edge = (
+                self._lat[rows, Wm.nbr]
+                + per_edge * 8.0 / self._goodput[rows, Wm.nbr]
+            )
+        else:
+            n = Wm.shape[0]
+            offdiag = 1.0 - jnp.eye(n, dtype=jnp.float32)
+            A = (Wm * offdiag > 0).astype(jnp.float32)
+            t_edge = self._lat + per_edge * 8.0 / self._goodput
         if self.dl.parallel_sends:
             comm = jnp.max(A * t_edge, axis=1)
         else:
@@ -270,7 +325,10 @@ class RoundEngine:
         key = jax.random.fold_in(self._base_key, rnd)
         params, opt_state = self._local_train(params, opt_state, bx, by, active)
         if active is not None:
-            Wm, deg_eff = participation_reweight(W, active)
+            if isinstance(W, SparseTopology):
+                Wm, deg_eff = participation_reweight_sparse(W, active)
+            else:
+                Wm, deg_eff = participation_reweight(W, active)
         else:
             Wm, deg_eff = W, self._mean_degree
         X = jax.vmap(tree_vector)(params)
@@ -301,13 +359,15 @@ class RoundEngine:
 
     def _chunk_fn(self, params, opt_state, share_state, xs):
         """R rounds in one lax.scan.  ``xs`` is a dict of per-round scan
-        inputs: always idx (R,L,N,B) int32 and rnd (R,) int32; plus W
-        (R,N,N) f32 for dynamic topologies (static W is a captured device
-        constant) and act (R,N) f32 when participation < 1."""
+        inputs: always idx (R,L,N,B) int32 and rnd (R,) int32; plus, for
+        dynamic topologies, ``mix`` — an (R,N,N) f32 W stack (dense mode)
+        or an (R,N,D) SparseTopology table stack (sparse mode); static
+        topologies capture one device-constant mixing operand.  ``act``
+        (R,N) f32 rides along when participation < 1."""
 
         def body(carry, xs_r):
             params, opt_state, share_state = carry
-            W = xs_r["W"] if "W" in xs_r else self._W_dev
+            W = xs_r["mix"] if "mix" in xs_r else self._mix_static
             act = xs_r.get("act")
             if "bx" in xs_r:  # chunk batches pre-gathered on device
                 bx, by = xs_r["bx"], xs_r["by"]
@@ -333,25 +393,52 @@ class RoundEngine:
     # ------------------------------------------------------------------
     # host-side chunk staging
     # ------------------------------------------------------------------
-    def _round_W(self, rnd: int) -> np.ndarray:
-        if self.sampler is not None:
-            return self.sampler.round_weights(rnd).astype(np.float32)
-        return self._W_np
+    def _round_mix(self, rnd: int):
+        """Device mixing operand for one round (legacy per-round dispatch):
+        dense (N, N) W or SparseTopology neighbor tables, matching the mode
+        the scanned path uses so both execute the identical workload."""
+        if self.sampler is None:
+            return self._mix_static
+        if self.mix_mode == "sparse":
+            t = self.sampler.round_table(rnd)
+            return SparseTopology(
+                jnp.asarray(t.nbr), jnp.asarray(t.w), jnp.asarray(t.w_self)
+            )
+        return jnp.asarray(self.sampler.round_weights(rnd).astype(np.float32))
 
     def _participation_mask(self, start: int, n_rounds: int) -> np.ndarray:
+        """(R, N) {0,1} activity masks for rounds [start, start+n_rounds).
+
+        One batched counter-based draw (splitmix64 hash over (seed,
+        absolute round, node)) — each round's randomness is a pure function
+        of its absolute index, so masks are chunk-boundary invariant, with
+        no per-round ``default_rng`` host loop.  Column n holds each
+        round's fallback draw: if every node sampled down, one node
+        (uniform via that draw) is kept alive.
+        """
         n = self.dl.n_nodes
         if self.dl.participation >= 1.0:
             return np.ones((n_rounds, n), np.float32)
-        out = np.empty((n_rounds, n), np.float32)
-        for r in range(n_rounds):
-            rng = np.random.default_rng(
-                (self.dl.seed * 1_000_003 + start + r) * 1_000_003 + 7_919
+        with np.errstate(over="ignore"):  # uint64 wraparound is the point
+            x = (
+                np.uint64(self.dl.seed * 1_000_003 + 7_919)
+                * np.uint64(0x9E3779B97F4A7C15)
+                + np.arange(start, start + n_rounds, dtype=np.uint64)[:, None]
+                * np.uint64(0xBF58476D1CE4E5B9)
+                + np.arange(n + 1, dtype=np.uint64)[None, :]
+                * np.uint64(0x94D049BB133111EB)
             )
-            m = rng.random(n) < self.dl.participation
-            if not m.any():  # keep at least one node alive per round
-                m[rng.integers(0, n)] = True
-            out[r] = m
-        return out
+            x ^= x >> np.uint64(30)
+            x *= np.uint64(0xBF58476D1CE4E5B9)
+            x ^= x >> np.uint64(27)
+            x *= np.uint64(0x94D049BB133111EB)
+            x ^= x >> np.uint64(31)
+        u = (x >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
+        m = u[:, :n] < self.dl.participation
+        dead = ~m.any(1)
+        if dead.any():  # keep at least one node alive per round
+            m[dead, (u[dead, n] * n).astype(np.int64)] = True
+        return m.astype(np.float32)
 
     def _run_chunk(self, start: int, n_rounds: int):
         dl = self.dl
@@ -367,7 +454,17 @@ class RoundEngine:
         else:
             xs["idx"] = jnp.asarray(idx)
         if self.sampler is not None:
-            xs["W"] = jnp.asarray(self.sampler.weights_stack(start, n_rounds))
+            if self.mix_mode == "sparse":
+                st = self.sampler.sparse_stack(start, n_rounds)  # (R, N, D)
+                xs["mix"] = SparseTopology(
+                    jnp.asarray(st.nbr), jnp.asarray(st.w), jnp.asarray(st.w_self)
+                )
+                staged = st.stage_bytes()
+            else:
+                Wst = self.sampler.weights_stack(start, n_rounds)  # (R, N, N)
+                xs["mix"] = jnp.asarray(Wst)
+                staged = int(Wst.nbytes)
+            self.topo_stage_bytes_peak = max(self.topo_stage_bytes_peak, staged)
         if dl.participation < 1.0:
             xs["act"] = jnp.asarray(self._participation_mask(start, n_rounds))
         out = self._chunk_jit(self.params, self.opt_state, self.share_state, xs)
@@ -384,7 +481,7 @@ class RoundEngine:
         idx = self.batcher.round_indices(rnd, dl.local_steps)  # (L, N, B)
         bx = jnp.asarray(self.batcher.x[idx])
         by = jnp.asarray(self.batcher.y[idx])
-        W = jnp.asarray(self._round_W(rnd))
+        W = self._round_mix(rnd)
         act = (
             jnp.asarray(self._participation_mask(rnd, 1)[0])
             if dl.participation < 1.0 else None

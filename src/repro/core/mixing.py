@@ -1,12 +1,20 @@
 """Communication/aggregation strategies — the gossip "wire".
 
-Three interchangeable lowerings of the same math
+Four interchangeable lowerings of the same math
 x_i' = sum_j W_ij x_j  (W = Metropolis-Hastings weights of the overlay):
 
 * ``mix_dense``      — W @ X einsum; W is a *traced* argument, so dynamic
                        per-round topologies never recompile.  Lowers to
                        all-gather + local matmul under GSPMD.  Works for any
-                       graph (the paper's ZeroMQ generality).
+                       graph (the paper's ZeroMQ generality); O(N²·P).
+* ``mix_sparse``     — neighbor-indexed gather + weighted segment sum over
+                       a ``SparseTopology``'s padded (N, D) tables:
+                       O(N·D·P) FLOPs, the execution form for sparse graphs
+                       (d ≪ N).  Optionally routes the fused K-way merge
+                       through the ``kernels/gossip_mix`` Pallas kernel
+                       (compiled on TPU, interpret elsewhere).  This is
+                       also the neighbor-indexed form multi-host
+                       `collective_permute` gossip shards over.
 * ``mix_circulant``  — static circulant d-regular graphs; neighbor exchange
                        by index shift.  ``roll`` variant works everywhere
                        (CPU emulation); ``shard_map`` variant lowers each
@@ -14,7 +22,9 @@ x_i' = sum_j W_ij x_j  (W = Metropolis-Hastings weights of the overlay):
                        the TPU-native analogue of point-to-point sends.
 * ``mix_fully``      — fully-connected topology = plain mean (all-reduce).
 
-All operate on node-stacked pytrees (leading axis N).
+All operate on node-stacked pytrees (leading axis N).  ``apply_W`` is the
+strategy-facing primitive: one W @ Y that accepts either a dense (N, N)
+matrix or a ``SparseTopology`` so every sharing strategy supports both.
 """
 from __future__ import annotations
 
@@ -25,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.topology import Graph, circulant_offsets
+from repro.core.topology import Graph, SparseTopology, circulant_offsets
 from repro.utils.compat import shard_map
 
 
@@ -35,6 +45,61 @@ def mix_dense(stacked, W):
 
     def f(a):
         return jnp.einsum("ij,j...->i...", W, a.astype(jnp.float32)).astype(a.dtype)
+
+    return jax.tree_util.tree_map(f, stacked)
+
+
+def apply_W(W, Y):
+    """Row-stochastic mix Y' = W @ Y, fp32 accumulate, any trailing dims.
+
+    W: dense (N, N) array (possibly traced) *or* a ``SparseTopology``.
+    The sparse form gathers each node's D neighbor rows and contracts the
+    slot axis — O(N·D·prod(trailing)) instead of O(N²·prod(trailing)) —
+    without ever materializing an (N, N) matrix.
+    """
+    Yf = Y.astype(jnp.float32)
+    if isinstance(W, SparseTopology):
+        g = jnp.take(Yf, W.nbr, axis=0)  # (N, D, ...)
+        mixed = jnp.einsum("nd,nd...->n...", W.w.astype(jnp.float32), g)
+        w_self = W.w_self.astype(jnp.float32).reshape(
+            (Yf.shape[0],) + (1,) * (Yf.ndim - 1)
+        )
+        return w_self * Yf + mixed
+    return jnp.einsum("ij,j...->i...", W.astype(jnp.float32), Yf)
+
+
+def mix_sparse(stacked, topo: SparseTopology, *, use_pallas: Optional[bool] = None,
+               interpret: Optional[bool] = None):
+    """Neighbor-indexed gossip over a pytree: x_i' = w_self_i x_i +
+    sum_k w[i,k] x_nbr[i,k] per leaf — O(N·D·P).
+
+    use_pallas: route the fused (D+1)-way weighted merge through the
+    ``kernels.gossip_mix`` Pallas kernel (one HBM pass per operand);
+    default: compiled kernel on TPU, plain XLA gather+einsum elsewhere.
+    interpret: force Pallas interpret mode (CPU emulation of the TPU
+    program); defaults to interpret off-TPU.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    def f(a):
+        af = a.astype(jnp.float32)
+        if not use_pallas:
+            return apply_W(topo, af).astype(a.dtype)
+        from repro.kernels.gossip_mix import gossip_mix_nodes
+
+        n = af.shape[0]
+        flat = af.reshape(n, -1)
+        xs = jnp.concatenate(
+            [flat[:, None, :], jnp.take(flat, topo.nbr, axis=0)], axis=1
+        )  # (N, 1 + D, P)
+        ws = jnp.concatenate(
+            [topo.w_self.astype(jnp.float32)[:, None], topo.w.astype(jnp.float32)],
+            axis=1,
+        )
+        it = (jax.default_backend() != "tpu") if interpret is None else interpret
+        out = gossip_mix_nodes(xs, ws, interpret=it)
+        return out.reshape(af.shape).astype(a.dtype)
 
     return jax.tree_util.tree_map(f, stacked)
 

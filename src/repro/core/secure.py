@@ -20,13 +20,24 @@ Two implementations of the same math:
 
 * ``round``            — vectorized and fully jittable: the ragged neighbor
   sets become a padded ``(N, dmax)`` neighbor table (topology.neighbor_table),
-  the per-receiver mask sum is a vmap over receivers x message slots with a
-  fori_loop over co-neighbor pairs, and the round index is a *traced* value
-  (fold_in accepts tracers) — so ``secure=True`` runs inside the engine's
-  lax.scan chunk like any other sharing strategy.  Work is O(N·d²·P) like
-  the reference, without the O(N·d) Python dict of messages.
+  the per-pair threefry PRF *bits* are generated in batched vmap passes
+  (one per sender slot via lax.map, keeping peak memory O(N·d·P); round
+  index a *traced* value), and the bits→uniform mapping + signed mask
+  accumulation run through the fused ``kernels/secure_mask`` Pallas kernel
+  (compiled on TPU, interpret mode on CPU — one HBM pass instead of one
+  accumulate pass per co-neighbor pair).
+  So ``secure=True`` runs inside the engine's lax.scan chunk like any other
+  sharing strategy; work is O(N·d²·P) like the reference, without the
+  O(N·d) Python dict of messages or the former per-slot fori_loop.
 * ``round_reference``  — the original Python dict-of-messages schedule, kept
-  as the oracle the vectorized path is equivalence-tested against.
+  as the oracle the vectorized path is equivalence-tested against.  Both
+  paths derive masks from the same threefry bits via the same
+  ``kernels.ref.mask_bits_to_uniform`` mapping, so masks are bit-identical
+  and only summation order differs.
+
+``W`` may be the dense (N, N) matrix or a neighbor-indexed
+``SparseTopology`` — only the per-receiver scalar weight is read from it,
+so the sparse engine path threads its (N, D) tables straight through.
 
 Communication: each edge carries the P masked values plus a 24-byte
 metadata record (pair seeds + round) — the paper's ≈3% overhead is
@@ -40,20 +51,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.topology import neighbor_table
+from repro.core.topology import SparseTopology, neighbor_table
+from repro.kernels import ops as kernel_ops
+from repro.kernels.ref import mask_bits_to_uniform
 
 BYTES_VAL = 4
 METADATA_OVERHEAD = 0.03  # paper: ~3% extra bytes (seeds, framing)
 
 
-def _pair_mask_from(kround, i, j, r, shape, bound: float):
-    """PRF mask for ordered pair (i, j) at receiver r, from a key already
-    folded with the round — the single definition of the mask PRF chain
-    (all indices may be tracers)."""
+def _pair_bits_from(kround, i, j, r, shape):
+    """Threefry PRF bits for ordered pair (i, j) at receiver r, from a key
+    already folded with the round — the single definition of the mask PRF
+    chain (all indices may be tracers)."""
     k = jax.random.fold_in(kround, i)
     k = jax.random.fold_in(k, j)
     k = jax.random.fold_in(k, r)
-    return jax.random.uniform(k, shape, jnp.float32, -bound, bound)
+    return jax.random.bits(k, shape, jnp.uint32)
+
+
+def _pair_mask_from(kround, i, j, r, shape, bound: float):
+    """PRF mask in [-bound, bound): bits -> uniform via the same mapping the
+    Pallas kernel uses (kernels.ref.mask_bits_to_uniform), so the reference
+    schedule and the fused kernel agree bit-exactly."""
+    return mask_bits_to_uniform(_pair_bits_from(kround, i, j, r, shape), bound)
 
 
 def _pair_mask(key, rnd, i, j, r, shape, bound: float):
@@ -100,43 +120,69 @@ class SecureAggregation:
         return out
 
     def round(self, X, W, state, key, degree, rnd=0):
-        """Vectorized, jittable masked aggregation.  W must give equal
-        weight w to all of a receiver's neighbors (true for MH on regular
-        graphs); ``degree`` and ``rnd`` may be traced scalars."""
+        """Vectorized, jittable masked aggregation.  W (dense (N, N) or
+        SparseTopology) must give equal weight w to all of a receiver's
+        neighbors (true for MH on regular graphs); ``degree`` and ``rnd``
+        may be traced scalars.
+
+        Pipeline, per sender slot (lax.map over the D slots keeps peak
+        memory at O(N·d·P) — one (N, D, P) bits tensor at a time — instead
+        of materializing all O(N·d²·P) pair bits at once): (1) a batched
+        vmap pass produces the threefry bits of every (receiver,
+        co-neighbor) pair mask for that slot's messages — bits are keyed by
+        the *sorted* node pair so the +1 and -1 occurrences read identical
+        bits and cancel exactly; (2) the fused Pallas kernel maps bits ->
+        uniform[-b, b) and applies all signed masks to the slot's N
+        messages in one pass.  Finally each receiver sums its valid masked
+        messages with weight w.
+        """
         N, P = X.shape
         Xf = X.astype(jnp.float32)
-        Wf = W.astype(jnp.float32)
-        nbr = jnp.asarray(self._nbr)
-        valid = jnp.asarray(self._valid, jnp.float32)
-        kr = jax.random.fold_in(key, rnd)
+        nbr = jnp.asarray(self._nbr)                      # (N, D)
+        validf = jnp.asarray(self._valid, jnp.float32)
         D = nbr.shape[1]
-        bound = self.mask_bound
+        if isinstance(W, SparseTopology):
+            # slot 0 is a real neighbor whenever deg(r) > 0 (padded tables
+            # pack valid slots first); padding weight 0 is harmless below
+            wvec = W.w.astype(jnp.float32)[:, 0]
+        else:
+            Wf = W.astype(jnp.float32)
+            wvec = jnp.take_along_axis(Wf, nbr[:, :1], axis=1)[:, 0]
+        kr = jax.random.fold_in(key, rnd)
 
-        def receiver(r, nbr_r, valid_r, w_row):
-            w = w_row[nbr_r[0]]  # equal-weight assumption per receiver
+        i_mat = nbr[:, :, None]                            # sender node
+        j_mat = nbr[:, None, :]                            # co-neighbor node
+        signs = (
+            jnp.where(i_mat < j_mat, 1.0, -1.0)
+            * validf[:, None, :]
+            * (1.0 - jnp.eye(D, dtype=jnp.float32))
+        )                                                  # (N, D, D)
+        Xnbr = jnp.take(Xf, nbr, axis=0)                   # (N, D, P)
 
-            def slot_msg(ii):
+        def slot_msgs(ii):
+            def receiver_bits(r, nbr_r):
                 i = nbr_r[ii]
 
-                def add_mask(jj, acc):
-                    j = nbr_r[jj]
+                def pair(j):
                     a, b = jnp.minimum(i, j), jnp.maximum(i, j)
-                    m = _pair_mask_from(kr, a, b, r, (P,), bound)
-                    sign = (
-                        jnp.where(i < j, 1.0, -1.0)
-                        * valid_r[jj]
-                        * jnp.where(jj == ii, 0.0, 1.0)
-                    )
-                    return acc + sign * m
+                    return _pair_bits_from(kr, a, b, r, (P,))
 
-                return jax.lax.fori_loop(0, D, add_mask, Xf[i])
+                return jax.vmap(pair)(nbr_r)               # (D, P)
 
-            msgs = jax.vmap(slot_msg)(jnp.arange(D))  # (D, P)
-            deg_r = valid_r.sum()
-            acc = (1.0 - w * deg_r) * Xf[r] + w * jnp.sum(msgs * valid_r[:, None], 0)
-            return jnp.where(deg_r > 0, acc, Xf[r])
+            bits = jax.vmap(receiver_bits)(jnp.arange(N), nbr)  # (N, D, P)
+            return kernel_ops.secure_mask_apply_nodes(
+                jnp.take(Xnbr, ii, axis=1),
+                bits,
+                jnp.take(signs, ii, axis=1),
+                self.mask_bound,
+            )                                              # (N, P)
 
-        X2 = jax.vmap(receiver)(jnp.arange(N), nbr, valid, Wf)
+        msgs = jnp.moveaxis(jax.lax.map(slot_msgs, jnp.arange(D)), 0, 1)  # (N, D, P)
+        deg_r = validf.sum(1)
+        acc = (1.0 - wvec * deg_r)[:, None] * Xf + wvec[:, None] * jnp.sum(
+            msgs * validf[:, :, None], axis=1
+        )
+        X2 = jnp.where((deg_r > 0)[:, None], acc, Xf)
         bytes_sent = degree * P * BYTES_VAL * (1.0 + METADATA_OVERHEAD)
         return X2.astype(X.dtype), state, bytes_sent
 

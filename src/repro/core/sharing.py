@@ -19,6 +19,13 @@ traced value and byte accounting happens on device.  ``round`` also takes
 the (possibly traced) round index ``rnd`` — used by PRF-keyed strategies
 such as secure aggregation, ignored by the rest — so the engine can call
 every strategy uniformly from inside the scan.
+
+``W`` may be a dense (N, N) matrix *or* a neighbor-indexed
+``SparseTopology`` (padded (N, D) tables): every W-product below goes
+through :func:`repro.core.mixing.apply_W`, so each strategy costs
+O(N·D·P) on sparse overlays without code changes.  With churn, the sparse
+reweight (:func:`participation_reweight_sparse`) masks neighbor slots and
+returns the freed mass to the diagonal without ever materializing W.
 """
 from __future__ import annotations
 
@@ -27,6 +34,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.mixing import apply_W
+from repro.core.topology import SparseTopology
 
 BYTES_VAL = 4   # fp32 value on the wire
 BYTES_IDX = 4   # int32 index on the wire
@@ -45,9 +55,10 @@ def _randk_mask(key, shape, k: int):
 
 
 def sparse_aggregate(X, W, M):
-    """Masked gossip with missing-coordinate fallback (see module doc)."""
-    Xf, Wf, Mf = X.astype(jnp.float32), W.astype(jnp.float32), M.astype(jnp.float32)
-    return (Xf + Wf @ (Mf * Xf) - Xf * (Wf @ Mf)).astype(X.dtype)
+    """Masked gossip with missing-coordinate fallback (see module doc).
+    W: dense (N, N) or SparseTopology — both products go through apply_W."""
+    Xf, Mf = X.astype(jnp.float32), M.astype(jnp.float32)
+    return (Xf + apply_W(W, Mf * Xf) - Xf * apply_W(W, Mf)).astype(X.dtype)
 
 
 def participation_reweight(W, active):
@@ -75,6 +86,26 @@ def participation_reweight(W, active):
     return Wm, deg_eff
 
 
+def participation_reweight_sparse(topo: SparseTopology, active):
+    """Sparse-form :func:`participation_reweight`: mask neighbor *slots*
+    whose endpoint (either side) is down and return the freed mass to the
+    surviving diagonal — O(N·D), no (N, N) matrix ever materialized.
+
+    A down node's row becomes the identity (w row 0, w_self 1), exactly
+    like the dense reweight's e_i rows; ``to_dense`` of the result equals
+    the dense reweight of ``to_dense(topo)`` (property-tested).
+
+    Returns (SparseTopology, deg_eff) with deg_eff as in the dense form.
+    """
+    m = active.astype(jnp.float32)
+    pair = m[:, None] * jnp.take(m, topo.nbr, axis=0)        # (N, D)
+    w = topo.w.astype(jnp.float32) * pair
+    w_self = 1.0 - w.sum(-1)                                 # down row -> 1.0
+    edges = jnp.sum((w > 0).astype(jnp.float32))
+    deg_eff = edges / jnp.maximum(m.sum(), 1.0)
+    return SparseTopology(topo.nbr, w, w_self), deg_eff
+
+
 # ---------------------------------------------------------------------------
 # strategies
 # ---------------------------------------------------------------------------
@@ -87,7 +118,7 @@ class FullSharing:
         return ()
 
     def round(self, X, W, state, key, degree, rnd=0):
-        X2 = (W.astype(jnp.float32) @ X.astype(jnp.float32)).astype(X.dtype)
+        X2 = apply_W(W, X).astype(X.dtype)
         return X2, state, degree * X.shape[1] * BYTES_VAL
 
 
@@ -154,8 +185,7 @@ class ChocoSGD:
             M = _randk_mask(key, X.shape, k)
         q = jnp.where(M, diff, 0.0)
         xhat = state["xhat"] + q
-        Wf = W.astype(jnp.float32)
-        X2 = Xf + self.gamma * (Wf @ xhat - xhat)
+        X2 = Xf + self.gamma * (apply_W(W, xhat) - xhat)
         return X2.astype(X.dtype), {"xhat": xhat}, degree * k * (BYTES_VAL + BYTES_IDX)
 
 
@@ -176,7 +206,7 @@ class QuantizedSharing:
 
         codes, scale = quantize_int8(X, key=key if self.stochastic else None)
         Xq = dequantize_int8(codes, scale)  # what the receivers reconstruct
-        X2 = (W.astype(jnp.float32) @ Xq).astype(X.dtype)
+        X2 = apply_W(W, Xq).astype(X.dtype)
         return X2, state, degree * (X.shape[1] * 1 + 4)  # int8 + scale
 
 

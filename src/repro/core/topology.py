@@ -4,6 +4,17 @@ Supports the paper's topologies (ring, d-regular, fully-connected, star),
 dynamic per-round regular graphs via a ``PeerSampler``, Metropolis–Hastings
 mixing weights, and graph-file I/O (edge list / adjacency list) so external
 generators can be plugged in, exactly like DecentralizePy's graph files.
+
+Two representations coexist:
+
+* :class:`Graph` — dense (N, N) boolean adjacency.  Convenient for file
+  I/O, runtime mutation, and spectral analysis; O(N²) memory.
+* :class:`SparseTopology` — padded (N, D) neighbor + weight tables, D the
+  max degree.  This is the form sparse graphs (ring, d-regular, the
+  paper's dynamic 5-regular) are *executed* in: neighbor-indexed gossip is
+  O(N·D·P) instead of O(N²·P), and a chunk of R dynamic rounds stages
+  (R, N, D) tables instead of (R, N, N) matrices.  It is registered as a
+  jax pytree so engines thread it straight through jit/scan.
 """
 from __future__ import annotations
 
@@ -61,31 +72,11 @@ class Graph:
     @staticmethod
     def random_regular(n: int, degree: int, seed: int) -> "Graph":
         """Random d-regular graph — the paper's dynamic 5-regular per-round
-        topology.  Start from the circulant d-regular graph and apply many
-        random degree-preserving double-edge swaps (always yields a simple
-        graph; mixes to near-uniform)."""
-        assert 0 < degree < n and n * degree % 2 == 0, "n*degree must be even"
-        rng = np.random.default_rng(seed)
-        g = Graph.regular_circulant(n, degree)
-        adj = g.adj
-        edges = [tuple(e) for e in np.argwhere(np.triu(adj))]
-        swaps = 0
-        target = 10 * len(edges)
-        for _ in range(100 * target):
-            if swaps >= target:
-                break
-            i, j = rng.integers(0, len(edges), 2)
-            if i == j:
-                continue
-            (a, b), (c, d) = edges[i], edges[j]
-            if rng.random() < 0.5:
-                c, d = d, c
-            if len({a, b, c, d}) < 4 or adj[a, c] or adj[b, d]:
-                continue
-            adj[a, b] = adj[b, a] = adj[c, d] = adj[d, c] = False
-            adj[a, c] = adj[c, a] = adj[b, d] = adj[d, b] = True
-            edges[i], edges[j] = (a, c), (b, d)
-            swaps += 1
+        topology.  Vectorized configuration-model sampler (see
+        :func:`random_regular_neighbors`); O(N·d) work, no Python edge loop."""
+        nbr = random_regular_neighbors(n, degree, seed)
+        adj = np.zeros((n, n), bool)
+        adj[np.repeat(np.arange(n), degree), nbr.reshape(-1)] = True
         return Graph(adj)
 
     # -- file I/O (paper: 'topology specification' files) -------------------
@@ -209,6 +200,147 @@ def circulant_offsets(n: int, degree: int) -> List[int]:
     return offs
 
 
+def random_regular_neighbors(n: int, degree: int, seed: int) -> np.ndarray:
+    """(N, degree) int32 neighbor table of a random simple d-regular graph.
+
+    Vectorized configuration-model sampler: pair all N·d stubs at once,
+    then repair self-loops/multi-edges by re-shuffling the offending stubs
+    together with a batch of randomly chosen good edges (batched swap
+    proposals) until the graph is simple.  Typically converges in a handful
+    of numpy passes — this replaces the former Python double-edge-swap loop
+    (~10 ms/round at N=256) that made dynamic topologies host-bound.
+
+    Near-complete graphs (d approaching n-1) can defeat random re-pairing;
+    after the repair budget the sampler falls back to the deterministic
+    circulant + double-edge-swap walk (cheap at the small n·d where this
+    regime occurs).  Same seed -> same graph either way.
+    """
+    assert 0 < degree < n and n * degree % 2 == 0, "n*degree must be even"
+    rng = np.random.default_rng(seed)
+    stubs = np.repeat(np.arange(n, dtype=np.int64), degree)
+    rng.shuffle(stubs)
+    e = stubs.reshape(-1, 2)
+    for _ in range(500):
+        a, b = e.min(1), e.max(1)
+        key = a * n + b
+        order = np.argsort(key, kind="stable")
+        dup_sorted = np.zeros(key.shape, bool)
+        sk = key[order]
+        dup_sorted[1:] = sk[1:] == sk[:-1]  # 2nd+ copies of a repeated edge
+        bad = a == b
+        bad[order] |= dup_sorted
+        n_bad = int(bad.sum())
+        if n_bad == 0:
+            src = np.concatenate([a, b])
+            dst = np.concatenate([b, a])
+            o = np.argsort(src, kind="stable")
+            return dst[o].reshape(n, degree).astype(np.int32)
+        good = np.nonzero(~bad)[0]
+        k = min(good.size, max(2 * n_bad, 8))
+        pool = np.concatenate([np.nonzero(bad)[0], rng.choice(good, k, replace=False)])
+        mixed = e[pool].reshape(-1)
+        rng.shuffle(mixed)
+        e[pool] = mixed.reshape(-1, 2)
+    return _random_regular_swaps(n, degree, rng)
+
+
+def _random_regular_swaps(n: int, degree: int, rng) -> np.ndarray:
+    """(N, degree) neighbor table via circulant start + random
+    degree-preserving double-edge swaps — always yields a simple graph.
+    Python loop; only the dense-small fallback of the vectorized sampler."""
+    adj = Graph.regular_circulant(n, degree).adj
+    edges = [tuple(e) for e in np.argwhere(np.triu(adj))]
+    swaps, target = 0, 10 * len(edges)
+    for _ in range(100 * target):
+        if swaps >= target:
+            break
+        i, j = rng.integers(0, len(edges), 2)
+        if i == j:
+            continue
+        (a, b), (c, d) = edges[i], edges[j]
+        if rng.random() < 0.5:
+            c, d = d, c
+        if len({a, b, c, d}) < 4 or adj[a, c] or adj[b, d]:
+            continue
+        adj[a, b] = adj[b, a] = adj[c, d] = adj[d, c] = False
+        adj[a, c] = adj[c, a] = adj[b, d] = adj[d, b] = True
+        edges[i], edges[j] = (a, c), (b, d)
+        swaps += 1
+    ii, jj = np.nonzero(adj)
+    return jj.reshape(n, degree).astype(np.int32)
+
+
+def mh_weight_table(nbr: np.ndarray, valid: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Metropolis–Hastings (Xiao–Boyd) weights in neighbor-slot form.
+
+    Returns (w (N, D) float32, w_self (N,) float32): w[i, k] is the weight
+    node i gives its k-th neighbor (0 on padding slots), w_self the
+    diagonal residual — the same W as ``Graph.metropolis_hastings`` without
+    ever materializing (N, N).
+    """
+    deg = valid.sum(1).astype(np.float64)
+    w = np.where(valid, 1.0 / (1.0 + np.maximum(deg[:, None], deg[nbr])), 0.0)
+    w_self = 1.0 - w.sum(1)
+    return w.astype(np.float32), w_self.astype(np.float32)
+
+
+@dataclasses.dataclass(eq=False)
+class SparseTopology:
+    """Neighbor-indexed mixing topology: padded (N, D) tables, O(N·D).
+
+    ``nbr[i, k]`` is node i's k-th neighbor (padded with i itself),
+    ``w[i, k]`` its mixing weight (0 on padding — ``w > 0`` doubles as the
+    validity mask since MH weights are strictly positive on edges), and
+    ``w_self[i]`` the diagonal weight.  Leaves may carry extra *leading*
+    axes — ``PeerSampler.sparse_stack`` stacks R rounds into (R, N, D)
+    tables a scan chunk threads as traced values.  Registered as a jax
+    pytree (see module bottom) so it can be passed through jit/scan.
+    """
+
+    nbr: np.ndarray     # (..., N, D) int32
+    w: np.ndarray       # (..., N, D) float32
+    w_self: np.ndarray  # (..., N) float32
+
+    @property
+    def n(self) -> int:
+        return self.nbr.shape[-2]
+
+    @property
+    def dmax(self) -> int:
+        return self.nbr.shape[-1]
+
+    def stage_bytes(self) -> int:
+        """Host->device bytes this representation stages (vs 4·N² dense)."""
+        return int(self.nbr.nbytes + self.w.nbytes + self.w_self.nbytes)
+
+    @staticmethod
+    def from_graph(g: "Graph") -> "SparseTopology":
+        """MH-weighted sparse form of a static graph."""
+        nbr, valid = neighbor_table(g.adj)
+        w, w_self = mh_weight_table(nbr, valid)
+        return SparseTopology(nbr, w, w_self)
+
+    @staticmethod
+    def from_neighbors(nbr: np.ndarray, valid: Optional[np.ndarray] = None) -> "SparseTopology":
+        """MH-weighted sparse form from a padded neighbor table alone."""
+        if valid is None:
+            valid = np.ones(nbr.shape, bool)
+        w, w_self = mh_weight_table(np.asarray(nbr), np.asarray(valid))
+        return SparseTopology(np.asarray(nbr, np.int32), w, w_self)
+
+    def to_dense(self) -> np.ndarray:
+        """(N, N) float32 W — the equivalence oracle for the sparse path."""
+        n, d = self.n, self.dmax
+        W = np.zeros((n, n), np.float32)
+        np.add.at(
+            W,
+            (np.repeat(np.arange(n), d), np.asarray(self.nbr).reshape(-1)),
+            np.asarray(self.w).reshape(-1),
+        )
+        W[np.arange(n), np.arange(n)] += np.asarray(self.w_self)
+        return W
+
+
 @dataclasses.dataclass
 class PeerSampler:
     """Centralized peer sampler (paper §3.2): instantiates a new random
@@ -226,8 +358,45 @@ class PeerSampler:
 
     def weights_stack(self, start: int, n_rounds: int) -> np.ndarray:
         """(R, N, N) float32 stack of per-round mixing matrices for rounds
-        [start, start + n_rounds) — pre-generated on the host so a whole
-        scan chunk threads W as a traced value (no per-round recompiles)."""
+        [start, start + n_rounds) — the *dense* chunk form, kept for the
+        ``mixing="dense"`` oracle path.  O(R·N²); prefer ``sparse_stack``."""
         return np.stack(
             [self.round_weights(start + r) for r in range(n_rounds)]
         ).astype(np.float32)
+
+    def round_table(self, round_idx: int) -> SparseTopology:
+        """Sparse (N, D) table for one round — same graph as ``round_graph``
+        (identical seed chain), built without the (N, N) adjacency.  On a
+        d-regular graph every MH weight is 1/(d+1)."""
+        nbr = random_regular_neighbors(
+            self.n, self.degree, self.seed * 100003 + round_idx
+        )
+        w = np.full(nbr.shape, 1.0 / (self.degree + 1.0), np.float32)
+        w_self = np.full((self.n,), 1.0 / (self.degree + 1.0), np.float32)
+        return SparseTopology(nbr, w, w_self)
+
+    def sparse_stack(self, start: int, n_rounds: int) -> SparseTopology:
+        """(R, N, D) sparse per-round topology stack for rounds
+        [start, start + n_rounds) — O(R·N·d) staging, which is what lets
+        scan chunks stay full-length at N=1024 (no W-stack byte cap)."""
+        ts = [self.round_table(start + r) for r in range(n_rounds)]
+        return SparseTopology(
+            np.stack([t.nbr for t in ts]),
+            np.stack([t.w for t in ts]),
+            np.stack([t.w_self for t in ts]),
+        )
+
+
+# Register SparseTopology as a jax pytree so jit/scan thread it as a traced
+# value (leaves: nbr, w, w_self).  Lazy-guarded: this module stays importable
+# in numpy-only contexts.
+try:  # pragma: no cover - exercised indirectly by every engine test
+    import jax.tree_util as _jtu
+
+    _jtu.register_pytree_node(
+        SparseTopology,
+        lambda t: ((t.nbr, t.w, t.w_self), None),
+        lambda _, leaves: SparseTopology(*leaves),
+    )
+except Exception:  # pragma: no cover
+    pass

@@ -45,3 +45,41 @@ def gossip_mix(neighbors, weights, *, interpret: bool = False, block_n: int = BL
         interpret=interpret,
     )(weights[:, None], x)
     return out[:M]
+
+
+def _kernel_nodes(w_ref, x_ref, o_ref):
+    # x_ref: (1, K, BN); w_ref: (1, K, 1); o_ref: (1, BN)
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(x * w, axis=1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def gossip_mix_nodes(neighbors, weights, *, interpret: bool = False,
+                     block_n: int = BLOCK_N):
+    """Node-batched fused gossip merge — the ``mix_sparse`` backend.
+
+    neighbors: (N, K, M) — for each of N receivers, its K = 1 + degree
+    gathered operand rows (self first); weights: (N, K) -> (N, M).
+    Grid (N, M/BN): each program fuses one receiver's K-way weighted sum
+    over one parameter block, reading every operand once from HBM.  The
+    param block adapts down to the (128-aligned) vector length so small
+    models don't pad to the full 64k block.
+    """
+    N, K, M = neighbors.shape
+    bn = min(block_n, -(-M // 128) * 128)
+    pad = (-M) % bn
+    x = jnp.pad(neighbors, ((0, 0), (0, 0), (0, pad)))
+    grid = (N, x.shape[2] // bn)
+    out = pl.pallas_call(
+        _kernel_nodes,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K, 1), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, K, bn), lambda b, i: (b, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((N, x.shape[2]), neighbors.dtype),
+        interpret=interpret,
+    )(weights[:, :, None], x)
+    return out[:, :M]

@@ -14,9 +14,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as ref_ops
 from repro.kernels.gossip_mix import gossip_mix as _gossip_mix
+from repro.kernels.gossip_mix import gossip_mix_nodes as _gossip_mix_nodes
 from repro.kernels.quantize import dequantize as _dequantize
 from repro.kernels.quantize import quantize as _quantize
 from repro.kernels.secure_mask import secure_mask_apply as _secure_mask_apply
+from repro.kernels.secure_mask import secure_mask_apply_nodes as _secure_mask_apply_nodes
 from repro.kernels.sparsify import abs_histogram as _abs_histogram
 from repro.kernels.sparsify import threshold_mask as _threshold_mask
 from repro.kernels.sparsify import topk_threshold as _topk_threshold
@@ -43,6 +45,16 @@ def dequantize(codes, scale, interpret: bool = None):
 def secure_mask_apply(x, bits, signs, bound: float = 1.0, interpret: bool = None):
     return _secure_mask_apply(x, bits, signs, bound,
                               interpret=INTERPRET if interpret is None else interpret)
+
+
+def gossip_mix_nodes(neighbors, weights, interpret: bool = None):
+    return _gossip_mix_nodes(neighbors, weights,
+                             interpret=INTERPRET if interpret is None else interpret)
+
+
+def secure_mask_apply_nodes(x, bits, signs, bound: float = 1.0, interpret: bool = None):
+    return _secure_mask_apply_nodes(x, bits, signs, bound,
+                                    interpret=INTERPRET if interpret is None else interpret)
 
 
 def abs_histogram(x, edges, interpret: bool = None):

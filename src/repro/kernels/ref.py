@@ -57,6 +57,24 @@ def secure_mask_apply_ref(x, bits, signs, bound):
     return (x.astype(jnp.float32) + jnp.einsum("k,km->m", signs.astype(jnp.float32), masks)).astype(x.dtype)
 
 
+def gossip_mix_nodes_ref(neighbors, weights):
+    """neighbors: (N, K, M); weights: (N, K).  Per-receiver fused merge:
+    out[n, m] = sum_k w[n, k] * neighbors[n, k, m] (fp32 accumulate)."""
+    return jnp.einsum(
+        "nk,nkm->nm", weights.astype(jnp.float32), neighbors.astype(jnp.float32)
+    ).astype(neighbors.dtype)
+
+
+def secure_mask_apply_nodes_ref(x, bits, signs, bound):
+    """x: (B, M); bits: (B, K, M); signs: (B, K) in {-1, 0, +1}.
+    out[b] = x[b] + sum_k signs[b, k] * uniform(bits[b, k])."""
+    masks = mask_bits_to_uniform(bits, bound)  # (B, K, M) fp32
+    return (
+        x.astype(jnp.float32)
+        + jnp.einsum("bk,bkm->bm", signs.astype(jnp.float32), masks)
+    ).astype(x.dtype)
+
+
 def ssd_chunk_ref(xdt, Bc, Cc, cum):
     """One SSD chunk (single batch element).
 

@@ -50,3 +50,45 @@ def secure_mask_apply(x, bits, signs, bound: float = 1.0, *,
         interpret=interpret,
     )(jnp.asarray(bound, jnp.float32)[None], xp, bp, signs[:, None])
     return out[:M]
+
+
+def _kernel_nodes(bound_ref, x_ref, bits_ref, signs_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (1, BN)
+    bits = bits_ref[...]                        # (1, K, BN) uint32
+    signs = signs_ref[...].astype(jnp.float32)  # (1, K, 1)
+    bound = bound_ref[0]
+    u01 = (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    masks = (u01 * 2.0 - 1.0) * bound
+    o_ref[...] = (x + jnp.sum(masks * signs, axis=1)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def secure_mask_apply_nodes(x, bits, signs, bound: float = 1.0, *,
+                            interpret: bool = False, block_n: int = BLOCK_N):
+    """Message-batched fused mask apply — one call masks every message of a
+    secure-aggregation round.
+
+    x: (B, M) messages; bits: (B, K, M) uint32 per-pair PRF bits; signs:
+    (B, K) in {-1, 0, +1} (0 = inactive pair slot) -> (B, M).  Grid
+    (B, M/BN); the block adapts down to the (128-aligned) vector length.
+    """
+    B, K, M = bits.shape
+    bn = min(block_n, -(-M // 128) * 128)
+    pad = (-M) % bn
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    bp = jnp.pad(bits, ((0, 0), (0, 0), (0, pad)))
+    grid = (B, xp.shape[1] // bn)
+    out = pl.pallas_call(
+        _kernel_nodes,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, i: (0,)),
+            pl.BlockSpec((1, bn), lambda b, i: (b, i)),
+            pl.BlockSpec((1, K, bn), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, K, 1), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, xp.shape[1]), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(bound, jnp.float32)[None], xp, bp, signs[:, :, None])
+    return out[:, :M]
