@@ -14,6 +14,17 @@ while the dense path stages (R, N, N) W stacks that hit the 64 MB cap and
 silently shrink the chunk exactly where scale matters.  Gate: sparse ≥ 3x
 dense rounds/s at N=1024.
 
+Part 3 measures the node-sharded engine (shard_devices=8, both the
+'gather' and the collective_permute 'ppermute' gossip lowerings) against
+the single-device engine at N=1024, d=6 on 8 CPU-emulated devices — the
+honest emulation cost of multi-device execution on one box (emulated
+collectives are host rendezvous; the wire win is a TPU story).  Runs in a
+subprocess with XLA_FLAGS set when the current process has fewer devices.
+
+All timed sections record min/median/mean rounds/s over the repeats; the
+headline ``rounds_per_s`` (and any CI threshold) is the *median* — this
+box's spread under load makes best-of-N misleading.
+
 The workload is a distributed-consensus round — each node pulls its local
 batch toward its mean with a quadratic loss, then gossips — deliberately
 the cheapest possible per-round device program, so the measurement isolates
@@ -30,6 +41,11 @@ is recorded (results/bench_engine.json).
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import statistics
+import subprocess
+import sys
 import time
 
 import jax
@@ -46,6 +62,17 @@ P_DISPATCH = 4     # part 1: 4-param state isolates the dispatch machinery
 P_MIXING = 256     # part 2: 256-param state so mixing FLOPs are the measured axis
 
 
+def _rps_stats(samples):
+    """min/median/mean rounds-per-second over the timed repeats.  The box
+    is noisy (3.4-16x spread observed under load), so recorded headline
+    numbers and CI gates use the *median*, not best-of-N."""
+    return {
+        "rounds_per_s": statistics.median(samples),
+        "rounds_per_s_min": min(samples),
+        "rounds_per_s_mean": sum(samples) / len(samples),
+    }
+
+
 def _loss(p, x, y):
     # consensus: pull every 4-wide row of the state toward the local batch
     # mean — the state dim P is free while the dataset stays 4-dim
@@ -58,13 +85,13 @@ def _acc(p, x, y):
 
 
 def _engine(n_nodes: int, chunk: int, topology: str = "regular", degree: int = 5,
-            mixing: str = "auto", p_dim: int = P_DISPATCH) -> RoundEngine:
+            mixing: str = "auto", p_dim: int = P_DISPATCH, **dl_kw) -> RoundEngine:
     ds = make_dataset("cifar10", n_train=2048, n_test=64, shape=SHAPE, sigma=2.0)
     parts = sharding_partition(ds.train_y, n_nodes, 2, seed=0)
     batcher = NodeBatcher(ds.train_x, ds.train_y, parts, batch_size=4, seed=0)
     dl = DLConfig(n_nodes=n_nodes, topology=topology, degree=degree,
                   eval_every=10**9, local_steps=1, batch_size=4,
-                  chunk_rounds=chunk, mixing=mixing)
+                  chunk_rounds=chunk, mixing=mixing, **dl_kw)
     init = lambda key: {"w": jax.random.normal(key, (p_dim,))}
     return RoundEngine(dl, init, _loss, _acc, make_optimizer("sgd", 0.05), batcher)
 
@@ -81,19 +108,21 @@ def run(rounds: int = 64, nodes=(64, 256), chunks=(0, 1, 8, 32), repeats: int = 
             # warm up with the same round count so every scan length the
             # timed run needs (full chunks + remainder) is already compiled
             eng.run(rounds=rounds, log=False)
-            best = 0.0
+            samples = []
             for _ in range(repeats):
                 t0 = time.time()
                 eng.run(rounds=rounds, log=False)
-                best = max(best, rounds / (time.time() - t0))
-            rps[chunk] = best
+                samples.append(rounds / (time.time() - t0))
+            stats = _rps_stats(samples)
+            rps[chunk] = stats["rounds_per_s"]
             name = "legacy" if chunk == 0 else f"chunk{chunk}"
             recs.append({
                 "name": f"N{n}-{name}", "n_nodes": n, "chunk": chunk,
-                "rounds": rounds, "rounds_per_s": best,
+                "rounds": rounds, **stats,
             })
             if log:
-                print(f"  N={n:4d} {name:8s} {best:8.1f} rounds/s", flush=True)
+                print(f"  N={n:4d} {name:8s} {stats['rounds_per_s']:8.1f} rounds/s "
+                      f"(min {stats['rounds_per_s_min']:.1f})", flush=True)
         if log and 1 in rps and 32 in rps:
             line = f"  N={n:4d} speedup chunk32/chunk1: {rps[32] / rps[1]:.2f}x"
             if 0 in rps:
@@ -134,18 +163,21 @@ def run_sparse(rounds: int = 32, n: int = 1024, degree: int = 6, chunk: int = 32
             engines[mixing] = eng
         # interleave timed repeats so box-level CPU throttling hits both
         # paths equally and the ratio stays meaningful
-        rps = {"dense": 0.0, "sparse": 0.0}
+        samples = {"dense": [], "sparse": []}
         for _ in range(repeats):
             for mixing, eng in engines.items():
                 t0 = time.time()
                 eng.run(rounds=rounds, log=False)
-                rps[mixing] = max(rps[mixing], rounds / (time.time() - t0))
+                samples[mixing].append(rounds / (time.time() - t0))
+        rps = {}
         for mixing, eng in engines.items():
+            stats = _rps_stats(samples[mixing])
+            rps[mixing] = stats["rounds_per_s"]
             recs.append({
                 "name": f"N{n}-d{degree}-{topo}-{mixing}", "n_nodes": n,
                 "degree": degree, "topology": topo, "mixing": mixing,
                 "chunk": chunk, "chunk_effective": eng.chunk, "rounds": rounds,
-                "rounds_per_s": rps[mixing],
+                **stats,
                 "topo_stage_peak_bytes": eng.topo_stage_bytes_peak,
             })
             if log:
@@ -196,6 +228,99 @@ def _mix_op_micro(n: int, degree: int, p: int, iters: int = 100, log: bool = Tru
     return recs
 
 
+def run_sharded(rounds: int = 12, n: int = 1024, degree: int = 6, chunk: int = 32,
+                repeats: int = 3, devices: int = 8, log: bool = True):
+    """Part 3: node-sharded vs single-device RoundEngine at the paper's
+    1000+-node scale (N=1024, d=6, chunk=32, static d-regular overlay).
+
+    The sharded engine runs the scanned chunk under shard_map over
+    ``devices`` devices (CPU: emulated via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``), in both
+    distributed-gossip lowerings: 'gather' (all-gather + local neighbor
+    gather) and 'ppermute' (slot-rebalanced per-offset collective_permute
+    — the interconnect-native path; on CPU every emulated collective is a
+    host rendezvous, so this records honest emulation numbers, not the TPU
+    story).  The single-device baseline runs in the *same* process so both
+    see the same host contention.
+
+    When the current process doesn't have enough devices the section
+    re-executes itself in a subprocess with the XLA flag set (device count
+    locks at first jax init), so a plain ``python benchmarks/bench_engine.py``
+    still records the sharded entries.
+    """
+    recs = []
+    if rounds <= 0:
+        return recs
+    if jax.device_count() < devices:
+        return _run_sharded_subprocess(rounds, n, degree, chunk, repeats, devices, log)
+    cases = {
+        "single": dict(),
+        f"sharded{devices}-gather": dict(shard_devices=devices, shard_backend="gather"),
+        f"sharded{devices}-ppermute": dict(shard_devices=devices, shard_backend="ppermute"),
+    }
+    engines = {}
+    for case, kw in cases.items():
+        eng = _engine(n, chunk, topology="regular", degree=degree,
+                      p_dim=P_MIXING, **kw)
+        eng.run(rounds=rounds, log=False)  # warm-up compiles every scan length
+        engines[case] = eng
+    samples = {case: [] for case in cases}
+    for _ in range(repeats):
+        for case, eng in engines.items():
+            t0 = time.time()
+            eng.run(rounds=rounds, log=False)
+            samples[case].append(rounds / (time.time() - t0))
+    rps = {}
+    for case, eng in engines.items():
+        stats = _rps_stats(samples[case])
+        rps[case] = stats["rounds_per_s"]
+        recs.append({
+            "name": f"N{n}-d{degree}-{case}", "n_nodes": n, "degree": degree,
+            "topology": "regular", "chunk": chunk, "rounds": rounds,
+            "n_devices": devices if case != "single" else 1, **stats,
+        })
+        if log:
+            print(f"  N={n} d={degree} {case:18s} {rps[case]:8.1f} rounds/s",
+                  flush=True)
+    if log:
+        for case in rps:
+            if case != "single":
+                print(f"  N={n} d={degree} speedup {case}/single: "
+                      f"{rps[case] / rps['single']:.2f}x", flush=True)
+    return recs
+
+
+def _run_sharded_subprocess(rounds, n, degree, chunk, repeats, devices, log):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}"
+    ).strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")]
+    ).rstrip(os.pathsep)
+    cmd = [
+        sys.executable, os.path.abspath(__file__), "--_sharded-worker",
+        "--sharded-rounds", str(rounds), "--sparse-nodes", str(n),
+        "--sharded-degree", str(degree), "--sharded-repeats", str(repeats),
+        "--sharded-devices", str(devices), "--sharded-chunk", str(chunk),
+    ]
+    p = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       cwd=root, timeout=3600)
+    recs = []
+    for line in p.stdout.splitlines():
+        if line.startswith("SHARDED_JSON:"):
+            recs = json.loads(line[len("SHARDED_JSON:"):])
+        elif log:
+            print(line, flush=True)
+    if not recs:
+        raise RuntimeError(
+            f"sharded bench subprocess produced no records:\n{p.stdout}\n{p.stderr}"
+        )
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=64)
@@ -205,14 +330,50 @@ def main():
                     help="rounds for the N=1024 sparse-vs-dense section; 0 skips it")
     ap.add_argument("--sparse-nodes", type=int, default=1024)
     ap.add_argument("--sparse-repeats", type=int, default=3)
+    ap.add_argument("--sharded-rounds", type=int, default=12,
+                    help="rounds for the N=1024 sharded-vs-single section; 0 skips it")
+    ap.add_argument("--sharded-degree", type=int, default=6)
+    ap.add_argument("--sharded-repeats", type=int, default=3)
+    ap.add_argument("--sharded-devices", type=int, default=8)
+    ap.add_argument("--sharded-chunk", type=int, default=32)
+    ap.add_argument("--_sharded-worker", action="store_true",
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if getattr(args, "_sharded_worker"):
+        if jax.device_count() < args.sharded_devices:
+            # never re-spawn from the worker: the parent already set the
+            # XLA flag; if it didn't take (non-CPU backend), fail loudly
+            raise RuntimeError(
+                f"sharded worker sees {jax.device_count()} devices, needs "
+                f"{args.sharded_devices}; --xla_force_host_platform_device_count "
+                "only applies to the CPU backend (set JAX_PLATFORMS=cpu)"
+            )
+        recs = run_sharded(args.sharded_rounds, n=args.sparse_nodes,
+                           degree=args.sharded_degree, chunk=args.sharded_chunk,
+                           repeats=args.sharded_repeats,
+                           devices=args.sharded_devices)
+        print("SHARDED_JSON:" + json.dumps(recs), flush=True)
+        return
     recs = run(args.rounds, tuple(args.nodes), repeats=args.repeats, save=False)
     if args.sparse_rounds > 0:
         recs += run_sparse(args.sparse_rounds, n=args.sparse_nodes,
                            repeats=args.sparse_repeats)
-    # one write, after all sections; a sparse-only smoke (--rounds 0, as in
-    # CI) records separately so it never clobbers the dispatch-gate file
-    save_results("bench_engine" if args.rounds > 0 else "bench_engine_sparse", recs)
+    if args.sharded_rounds > 0:
+        recs += run_sharded(args.sharded_rounds, n=args.sparse_nodes,
+                            degree=args.sharded_degree,
+                            chunk=args.sharded_chunk,
+                            repeats=args.sharded_repeats,
+                            devices=args.sharded_devices)
+    # one write, after all sections; section-only smokes (--rounds 0, as in
+    # CI) record separately so they never clobber the dispatch-gate file
+    if args.rounds > 0:
+        bench = "bench_engine"
+    elif args.sparse_rounds > 0:
+        bench = "bench_engine_sparse"
+    else:
+        bench = "bench_engine_sharded"
+    if recs:
+        save_results(bench, recs)
     print("\nname,rounds_per_s|op_us")
     for r in recs:
         v = r.get("rounds_per_s", r.get("op_us"))

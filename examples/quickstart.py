@@ -28,6 +28,9 @@ def main():
                     help="rounds per compiled scan chunk (0 = legacy per-round)")
     ap.add_argument("--network", default="none", choices=["none", "lan", "wan"],
                     help="simulated deployment for the wall-clock axis")
+    ap.add_argument("--shard-devices", type=int, default=0,
+                    help="shard the node axis over this many devices (CPU: "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_count)")
     args = ap.parse_args()
 
     # Dataset module: read, partition (non-IID 2-sharding), evaluate.
@@ -50,6 +53,7 @@ def main():
         local_steps=2, rounds=args.rounds, eval_every=10,
         chunk_rounds=args.chunk,        # rounds per compiled lax.scan
         network=args.network,           # NetworkModel (simulated time)
+        shard_devices=args.shard_devices,  # node axis over a device mesh
         results_dir="results/quickstart",
     )
     engine = RoundEngine(

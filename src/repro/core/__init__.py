@@ -5,15 +5,22 @@ from repro.core.topology import (
     Graph,
     PeerSampler,
     SparseTopology,
+    build_permute_schedule,
     circulant_offsets,
+    decompose_slot_permutations,
     mh_weight_table,
     neighbor_table,
     random_regular_neighbors,
 )
 from repro.core.mixing import (
+    NodeShard,
+    PermuteSchedule,
+    ShardedDense,
+    ShardedTopology,
     apply_W,
     mix_dense,
     mix_sparse,
+    mix_sparse_shmap,
     mix_fully,
     mix_circulant,
     mix_circulant_shmap,

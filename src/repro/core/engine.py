@@ -43,6 +43,31 @@ The engine executes rounds in **chunks of R rounds compiled into a single
   absolute round, node)), so they are chunk-boundary invariant without a
   per-round ``default_rng`` host loop.
 
+* **The chunk shards over a device mesh.**  With ``shard_devices=K`` the
+  same scanned chunk runs under ``shard_map`` on a 1-D node mesh
+  (``launch.mesh.make_node_mesh``): every node-stacked carry and scan
+  input — params stack, optimizer state, sharing state, per-chunk batches,
+  participation masks, mixing tables — is row-block sharded over the node
+  axis (B = N/K rows per device), local training stays embarrassingly
+  parallel, and only the gossip crosses devices.  Two distributed gossip
+  lowerings (``shard_backend``): ``'ppermute'`` slot-rebalances a static
+  ``SparseTopology`` into D permutation columns
+  (``topology.decompose_slot_permutations``) and applies each as
+  rotation-grouped `collective_permute`s — O(D·B·P) wire, the
+  interconnect-native path, generalizing the circulant shard_map mixer to
+  arbitrary sparse graphs; ``'gather'`` all-gathers the node axis and
+  reuses the single-device neighbor gather (any table, incl. per-round
+  dynamic stacks).  Per-round scalar metrics (effective degree, bytes,
+  simulated round time) are psum/pmax-reduced so every device carries the
+  same global values, per-node PRNG draws are keyed by global node id
+  (``sharing._node_keys``) so sharded trajectories reproduce the
+  single-device ones (bit-identical on the gather path; within fp32
+  reassociation tolerance where slot rebalancing reorders per-receiver
+  sums), and secure aggregation exchanges its masked messages along the
+  same permutations.  Testable on CPU via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+  (tests/test_sharded_engine.py).
+
 Chunk boundaries are aligned to the eval cadence, so the recorded history
 is identical to per-round execution; distinct chunk lengths (full chunks
 vs the remainder before an eval round) each compile once and are cached.
@@ -61,14 +86,27 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import sharing as sharing_lib
+from repro.core.mixing import (
+    NodeShard,
+    PermuteSchedule,
+    ShardedDense,
+    ShardedTopology,
+)
 from repro.core.network import NetworkModel, paper_testbed, wan_deployment
 from repro.core.secure import SecureAggregation
 from repro.core.sharing import participation_reweight, participation_reweight_sparse
-from repro.core.topology import Graph, PeerSampler, SparseTopology
+from repro.core.topology import (
+    Graph,
+    PeerSampler,
+    SparseTopology,
+    decompose_slot_permutations,
+)
 from repro.optim import Optimizer
 from repro.optim.optimizers import apply_updates
+from repro.utils.compat import shard_map
 from repro.utils.pytree import tree_unvector, tree_vector
 
 # cap on the (R, N, N) mixing-matrix stack a single *dense-path* chunk
@@ -100,6 +138,9 @@ class DLConfig:
     # --- engine (scan) execution ------------------------------------------
     chunk_rounds: int = 8      # rounds per compiled lax.scan chunk; 0 = legacy
     mixing: str = "auto"       # auto | sparse (neighbor tables) | dense (N,N W)
+    # --- multi-device execution -------------------------------------------
+    shard_devices: int = 0     # shard the node axis over this many devices
+    shard_backend: str = "auto"  # auto | ppermute (slot collective_permutes) | gather
     # --- scenario axes -----------------------------------------------------
     participation: float = 1.0  # P(node active in a round); <1 models churn
     network: str = "none"       # simulated network: none | lan | wan
@@ -190,6 +231,30 @@ class RoundEngine:
         self.share_state = self.sharing.init_state(X0)
         self.n_params = int(X0.shape[1])
         self.mix_mode = self._resolve_mix_mode()
+        # --- node-axis sharding (multi-device execution) -------------------
+        self.sharded = dl.shard_devices > 0
+        self._shard: Optional[NodeShard] = None
+        self._perm_sched: Optional[PermuteSchedule] = None
+        if self.sharded:
+            if dl.chunk_rounds <= 0:
+                raise ValueError(
+                    "shard_devices requires the scanned chunk path "
+                    "(chunk_rounds > 0); the legacy per-round dispatch is "
+                    "single-device only"
+                )
+            if dl.n_nodes % dl.shard_devices:
+                raise ValueError(
+                    f"n_nodes={dl.n_nodes} must divide evenly over "
+                    f"shard_devices={dl.shard_devices}"
+                )
+            from repro.launch.mesh import make_node_mesh
+
+            self._mesh = make_node_mesh(dl.shard_devices)
+            self._shard = NodeShard(
+                "nodes", (dl.shard_devices,), dl.n_nodes // dl.shard_devices
+            )
+            self._shard_backend = self._resolve_shard_backend()
+            self._shard_jit_cache: Dict = {}
         # peak host->device bytes staged per chunk (or once, if static) for
         # the mixing topology — O(N·d) sparse vs 4·N² dense; the perf gate
         # benchmarks record it
@@ -201,6 +266,19 @@ class RoundEngine:
             if self.mix_mode == "sparse":
                 # never materialize the (N, N) W on the sparse path
                 st = SparseTopology.from_graph(self.graph)
+                if self.sharded and self._shard_backend == "ppermute":
+                    # slot-rebalance the table so each column is a
+                    # permutation lowering to collective_permutes
+                    dec = decompose_slot_permutations(st)
+                    if dec is None:
+                        raise ValueError(
+                            "topology does not decompose into per-slot "
+                            "permutations; use shard_backend='gather'"
+                        )
+                    st = dec
+                    self._perm_sched = PermuteSchedule.from_table(
+                        dec.nbr, dl.shard_devices
+                    )
                 self._mix_static = SparseTopology(
                     jnp.asarray(st.nbr), jnp.asarray(st.w), jnp.asarray(st.w_self)
                 )
@@ -240,6 +318,33 @@ class RoundEngine:
         self._legacy_jit = jax.jit(self._legacy_round)
         self._eval_jit = jax.jit(self._eval)
 
+    def _resolve_shard_backend(self) -> str:
+        """Distributed gossip lowering: 'ppermute' decomposes the static
+        neighbor table into per-slot permutations, each applied as
+        rotation-grouped `collective_permute`s (O(D·B·P) wire — the mesh-
+        native path); 'gather' all-gathers the node axis and reuses the
+        single-device neighbor gather (any table, incl. per-round dynamic
+        ones whose schedule cannot be static).  'auto' picks ppermute on
+        TPU interconnects and gather on CPU emulation, where host-emulated
+        collectives cost more than the bytes they save."""
+        b = self.dl.shard_backend
+        if b not in ("auto", "ppermute", "gather"):
+            raise ValueError(
+                f"unknown shard_backend {b!r} (auto|ppermute|gather)"
+            )
+        static_sparse = self.sampler is None and self.mix_mode == "sparse"
+        if b == "ppermute":
+            if not static_sparse:
+                raise ValueError(
+                    "shard_backend='ppermute' needs a static sparse "
+                    "topology (dynamic tables have no static schedule; "
+                    "dense mixing all-gathers by construction)"
+                )
+            return b
+        if b == "auto" and static_sparse and jax.default_backend() == "tpu":
+            return "ppermute"
+        return "gather"
+
     def _resolve_mix_mode(self) -> str:
         """'sparse' (neighbor-indexed O(N·d·P) gossip) for sparse overlays,
         'dense' (W @ X) where the graph is effectively complete."""
@@ -274,16 +379,19 @@ class RoundEngine:
 
         return jax.tree_util.tree_map(f, new, old)
 
-    def _local_train(self, params, opt_state, bx, by, active):
+    def _local_train(self, params, opt_state, bx, by, active, shard=None):
         def node_grad(p, x, y):
             return jax.grad(self.loss_fn)(p, x, y)
 
+        if self.lr_scales is not None:
+            # sharded: slice this device's block of the per-node multipliers
+            lrs = shard.local(self.lr_scales) if shard is not None else self.lr_scales
         # local_steps is small and static: unroll instead of nesting a scan
         for s in range(bx.shape[0]):
             grads = jax.vmap(node_grad)(params, bx[s], by[s])
             updates, new_opt = jax.vmap(self.opt.update)(grads, opt_state, params)
             if self.lr_scales is not None:
-                updates = self._node_scale(updates, self.lr_scales)
+                updates = self._node_scale(updates, lrs)
             if active is not None:
                 # down nodes do no local work: zero update, frozen opt state
                 updates = self._node_scale(updates, active)
@@ -291,13 +399,33 @@ class RoundEngine:
             params, opt_state = apply_updates(params, updates), new_opt
         return params, opt_state
 
-    def _round_time(self, Wm, active, nbytes, deg_eff):
+    def _round_time(self, Wm, active, nbytes, deg_eff, shard=None):
         """Simulated synchronous-round wall-clock, traced (network.py's
         round_time vectorized over the reweighted mixing operand).  For a
         SparseTopology the per-edge latency/goodput are gathered through the
-        neighbor table — O(N·D) — instead of masking (N, N) matrices."""
+        neighbor table — O(N·D) — instead of masking (N, N) matrices.
+        Sharded: rows are this device's block (global ids index the
+        replicated latency/goodput matrices) and the synchronous-round max
+        is a pmax over the node axis."""
         per_edge = jnp.where(deg_eff > 0, nbytes / jnp.maximum(deg_eff, 1e-9), 0.0)
-        if isinstance(Wm, SparseTopology):
+        if isinstance(Wm, ShardedTopology):
+            topo, rows = Wm.topo, Wm.rows[:, None]
+            A = (topo.w > 0).astype(jnp.float32)
+            t_edge = (
+                self._lat[rows, topo.nbr]
+                + per_edge * 8.0 / self._goodput[rows, topo.nbr]
+            )
+        elif isinstance(Wm, ShardedDense):
+            rows = Wm.rows
+            offdiag = (jnp.arange(Wm.W.shape[1])[None, :] != rows[:, None]).astype(
+                jnp.float32
+            )
+            A = (Wm.W * offdiag > 0).astype(jnp.float32)
+            t_edge = (
+                jnp.take(self._lat, rows, axis=0)
+                + per_edge * 8.0 / jnp.take(self._goodput, rows, axis=0)
+            )
+        elif isinstance(Wm, SparseTopology):
             rows = jnp.arange(Wm.nbr.shape[0])[:, None]
             A = (Wm.w > 0).astype(jnp.float32)  # live edge slots post-reweight
             t_edge = (
@@ -316,16 +444,28 @@ class RoundEngine:
         node_t = self.dl.compute_time_s + comm
         if active is not None:
             node_t = active * node_t
-        return jnp.max(node_t)
+        t = jnp.max(node_t)
+        return shard.pmax(t) if shard is not None else t
 
-    def _train_and_mix(self, params, opt_state, share_state, bx, by, W, active, rnd):
+    def _train_and_mix(self, params, opt_state, share_state, bx, by, W, active,
+                       rnd, shard=None):
         """One round.  ``active`` is None for full participation (statically
         skips masking/reweighting: W flows through untouched and the degree
-        stays a Python float, exactly like per-round dispatch did)."""
+        stays a Python float, exactly like per-round dispatch did).
+        ``shard`` is the node-axis sharding inside a shard_map body (all
+        node-stacked operands are then this device's row blocks)."""
         key = jax.random.fold_in(self._base_key, rnd)
-        params, opt_state = self._local_train(params, opt_state, bx, by, active)
+        params, opt_state = self._local_train(params, opt_state, bx, by, active, shard)
         if active is not None:
-            if isinstance(W, SparseTopology):
+            if isinstance(W, ShardedTopology):
+                t2, deg_eff = participation_reweight_sparse(
+                    W.topo, active, shard=W.shard
+                )
+                Wm = ShardedTopology(t2, W.shard, W.sched)
+            elif isinstance(W, ShardedDense):
+                W2, deg_eff = participation_reweight(W.W, active, shard=W.shard)
+                Wm = ShardedDense(W2, W.shard)
+            elif isinstance(W, SparseTopology):
                 Wm, deg_eff = participation_reweight_sparse(W, active)
             else:
                 Wm, deg_eff = participation_reweight(W, active)
@@ -352,7 +492,7 @@ class RoundEngine:
             params = new_params
         nbytes = jnp.asarray(nbytes, jnp.float32)
         if self._lat is not None:
-            sim_t = self._round_time(Wm, active, nbytes, deg_eff)
+            sim_t = self._round_time(Wm, active, nbytes, deg_eff, shard)
         else:
             sim_t = jnp.float32(0.0)
         return params, opt_state, share_state, nbytes, sim_t
@@ -383,6 +523,105 @@ class RoundEngine:
             body, (params, opt_state, share_state), xs
         )
         return carry + (nbytes, times)
+
+    # ------------------------------------------------------------------
+    # node-sharded chunk execution (shard_map over the device mesh)
+    # ------------------------------------------------------------------
+    def _wrap_mix(self, mix):
+        """Sharded mixing operand for one round inside the shard body.
+
+        ``mix`` is the scanned per-round operand (this device's row block,
+        cut by the in_specs) or None for static topologies — those capture
+        the full replicated tables and slice the local block by device
+        index, keeping the wrapper shapes identical either way."""
+        shard = self._shard
+        if mix is None:
+            if self.mix_mode == "sparse":
+                st = self._mix_static
+                topo_l = SparseTopology(
+                    shard.local(st.nbr), shard.local(st.w), shard.local(st.w_self)
+                )
+                return ShardedTopology(topo_l, shard, self._perm_sched)
+            return ShardedDense(shard.local(self._mix_static), shard)
+        if isinstance(mix, SparseTopology):
+            return ShardedTopology(mix, shard, None)
+        return ShardedDense(mix, shard)
+
+    def _chunk_fn_sharded(self, params, opt_state, share_state, xs):
+        """The scanned chunk, run inside shard_map: every node-stacked
+        carry/input is this device's (B, ...) row block; gossip crosses
+        devices through the sharded mixing operand (collective_permute
+        slots or all-gather — see mixing.ShardedTopology) and the per-round
+        scalar metrics are psum/pmax-reduced so each device returns the
+        same global values."""
+
+        def body(carry, xs_r):
+            params, opt_state, share_state = carry
+            W = self._wrap_mix(xs_r.get("mix"))
+            act = xs_r.get("act")
+            if "bx" in xs_r:
+                bx, by = xs_r["bx"], xs_r["by"]
+            else:  # oversized chunk: gather this block's batches per round
+                bx = jnp.take(self._dev_x, xs_r["idx"], axis=0)
+                by = jnp.take(self._dev_y, xs_r["idx"], axis=0)
+            params, opt_state, share_state, nbytes, sim_t = self._train_and_mix(
+                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"],
+                shard=self._shard,
+            )
+            return (params, opt_state, share_state), (nbytes, sim_t)
+
+        carry, (nbytes, times) = jax.lax.scan(
+            body, (params, opt_state, share_state), xs
+        )
+        return carry + (nbytes, times)
+
+    def _xs_pspec(self, xs):
+        """Per-leaf PartitionSpecs for the scan-input dict: the node axis of
+        every leaf maps to the mesh 'nodes' axis, everything else is
+        replicated."""
+
+        def spec(path, leaf):
+            key = path[0].key
+            if key == "rnd":
+                return P()
+            if key in ("bx", "by", "idx"):  # (R, L, N, B, ...)
+                return P(None, None, "nodes", *((None,) * (leaf.ndim - 3)))
+            if key == "act":                # (R, N)
+                return P(None, "nodes")
+            if key == "mix":                # (R, N, N) W or (R, N, D)/(R, N) tables
+                return P(None, "nodes", *((None,) * (leaf.ndim - 2)))
+            raise KeyError(f"unknown scan input {key!r}")
+
+        return jax.tree_util.tree_map_with_path(spec, xs)
+
+    def _node_pspec(self, tree):
+        return jax.tree_util.tree_map(
+            lambda l: P("nodes", *((None,) * (l.ndim - 1))), tree
+        )
+
+    def _sharded_chunk_call(self, xs):
+        """shard_map-wrap + jit the chunk for this xs structure (cached —
+        structures recur: full chunks and the pre-eval remainder)."""
+        leaves, treedef = jax.tree_util.tree_flatten(xs)
+        key = (treedef, tuple(l.ndim for l in leaves))
+        fn = self._shard_jit_cache.get(key)
+        if fn is None:
+            state_specs = (
+                self._node_pspec(self.params),
+                self._node_pspec(self.opt_state),
+                self._node_pspec(self.share_state),
+            )
+            fn = jax.jit(
+                shard_map(
+                    self._chunk_fn_sharded,
+                    mesh=self._mesh,
+                    in_specs=state_specs + (self._xs_pspec(xs),),
+                    out_specs=state_specs + (P(), P()),
+                    check_vma=False,
+                )
+            )
+            self._shard_jit_cache[key] = fn
+        return fn(self.params, self.opt_state, self.share_state, xs)
 
     def _legacy_round(self, params, opt_state, share_state, bx, by, W, active, rnd):
         return self._train_and_mix(params, opt_state, share_state, bx, by, W, active, rnd)
@@ -467,7 +706,10 @@ class RoundEngine:
             self.topo_stage_bytes_peak = max(self.topo_stage_bytes_peak, staged)
         if dl.participation < 1.0:
             xs["act"] = jnp.asarray(self._participation_mask(start, n_rounds))
-        out = self._chunk_jit(self.params, self.opt_state, self.share_state, xs)
+        if self.sharded:
+            out = self._sharded_chunk_call(xs)
+        else:
+            out = self._chunk_jit(self.params, self.opt_state, self.share_state, xs)
         self.params, self.opt_state, self.share_state, nbytes, times = out
         # ONE host sync per chunk for all per-round metrics
         self.bytes_sent += float(np.asarray(nbytes, np.float64).sum())

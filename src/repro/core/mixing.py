@@ -21,6 +21,13 @@ x_i' = sum_j W_ij x_j  (W = Metropolis-Hastings weights of the overlay):
                        offset to one `collective_permute` on the TPU mesh —
                        the TPU-native analogue of point-to-point sends.
 * ``mix_fully``      — fully-connected topology = plain mean (all-reduce).
+* ``mix_sparse_shmap`` — node-sharded ``mix_sparse``: the table is
+                       slot-rebalanced into permutation columns and each
+                       slot becomes rotation-grouped `collective_permute`s
+                       (gather fallback otherwise) — the multi-device
+                       generalization of ``mix_circulant_shmap`` the
+                       sharded RoundEngine builds on (see the
+                       ShardedTopology/ShardedDense section below).
 
 All operate on node-stacked pytrees (leading axis N).  ``apply_W`` is the
 strategy-facing primitive: one W @ Y that accepts either a dense (N, N)
@@ -28,6 +35,7 @@ matrix or a ``SparseTopology`` so every sharing strategy supports both.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Sequence
 
@@ -35,8 +43,203 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.topology import Graph, SparseTopology, circulant_offsets
+from repro.core.topology import (
+    Graph,
+    SparseTopology,
+    build_permute_schedule,
+    circulant_offsets,
+    decompose_slot_permutations,
+)
 from repro.utils.compat import shard_map
+
+
+# ---------------------------------------------------------------------------
+# node-sharded gossip: the distributed backends of mix_sparse / apply_W
+# ---------------------------------------------------------------------------
+#
+# Inside a `shard_map` body the node axis is block-sharded: each device holds
+# B = N/ndev consecutive node rows of every node-stacked tensor.  The two
+# wrapper types below are what strategy code sees in place of the dense W /
+# SparseTopology mixing operand — `apply_W` dispatches on them, so every
+# sharing strategy (full, randk, topk, choco, secure) runs distributed
+# without code changes:
+#
+# * ``ShardedTopology`` — local (B, D) neighbor tables plus, when the table
+#   decomposes into per-slot permutations (topology.decompose_slot_
+#   permutations), a static `PermuteSchedule`: slot s's permutation column is
+#   applied as a handful of rotation-grouped `collective_permute`s carrying
+#   only the rows that cross devices — O(D·B·P) wire per mix instead of
+#   all-gather's O(N·P) (with one node per device this is literally one
+#   ppermute per slot, the generalization of mix_circulant_shmap to
+#   arbitrary sparse graphs).  Tables that don't decompose (or per-round
+#   dynamic tables, whose schedule can't be static) fall back to
+#   all-gather + local neighbor gather — bit-identical to the single-device
+#   path because each row's arithmetic is unchanged.
+# * ``ShardedDense`` — local (B, N) W rows; all-gather + local matmul.
+
+
+@dataclasses.dataclass(eq=False, frozen=True)
+class NodeShard:
+    """Static description of the node-axis sharding inside a shard_map body.
+
+    axis: mesh axis name (or tuple of names) forming the node dimension;
+    sizes: matching mesh axis sizes; block: rows per device (B = N/ndev).
+    """
+
+    axis: object            # str | tuple[str, ...]
+    sizes: tuple
+    block: int
+
+    @property
+    def ndev(self) -> int:
+        n = 1
+        for s in self.sizes:
+            n *= s
+        return n
+
+    @property
+    def n(self) -> int:
+        return self.ndev * self.block
+
+    def dev(self):
+        """Linear device index along the node axis (traced)."""
+        axes = (self.axis,) if isinstance(self.axis, str) else tuple(self.axis)
+        idx = jnp.int32(0)
+        for a, s in zip(axes, self.sizes):
+            idx = idx * s + jax.lax.axis_index(a)
+        return idx
+
+    def rows(self):
+        """Global node ids of this device's block, (B,) int32 (traced)."""
+        return self.dev() * self.block + jnp.arange(self.block, dtype=jnp.int32)
+
+    def gather(self, x):
+        """all-gather the node axis: (B, ...) -> (N, ...)."""
+        return jax.lax.all_gather(x, self.axis, axis=0, tiled=True)
+
+    def local(self, x):
+        """Slice this device's (B, ...) row block out of a replicated
+        (N, ...) array (for closure-captured per-node constants)."""
+        return jax.lax.dynamic_slice_in_dim(x, self.dev() * self.block, self.block, 0)
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axis)
+
+    def pmax(self, x):
+        return jax.lax.pmax(x, self.axis)
+
+
+@dataclasses.dataclass(eq=False)
+class PermuteSchedule:
+    """Static rotation-grouped transfer tables for per-slot permutation
+    gossip (see topology.build_permute_schedule).  Identity-hashed: engines
+    build one per static topology and reuse it across traces."""
+
+    slots: list  # per slot: {rotation: (send_idx (ndev, K), recv_pos (ndev, K))}
+
+    @staticmethod
+    def from_table(nbr_perm, ndev: int) -> "PermuteSchedule":
+        return PermuteSchedule(build_permute_schedule(nbr_perm, ndev))
+
+
+def _permute_block(x, slot_sched, shard: NodeShard):
+    """Apply one global node permutation to a block-sharded (B, ...) array:
+    out[i] = x_global[src[global_row(i)]], via one `collective_permute` per
+    device rotation that actually carries traffic (rotation 0 is a local
+    move).  Padded lanes scatter out of range and are dropped."""
+    dev = shard.dev()
+    ndev, b = shard.ndev, shard.block
+    out = jnp.zeros_like(x)
+    for r in sorted(slot_sched):
+        send_idx, recv_pos = slot_sched[r]
+        si = jax.lax.dynamic_index_in_dim(jnp.asarray(send_idx), dev, 0, keepdims=False)
+        rp = jax.lax.dynamic_index_in_dim(jnp.asarray(recv_pos), dev, 0, keepdims=False)
+        payload = jnp.take(x, si, axis=0)
+        if r != 0:
+            axes = (shard.axis,) if isinstance(shard.axis, str) else shard.axis
+            axis = axes[0] if len(axes) == 1 else tuple(axes)
+            pairs = [(d, (d + r) % ndev) for d in range(ndev)]
+            payload = jax.lax.ppermute(payload, axis, pairs)
+        out = out.at[rp].set(payload, mode="drop")
+    return out
+
+
+@dataclasses.dataclass(eq=False)
+class ShardedTopology:
+    """Node-sharded view of a SparseTopology inside a shard_map body.
+
+    topo: this device's (B, D) row block of the (rebalanced, when ``sched``
+    is set) neighbor/weight tables — traced leaves, so churn reweighting
+    updates the weights per round while the communication schedule stays
+    static.  Registered as a pytree (shard/sched are static aux data).
+    """
+
+    topo: SparseTopology
+    shard: NodeShard
+    sched: Optional[PermuteSchedule] = None
+
+    @property
+    def rows(self):
+        return self.shard.rows()
+
+    @property
+    def w(self):
+        return self.topo.w
+
+    def neighbor_stack(self, Y):
+        """(B, D, ...) stack of each local receiver's neighbor rows of the
+        node-stacked Y — slot-permutation exchange when the schedule exists,
+        all-gather + local gather otherwise."""
+        if self.sched is not None:
+            return jnp.stack(
+                [_permute_block(Y, s, self.shard) for s in self.sched.slots], axis=1
+            )
+        return jnp.take(self.shard.gather(Y), self.topo.nbr, axis=0)
+
+    def apply(self, Yf):
+        """Row-block of W @ Y_global for local rows; Yf: (B, ...) float32."""
+        w = self.topo.w.astype(jnp.float32)
+        w_self = self.topo.w_self.astype(jnp.float32).reshape(
+            (Yf.shape[0],) + (1,) * (Yf.ndim - 1)
+        )
+        if self.sched is None:
+            g = jnp.take(self.shard.gather(Yf), self.topo.nbr, axis=0)
+            return w_self * Yf + jnp.einsum("nd,nd...->n...", w, g)
+        acc = w_self * Yf
+        for s, slot_sched in enumerate(self.sched.slots):
+            xs = _permute_block(Yf, slot_sched, self.shard)
+            ws = w[:, s].reshape((Yf.shape[0],) + (1,) * (Yf.ndim - 1))
+            acc = acc + ws * xs
+        return acc
+
+
+@dataclasses.dataclass(eq=False)
+class ShardedDense:
+    """Node-sharded dense mixing operand: this device's (B, N) W rows."""
+
+    W: jax.Array
+    shard: NodeShard
+
+    @property
+    def rows(self):
+        return self.shard.rows()
+
+    def apply(self, Yf):
+        return jnp.einsum(
+            "bn,n...->b...", self.W.astype(jnp.float32), self.shard.gather(Yf)
+        )
+
+
+jax.tree_util.register_pytree_node(
+    ShardedTopology,
+    lambda t: ((t.topo,), (t.shard, t.sched)),
+    lambda aux, leaves: ShardedTopology(leaves[0], *aux),
+)
+jax.tree_util.register_pytree_node(
+    ShardedDense,
+    lambda t: ((t.W,), (t.shard,)),
+    lambda aux, leaves: ShardedDense(leaves[0], *aux),
+)
 
 
 def mix_dense(stacked, W):
@@ -58,6 +261,8 @@ def apply_W(W, Y):
     without ever materializing an (N, N) matrix.
     """
     Yf = Y.astype(jnp.float32)
+    if isinstance(W, (ShardedTopology, ShardedDense)):
+        return W.apply(Yf)  # inside a shard_map body: Y is this device's rows
     if isinstance(W, SparseTopology):
         g = jnp.take(Yf, W.nbr, axis=0)  # (N, D, ...)
         mixed = jnp.einsum("nd,nd...->n...", W.w.astype(jnp.float32), g)
@@ -190,6 +395,61 @@ def mix_circulant_shmap(stacked, mesh, node_axes, degree: int,
     fn = shard_map(local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                        check_vma=False)
     mixed = fn(weights, *leaves)
+    return jax.tree_util.tree_unflatten(treedef, mixed)
+
+
+def mix_sparse_shmap(stacked, topo: SparseTopology, mesh, node_axes, *,
+                     pspecs=None, backend: str = "auto"):
+    """Distributed neighbor-indexed gossip: x_i' = w_self_i x_i +
+    sum_k w[i,k] x_nbr[i,k] with the node axis sharded over ``mesh``.
+
+    Generalizes ``mix_circulant_shmap`` from circulant offsets to any
+    static ``SparseTopology``: the padded (N, D) table is slot-rebalanced
+    into D permutation columns (topology.decompose_slot_permutations), and
+    each column lowers to rotation-grouped `collective_permute`s — exactly
+    one ppermute per slot when N equals the device count.  Tables that
+    don't decompose (or backend="gather") use all-gather + local gather.
+
+    node_axes: mesh axis name(s) forming the node dimension; N must be a
+    multiple of the product of their sizes, and every leaf's leading dim N.
+    backend: "auto" (ppermute when decomposable) | "ppermute" | "gather".
+    """
+    if backend not in ("auto", "ppermute", "gather"):
+        raise ValueError(f"unknown backend {backend!r} (auto|ppermute|gather)")
+    sizes = tuple(mesh.shape[a] for a in node_axes)
+    ndev = 1
+    for s in sizes:
+        ndev *= s
+    n = topo.n
+    assert n % ndev == 0, f"N={n} must divide over {ndev} devices"
+    axis = tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
+    shard = NodeShard(axis, sizes, n // ndev)
+    table, sched = topo, None
+    if backend != "gather":
+        dec = decompose_slot_permutations(topo)
+        if dec is not None:
+            table = dec
+            sched = PermuteSchedule.from_table(dec.nbr, ndev)
+        elif backend == "ppermute":
+            raise ValueError("topology does not decompose into per-slot "
+                             "permutations; use backend='gather'")
+    tables = jax.tree_util.tree_map(jnp.asarray, table)
+
+    def local(nbr, w, w_self, *leaves):
+        st = ShardedTopology(SparseTopology(nbr, w, w_self), shard, sched)
+        return tuple(st.apply(a.astype(jnp.float32)).astype(a.dtype) for a in leaves)
+
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    if pspecs is not None:
+        spec_leaves = jax.tree_util.tree_flatten(pspecs)[0]
+    else:
+        spec_leaves = [P(node_axes, *((None,) * (l.ndim - 1))) for l in leaves]
+    tspecs = (P(node_axes, None), P(node_axes, None), P(node_axes))
+    fn = shard_map(
+        local, mesh=mesh, in_specs=tspecs + tuple(spec_leaves),
+        out_specs=tuple(spec_leaves), check_vma=False,
+    )
+    mixed = fn(tables.nbr, tables.w, tables.w_self, *leaves)
     return jax.tree_util.tree_unflatten(treedef, mixed)
 
 

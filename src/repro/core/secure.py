@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.mixing import ShardedDense, ShardedTopology
 from repro.core.topology import SparseTopology, neighbor_table
 from repro.kernels import ops as kernel_ops
 from repro.kernels.ref import mask_bits_to_uniform
@@ -136,20 +137,60 @@ class SecureAggregation:
         messages in one pass.  Finally each receiver sums its valid masked
         messages with weight w.
         """
+        if isinstance(W, (ShardedTopology, ShardedDense)):
+            return self._round_sharded(X, W, state, key, degree, rnd)
         N, P = X.shape
         Xf = X.astype(jnp.float32)
         nbr = jnp.asarray(self._nbr)                      # (N, D)
         validf = jnp.asarray(self._valid, jnp.float32)
-        D = nbr.shape[1]
         if isinstance(W, SparseTopology):
-            # slot 0 is a real neighbor whenever deg(r) > 0 (padded tables
-            # pack valid slots first); padding weight 0 is harmless below
-            wvec = W.w.astype(jnp.float32)[:, 0]
+            # the secure contract requires equal weights across a receiver's
+            # neighbors, so any live slot's weight works: row max skips
+            # w=0 padding (and any zeroed slot), where slot 0 alone would not
+            wvec = jnp.max(W.w.astype(jnp.float32), axis=1)
         else:
             Wf = W.astype(jnp.float32)
             wvec = jnp.take_along_axis(Wf, nbr[:, :1], axis=1)[:, 0]
-        kr = jax.random.fold_in(key, rnd)
+        Xnbr = jnp.take(Xf, nbr, axis=0)                   # (N, D, P)
+        return self._masked_aggregate(
+            Xf, Xnbr, nbr, validf, wvec, jnp.arange(N), key, rnd, degree, X.dtype, state
+        )
 
+    def _round_sharded(self, X, W, state, key, degree, rnd):
+        """Node-sharded masked aggregation (inside a shard_map body): X is
+        this device's (B, P) row block, W the sharded mixing operand.  The
+        co-neighbor messages arrive through ``W.neighbor_stack`` — the same
+        per-slot `collective_permute` permutations (or the all-gather
+        fallback) the plain gossip path uses — and the pair-PRF bits are
+        keyed by *global* node ids, so every mask pair still cancels
+        exactly as in the single-device schedule."""
+        B, P = X.shape
+        Xf = X.astype(jnp.float32)
+        if isinstance(W, ShardedTopology):
+            nbr = W.topo.nbr                               # (B, D), rebalanced order
+            validf = (W.topo.w > 0).astype(jnp.float32)
+            # equal-weight assumption (regular graphs): row max skips the
+            # w=0 padding slots the rebalanced table interleaves
+            wvec = jnp.max(W.topo.w.astype(jnp.float32), axis=1)
+            Xnbr = W.neighbor_stack(Xf)                    # (B, D, P)
+        else:
+            rows = W.rows
+            nbr = jnp.take(jnp.asarray(self._nbr), rows, axis=0)
+            validf = jnp.take(jnp.asarray(self._valid, jnp.float32), rows, axis=0)
+            wvec = jnp.take_along_axis(W.W.astype(jnp.float32), nbr[:, :1], axis=1)[:, 0]
+            Xnbr = jnp.take(W.shard.gather(Xf), nbr, axis=0)
+        return self._masked_aggregate(
+            Xf, Xnbr, nbr, validf, wvec, W.rows, key, rnd, degree, X.dtype, state
+        )
+
+    def _masked_aggregate(self, Xf, Xnbr, nbr, validf, wvec, rows, key, rnd,
+                          degree, dtype, state):
+        """Shared core of the vectorized path: per-slot PRF bits + fused
+        mask apply + weighted receiver sum.  ``rows`` are the global node
+        ids of the local receiver rows (arange unsharded)."""
+        P = Xf.shape[1]
+        D = nbr.shape[1]
+        kr = jax.random.fold_in(key, rnd)
         i_mat = nbr[:, :, None]                            # sender node
         j_mat = nbr[:, None, :]                            # co-neighbor node
         signs = (
@@ -157,7 +198,6 @@ class SecureAggregation:
             * validf[:, None, :]
             * (1.0 - jnp.eye(D, dtype=jnp.float32))
         )                                                  # (N, D, D)
-        Xnbr = jnp.take(Xf, nbr, axis=0)                   # (N, D, P)
 
         def slot_msgs(ii):
             def receiver_bits(r, nbr_r):
@@ -169,7 +209,7 @@ class SecureAggregation:
 
                 return jax.vmap(pair)(nbr_r)               # (D, P)
 
-            bits = jax.vmap(receiver_bits)(jnp.arange(N), nbr)  # (N, D, P)
+            bits = jax.vmap(receiver_bits)(rows, nbr)      # (N, D, P)
             return kernel_ops.secure_mask_apply_nodes(
                 jnp.take(Xnbr, ii, axis=1),
                 bits,
@@ -184,7 +224,7 @@ class SecureAggregation:
         )
         X2 = jnp.where((deg_r > 0)[:, None], acc, Xf)
         bytes_sent = degree * P * BYTES_VAL * (1.0 + METADATA_OVERHEAD)
-        return X2.astype(X.dtype), state, bytes_sent
+        return X2.astype(dtype), state, bytes_sent
 
     def round_reference(self, X, W, state, key, degree: float, rnd: int = 0):
         """Python-scheduled reference: aggregate the dict of masked

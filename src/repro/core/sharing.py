@@ -35,7 +35,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mixing import apply_W
+from repro.core.mixing import NodeShard, ShardedDense, ShardedTopology, apply_W
 from repro.core.topology import SparseTopology
 
 BYTES_VAL = 4   # fp32 value on the wire
@@ -48,10 +48,31 @@ def _topk_mask(x_abs, k: int):
     return jnp.zeros_like(x_abs, bool).at[jnp.arange(x_abs.shape[0])[:, None], idx].set(True)
 
 
-def _randk_mask(key, shape, k: int):
-    """k random coords per row via top-k of iid uniforms (no replacement)."""
-    u = jax.random.uniform(key, shape)
+def _node_keys(key, n_rows: int, rows=None):
+    """(n_rows,) per-node PRNG keys: fold_in of each node's *global* id.
+
+    Per-node keying (instead of one (N, P) draw from a single key) is what
+    lets a node-sharded engine reproduce the single-device randomness: each
+    device derives exactly the draws of the node rows it owns.  ``rows``
+    (traced global ids, from the sharded mixing operand) defaults to
+    arange — the unsharded node axis.
+    """
+    ids = jnp.arange(n_rows) if rows is None else rows
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+
+
+def _randk_mask(key, shape, k: int, rows=None):
+    """k random coords per row via top-k of iid uniforms (no replacement);
+    draws are per-node keyed (see _node_keys)."""
+    keys = _node_keys(key, shape[0], rows)
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, shape[1:]))(keys)
     return _topk_mask(u, k)
+
+
+def _mix_rows(W):
+    """Global node ids of W's rows: traced block ids for sharded operands
+    inside a shard_map body, None (= arange) otherwise."""
+    return W.rows if isinstance(W, (ShardedTopology, ShardedDense)) else None
 
 
 def sparse_aggregate(X, W, M):
@@ -61,7 +82,7 @@ def sparse_aggregate(X, W, M):
     return (Xf + apply_W(W, Mf * Xf) - Xf * apply_W(W, Mf)).astype(X.dtype)
 
 
-def participation_reweight(W, active):
+def participation_reweight(W, active, *, shard: Optional[NodeShard] = None):
     """Reweight a row-stochastic mixing matrix for a per-round node
     participation mask (churn / straggler dropout), fully traceable.
 
@@ -72,21 +93,35 @@ def participation_reweight(W, active):
     the active subgraph).  A down node's row becomes e_i, i.e. it keeps its
     own parameters unchanged through the gossip step.
 
+    shard: inside a shard_map body, the node-axis sharding — W is then this
+    device's (B, N) row block and ``active`` its (B,) block; the column
+    mask is all-gathered and the edge/alive counts psum'd so deg_eff is the
+    same global scalar on every device.
+
     Returns (W', deg_eff) where deg_eff is the mean number of live outgoing
     edges per *active* node — the traced degree the byte accounting uses.
     """
     Wf = W.astype(jnp.float32)
     m = active.astype(jnp.float32)
-    n = Wf.shape[0]
-    eye = jnp.eye(n, dtype=jnp.float32)
-    off = Wf * (1.0 - eye) * m[:, None] * m[None, :]
-    Wm = off + jnp.diag(1.0 - off.sum(1))
+    n = Wf.shape[1] if shard is not None else Wf.shape[0]
+    if shard is not None:
+        m_col = shard.gather(m)
+        diag = (jnp.arange(n)[None, :] == shard.rows()[:, None]).astype(jnp.float32)
+    else:
+        m_col = m
+        diag = jnp.eye(n, dtype=jnp.float32)
+    off = Wf * (1.0 - diag) * m[:, None] * m_col[None, :]
+    Wm = off + diag * (1.0 - off.sum(1, keepdims=True))
     edges = jnp.sum((off > 0).astype(jnp.float32))
-    deg_eff = edges / jnp.maximum(m.sum(), 1.0)
+    alive = m.sum()
+    if shard is not None:
+        edges, alive = shard.psum(edges), shard.psum(alive)
+    deg_eff = edges / jnp.maximum(alive, 1.0)
     return Wm, deg_eff
 
 
-def participation_reweight_sparse(topo: SparseTopology, active):
+def participation_reweight_sparse(topo: SparseTopology, active, *,
+                                  shard: Optional[NodeShard] = None):
     """Sparse-form :func:`participation_reweight`: mask neighbor *slots*
     whose endpoint (either side) is down and return the freed mass to the
     surviving diagonal — O(N·D), no (N, N) matrix ever materialized.
@@ -95,14 +130,21 @@ def participation_reweight_sparse(topo: SparseTopology, active):
     like the dense reweight's e_i rows; ``to_dense`` of the result equals
     the dense reweight of ``to_dense(topo)`` (property-tested).
 
+    shard: inside a shard_map body — topo/active are this device's row
+    blocks; the neighbor-endpoint mask is gathered and counts psum'd.
+
     Returns (SparseTopology, deg_eff) with deg_eff as in the dense form.
     """
     m = active.astype(jnp.float32)
-    pair = m[:, None] * jnp.take(m, topo.nbr, axis=0)        # (N, D)
+    m_nbr = shard.gather(m) if shard is not None else m
+    pair = m[:, None] * jnp.take(m_nbr, topo.nbr, axis=0)    # (N, D)
     w = topo.w.astype(jnp.float32) * pair
     w_self = 1.0 - w.sum(-1)                                 # down row -> 1.0
     edges = jnp.sum((w > 0).astype(jnp.float32))
-    deg_eff = edges / jnp.maximum(m.sum(), 1.0)
+    alive = m.sum()
+    if shard is not None:
+        edges, alive = shard.psum(edges), shard.psum(alive)
+    deg_eff = edges / jnp.maximum(alive, 1.0)
     return SparseTopology(topo.nbr, w, w_self), deg_eff
 
 
@@ -133,7 +175,7 @@ class RandomKSharing:
 
     def round(self, X, W, state, key, degree, rnd=0):
         k = max(1, int(self.budget * X.shape[1]))
-        M = _randk_mask(key, X.shape, k)
+        M = _randk_mask(key, X.shape, k, rows=_mix_rows(W))
         X2 = sparse_aggregate(X, W, M)
         return X2, state, degree * k * (BYTES_VAL + BYTES_IDX)
 
@@ -182,7 +224,7 @@ class ChocoSGD:
         if self.compressor == "topk":
             M = _topk_mask(jnp.abs(diff), k)
         else:
-            M = _randk_mask(key, X.shape, k)
+            M = _randk_mask(key, X.shape, k, rows=_mix_rows(W))
         q = jnp.where(M, diff, 0.0)
         xhat = state["xhat"] + q
         X2 = Xf + self.gamma * (apply_W(W, xhat) - xhat)
@@ -204,7 +246,11 @@ class QuantizedSharing:
     def round(self, X, W, state, key, degree, rnd=0):
         from repro.core.compression import dequantize_int8, quantize_int8
 
-        codes, scale = quantize_int8(X, key=key if self.stochastic else None)
+        if self.stochastic:
+            keys = _node_keys(key, X.shape[0], _mix_rows(W))
+            codes, scale = jax.vmap(lambda x, kk: quantize_int8(x, key=kk))(X, keys)
+        else:
+            codes, scale = quantize_int8(X)
         Xq = dequantize_int8(codes, scale)  # what the receivers reconstruct
         X2 = apply_W(W, Xq).astype(X.dtype)
         return X2, state, degree * (X.shape[1] * 1 + 4)  # int8 + scale

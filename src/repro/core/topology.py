@@ -341,6 +341,127 @@ class SparseTopology:
         return W
 
 
+def decompose_slot_permutations(topo: "SparseTopology") -> Optional["SparseTopology"]:
+    """Slot-rebalance a padded (N, D) neighbor table so every *column* is a
+    permutation of range(N) — the form multi-device gossip wants, because a
+    permutation column lowers to one `collective_permute` per slot (one node
+    per device) or a handful of device-rotation permutes (block-sharded).
+
+    Raw tables don't have this property: node j may appear twice in column
+    k (two receivers both keep j in slot k).  But the padded table *is*
+    decomposable whenever the underlying graph is symmetric: counting the
+    padding self-edges (nbr[i, k] = i, w = 0), every node appears exactly D
+    times as a destination (D slots per row) and exactly D times as a
+    source (deg(j) real occurrences + D - deg(j) self-pads), so the
+    directed-edge bipartite multigraph is D-regular and König's edge-coloring
+    theorem splits it into D perfect matchings.  Each matching becomes one
+    rebalanced slot; weights (and the w=0 padding markers) travel with
+    their edge, so ``to_dense`` of the result equals ``to_dense(topo)``
+    exactly.
+
+    Returns a new SparseTopology with the same (N, D) shape and the
+    permutation-column property, or None when no perfect matching exists
+    (asymmetric / irregular hand-built tables) — callers fall back to
+    gather-based gossip.
+    """
+    nbr = np.asarray(topo.nbr)
+    w = np.asarray(topo.w)
+    if nbr.ndim != 2:
+        return None
+    n, d = nbr.shape
+    import sys
+
+    limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(limit, 8 * n + 100))
+    try:
+        # dst -> list of (src, slot) edges still unassigned
+        adj: List[List[Tuple[int, int]]] = [
+            [(int(nbr[i, k]), k) for k in range(d)] for i in range(n)
+        ]
+        new_nbr = np.empty_like(nbr)
+        new_w = np.empty_like(w)
+        for s in range(d):
+            # Kuhn's augmenting-path perfect matching of dst -> src over the
+            # remaining edges (multigraph: parallel edges are distinct entries).
+            match_src = -np.ones(n, np.int64)   # src node -> dst it serves
+            match_edge = np.zeros(n, np.int64)  # src node -> slot of that edge
+
+            def try_assign(i, seen):
+                for src, k in adj[i]:
+                    if seen[src]:
+                        continue
+                    seen[src] = True
+                    if match_src[src] < 0 or try_assign(int(match_src[src]), seen):
+                        match_src[src] = i
+                        match_edge[src] = k
+                        return True
+                return False
+
+            for i in range(n):
+                if not try_assign(i, np.zeros(n, bool)):
+                    return None
+            for src in range(n):
+                i, k = int(match_src[src]), int(match_edge[src])
+                new_nbr[i, s] = src
+                new_w[i, s] = w[i, k]
+                adj[i].remove((src, k))
+        return SparseTopology(new_nbr, new_w, np.asarray(topo.w_self).copy())
+    finally:
+        sys.setrecursionlimit(limit)
+
+
+def build_permute_schedule(nbr_perm: np.ndarray, ndev: int):
+    """Per-slot rotation-grouped send/recv index tables for block-sharded
+    permutation gossip.
+
+    nbr_perm: (N, S) rebalanced table (every column a permutation — see
+    :func:`decompose_slot_permutations`).  With N nodes block-sharded over
+    ``ndev`` devices (B = N/ndev rows each), applying column s's permutation
+    means device e must receive, from each device d, the rows x[src] with
+    src on d and destination on e.  Grouping those transfers by the device
+    *rotation* r = (e - d) mod ndev makes each group one
+    `collective_permute` with the static pairing d -> (d + r) % ndev.
+
+    Returns a list over slots of ``{r: (send_idx, recv_pos)}`` where
+    send_idx[d] holds the *local* row indices device d sends under rotation
+    r (padded with 0) and recv_pos[e] the local destination rows on the
+    receiving device, padded with B so padded lanes scatter out of range
+    (dropped via ``mode='drop'``).  Only rotations with traffic appear —
+    a circulant overlay touches 1-2 rotations per slot, a random graph up
+    to ndev (total payload per slot stays one block either way, which is
+    the O(D·B·P) — instead of all-gather's O(N·P) — wire win).
+    """
+    n, s_slots = nbr_perm.shape
+    assert n % ndev == 0, "node count must divide evenly across devices"
+    b = n // ndev
+    out = []
+    for s in range(s_slots):
+        src = nbr_perm[:, s].astype(np.int64)
+        dst = np.arange(n, dtype=np.int64)
+        rot = ((dst // b) - (src // b)) % ndev
+        sched = {}
+        for r in np.unique(rot):
+            counts = []
+            pairs = []
+            for d in range(ndev):
+                sel = (rot == r) & (src // b == d)
+                i_sel = dst[sel]  # ascending — both sides enumerate this order
+                pairs.append((src[sel] % b, i_sel % b))
+                counts.append(i_sel.size)
+            k = max(counts)
+            if k == 0:
+                continue
+            send_idx = np.zeros((ndev, k), np.int32)
+            recv_pos = np.full((ndev, k), b, np.int32)  # b == out of range
+            for d, (s_loc, d_loc) in enumerate(pairs):
+                send_idx[d, : s_loc.size] = s_loc
+                e = (d + int(r)) % ndev
+                recv_pos[e, : d_loc.size] = d_loc
+            sched[int(r)] = (send_idx, recv_pos)
+        out.append(sched)
+    return out
+
+
 @dataclasses.dataclass
 class PeerSampler:
     """Centralized peer sampler (paper §3.2): instantiates a new random

@@ -4,12 +4,29 @@ touches jax device state (device count is locked at first jax init)."""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_node_mesh(n_devices: int = 0, axis: str = "nodes"):
+    """1-D mesh over the first ``n_devices`` local devices (all, if 0) with
+    a single node axis — what ``RoundEngine(shard_devices=...)`` shards the
+    emulated node dimension over.  On CPU,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` provides the
+    emulated devices; on TPU this is the flat view of the pod slice."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if len(devs) < n:
+        raise ValueError(
+            f"mesh wants {n} devices but only {len(devs)} are visible "
+            "(CPU emulation: set XLA_FLAGS=--xla_force_host_platform_device_count)"
+        )
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))
 
 
 def node_axes(mesh) -> tuple:
