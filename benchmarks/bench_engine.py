@@ -21,6 +21,14 @@ honest emulation cost of multi-device execution on one box (emulated
 collectives are host rendezvous; the wire win is a TPU story).  Runs in a
 subprocess with XLA_FLAGS set when the current process has fewer devices.
 
+Part 4 measures payload-form compressed sharing (DLConfig.payload='on':
+(N, k) idx/val payloads aggregated in one O(N·d·k) scatter pass) against
+the dense-mask oracle ('off': scattered (N, P) masks + two apply_W
+passes) at N=1024, d=6, budget=0.01, chunk=32 — the paper's sparsified
+1000+-node scenario where the wire format, not the math, decides
+throughput.  Gates: payload ≥ 3x dense-mask rounds/s (median), and the
+sharing stage's per-round staged message bytes reduced ≥ 10x.
+
 All timed sections record min/median/mean rounds/s over the repeats; the
 headline ``rounds_per_s`` (and any CI threshold) is the *median* — this
 box's spread under load makes best-of-N misleading.
@@ -60,6 +68,8 @@ from benchmarks.common import save_results
 SHAPE = (2, 2, 1)  # 4-dim inputs; batch staging stays negligible
 P_DISPATCH = 4     # part 1: 4-param state isolates the dispatch machinery
 P_MIXING = 256     # part 2: 256-param state so mixing FLOPs are the measured axis
+P_PAYLOAD = 1024   # part 4: 1024-param state so the sharing stage dominates
+#                    (budget 0.01 -> k=10 payload coords per node)
 
 
 def _rps_stats(samples):
@@ -89,8 +99,9 @@ def _engine(n_nodes: int, chunk: int, topology: str = "regular", degree: int = 5
     ds = make_dataset("cifar10", n_train=2048, n_test=64, shape=SHAPE, sigma=2.0)
     parts = sharding_partition(ds.train_y, n_nodes, 2, seed=0)
     batcher = NodeBatcher(ds.train_x, ds.train_y, parts, batch_size=4, seed=0)
+    dl_kw = {"local_steps": 1, **dl_kw}
     dl = DLConfig(n_nodes=n_nodes, topology=topology, degree=degree,
-                  eval_every=10**9, local_steps=1, batch_size=4,
+                  eval_every=10**9, batch_size=4,
                   chunk_rounds=chunk, mixing=mixing, **dl_kw)
     init = lambda key: {"w": jax.random.normal(key, (p_dim,))}
     return RoundEngine(dl, init, _loss, _acc, make_optimizer("sgd", 0.05), batcher)
@@ -228,6 +239,81 @@ def _mix_op_micro(n: int, degree: int, p: int, iters: int = 100, log: bool = Tru
     return recs
 
 
+def run_payload(rounds: int = 16, n: int = 1024, degree: int = 6, chunk: int = 32,
+                budget: float = 0.01, repeats: int = 3, log: bool = True):
+    """Part 4: payload-form compressed sharing vs the dense-mask oracle at
+    the paper's sparsified emulation scale (N=1024, d=6, budget=0.01,
+    chunk=32, static d-regular overlay).
+
+    Each case holds *everything but the aggregation form* fixed: payload
+    'on' and 'off' engines run the same coordinate selection and produce
+    the same trajectories (property-tested in tests/test_sparse_mixing.py);
+    the measured axis is O(N·d·k) gather+scatter over (N, k) payloads vs
+    two full O(N·d·P) apply_W passes over scattered (N, P) masks, plus the
+    sharing stage's staged message bytes (``share_stage_bytes``).
+
+    The *gate* case is randomk with the strided sampler on pure
+    consensus-gossip rounds (local_steps=0): selection is O(N), the
+    receive is the windowed-scatter fast path, so the round is
+    sharing-dominated and the aggregation form is what's measured —
+    payload ≥ 3x dense-mask rounds/s and staging ≥ 10x less (median).
+    The topk case (selection = a lax.top_k sort over the full (N, P)
+    state, shared by both paths and O(N·P·log) on CPU) is recorded
+    alongside, un-gated: its e2e ratio is selection-diluted on CPU; the
+    histogram-threshold selector (kernels/sparsify.topk_threshold_rows)
+    is the TPU answer to that term.  P=1024 (P_PAYLOAD) so the sharing
+    stage dominates the fixed dispatch cost, mirroring real models where
+    P ≫ N·d.
+    """
+    recs = []
+    if rounds <= 0:
+        return recs
+    cases = {
+        "randomk-strided": dict(sharing="randomk", randk_sampler="strided",
+                                local_steps=0),
+        "topk": dict(sharing="topk"),
+    }
+    for case, case_kw in cases.items():
+        engines = {}
+        for payload in ("off", "on"):
+            eng = _engine(n, chunk, topology="regular", degree=degree,
+                          p_dim=P_PAYLOAD, budget=budget, payload=payload,
+                          **case_kw)
+            eng.run(rounds=rounds, log=False)  # warm-up compiles every scan length
+            engines[payload] = eng
+        # interleave timed repeats so box load hits both paths equally
+        samples = {"off": [], "on": []}
+        for _ in range(repeats):
+            for payload, eng in engines.items():
+                t0 = time.time()
+                eng.run(rounds=rounds, log=False)
+                samples[payload].append(rounds / (time.time() - t0))
+        rps = {}
+        for payload, eng in engines.items():
+            stats = _rps_stats(samples[payload])
+            rps[payload] = stats["rounds_per_s"]
+            recs.append({
+                "name": f"N{n}-d{degree}-{case}-b{budget}-payload-{payload}",
+                "n_nodes": n, "degree": degree, "case": case,
+                "sharing": case_kw["sharing"], "budget": budget,
+                "payload": payload, "chunk": chunk, "rounds": rounds, **stats,
+                "wire_dtype": eng.wire_dtype,
+                "share_stage_bytes": eng.share_stage_bytes,
+            })
+            if log:
+                print(f"  N={n} d={degree} {case:14s} b={budget} "
+                      f"payload={payload:3s} {rps[payload]:8.1f} rounds/s  "
+                      f"share_stage={eng.share_stage_bytes / 1e3:.1f}KB",
+                      flush=True)
+        if log:
+            stage_ratio = (engines["off"].share_stage_bytes
+                           / max(engines["on"].share_stage_bytes, 1))
+            print(f"  N={n} d={degree} {case:14s} speedup payload/dense: "
+                  f"{rps['on'] / rps['off']:.2f}x  stage-bytes ratio: "
+                  f"{stage_ratio:.0f}x", flush=True)
+    return recs
+
+
 def run_sharded(rounds: int = 12, n: int = 1024, degree: int = 6, chunk: int = 32,
                 repeats: int = 3, devices: int = 8, log: bool = True):
     """Part 3: node-sharded vs single-device RoundEngine at the paper's
@@ -330,6 +416,10 @@ def main():
                     help="rounds for the N=1024 sparse-vs-dense section; 0 skips it")
     ap.add_argument("--sparse-nodes", type=int, default=1024)
     ap.add_argument("--sparse-repeats", type=int, default=3)
+    ap.add_argument("--payload-rounds", type=int, default=16,
+                    help="rounds for the N=1024 payload-vs-dense section; 0 skips it")
+    ap.add_argument("--payload-budget", type=float, default=0.01)
+    ap.add_argument("--payload-repeats", type=int, default=3)
     ap.add_argument("--sharded-rounds", type=int, default=12,
                     help="rounds for the N=1024 sharded-vs-single section; 0 skips it")
     ap.add_argument("--sharded-degree", type=int, default=6)
@@ -358,6 +448,10 @@ def main():
     if args.sparse_rounds > 0:
         recs += run_sparse(args.sparse_rounds, n=args.sparse_nodes,
                            repeats=args.sparse_repeats)
+    if args.payload_rounds > 0:
+        recs += run_payload(args.payload_rounds, n=args.sparse_nodes,
+                            budget=args.payload_budget,
+                            repeats=args.payload_repeats)
     if args.sharded_rounds > 0:
         recs += run_sharded(args.sharded_rounds, n=args.sparse_nodes,
                             degree=args.sharded_degree,
@@ -370,6 +464,8 @@ def main():
         bench = "bench_engine"
     elif args.sparse_rounds > 0:
         bench = "bench_engine_sparse"
+    elif args.payload_rounds > 0:
+        bench = "bench_engine_payload"
     else:
         bench = "bench_engine_sharded"
     if recs:

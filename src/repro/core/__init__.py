@@ -19,6 +19,9 @@ from repro.core.mixing import (
     ShardedTopology,
     apply_W,
     mix_dense,
+    mix_payload,
+    mix_payload_masked,
+    mix_payload_strided,
     mix_sparse,
     mix_sparse_shmap,
     mix_fully,

@@ -29,6 +29,15 @@ The engine executes rounds in **chunks of R rounds compiled into a single
   ``NetworkModel`` is configured) the simulated synchronous-round
   wall-clock are collected by the scan as ``(R,)`` arrays and synced to the
   host once per chunk, not once per round.
+* **Sparsified sharing runs in payload form.**  With ``payload`` on
+  (default for randomk/topk/choco), strategies emit compact per-node
+  ``(idx, val)`` payloads inside the scanned round and aggregate them via
+  ``mixing.mix_payload``'s gather + scatter-accumulate pass — O(N·d·k)
+  instead of the dense-mask form's two O(N·d·P) ``apply_W`` passes; in the
+  sharded chunk the ppermute backend then exchanges (B, k) payloads
+  (O(D·B·k) wire).  ``payload="off"`` forces the dense-mask oracle, kept
+  property-tested equal; byte accounting and the ``wire_dtype`` /
+  ``share_stage_bytes`` metrics derive from the actual wire dtype.
 * **Secure aggregation runs inside the scan.**  ``core/secure.py``'s
   vectorized masked-mixing path is jittable (padded neighbor tables +
   traced round index for the PRF), so ``secure=True`` uses the same scanned
@@ -125,9 +134,17 @@ class DLConfig:
     n_nodes: int = 16
     topology: str = "regular"  # ring | regular | fully | star | dynamic | file:<path>
     degree: int = 5
-    sharing: str = "full"      # full | randomk | topk | choco
+    sharing: str = "full"      # full | randomk | topk | choco | quant
     budget: float = 0.1        # sparsification budget
     choco_gamma: float = 0.3
+    # payload wire format for sparsified strategies: 'on' emits compact
+    # (idx, val) per-node payloads aggregated in one O(N·d·k) gather +
+    # scatter pass (mixing.mix_payload); 'off' runs the dense-mask oracle
+    # (scattered (N, P) masks + two apply_W passes — the legacy form, kept
+    # property-tested equal); 'auto' = on for randomk/topk/choco.
+    payload: str = "auto"      # auto | on | off
+    payload_quant: bool = False  # int8-quantize payload values on the wire
+    randk_sampler: str = "uniform"  # randomk coord sampler: uniform | strided
     secure: bool = False       # secure aggregation (masked full sharing)
     local_steps: int = 1
     batch_size: int = 8
@@ -223,13 +240,51 @@ class RoundEngine:
                     "dropped node's pairwise masks would not cancel (seed "
                     "recovery is not modeled); run churn without secure."
                 )
+            if dl.payload == "on" or dl.payload_quant or dl.randk_sampler != "uniform":
+                raise ValueError(
+                    "payload/payload_quant/randk_sampler do not compose with "
+                    "secure=True (masked messages are full fp32 vectors; "
+                    "compressing them would break mask cancellation)"
+                )
             self.sharing = SecureAggregation(self.graph.adj)
         else:
+            if dl.payload not in ("auto", "on", "off"):
+                raise ValueError(f"unknown payload mode {dl.payload!r} (auto|on|off)")
+            sparsified = sharing_lib.strategy_takes_budget(dl.sharing)
+            if dl.payload == "on" and not sparsified:
+                raise ValueError(
+                    f"payload='on' needs a sparsified sharing strategy "
+                    f"(randomk/topk/choco), not {dl.sharing!r}"
+                )
             kw = {"gamma": dl.choco_gamma} if dl.sharing.startswith("choco") else {}
-            self.sharing = sharing_lib.make_sharing(dl.sharing, dl.budget, **kw)
+            if sparsified:
+                kw["budget"] = dl.budget
+                kw["payload"] = dl.payload != "off"
+                if dl.payload_quant:
+                    kw["quantize"] = "int8"
+                if dl.sharing.lower() in ("randomk", "random"):
+                    kw["sampler"] = dl.randk_sampler
+                elif dl.randk_sampler != "uniform":
+                    raise ValueError(
+                        "randk_sampler applies to sharing='randomk' only"
+                    )
+            elif dl.payload_quant:
+                raise ValueError(
+                    "payload_quant applies to payload-emitting strategies "
+                    "(randomk/topk/choco); use sharing='quant' for "
+                    "quantized full sharing"
+                )
+            self.sharing = sharing_lib.make_sharing(dl.sharing, **kw)
         X0 = jax.vmap(tree_vector)(self.params)
         self.share_state = self.sharing.init_state(X0)
         self.n_params = int(X0.shape[1])
+        # per-round wire format metrics: the dtype values ship in, and the
+        # bytes of message tensors the sharing stage materializes per round
+        # ((idx, val) payloads vs scattered (N, P) mask matrices)
+        self.wire_dtype = str(np.dtype(self.sharing.wire_dtype(X0.dtype)))
+        self.share_stage_bytes = int(
+            self.sharing.stage_bytes_per_round(dl.n_nodes, self.n_params)
+        )
         self.mix_mode = self._resolve_mix_mode()
         # --- node-axis sharding (multi-device execution) -------------------
         self.sharded = dl.shard_devices > 0
@@ -746,6 +801,7 @@ class RoundEngine:
             "bytes_per_node": self.bytes_sent,
             "wall_s": time.time() - t0,
             "sim_time_s": self.sim_time_s,
+            "wire_dtype": self.wire_dtype,
         }
         self.history.append(rec)
         if log:

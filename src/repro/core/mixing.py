@@ -32,6 +32,12 @@ x_i' = sum_j W_ij x_j  (W = Metropolis-Hastings weights of the overlay):
 All operate on node-stacked pytrees (leading axis N).  ``apply_W`` is the
 strategy-facing primitive: one W @ Y that accepts either a dense (N, N)
 matrix or a ``SparseTopology`` so every sharing strategy supports both.
+
+``mix_payload`` is the *compressed* wire primitive: sparsified sharing
+strategies hand it per-node (idx, val) payloads instead of masked (N, P)
+matrices and it applies the missing-coordinate rule in one gather +
+scatter-accumulate pass — O(N·d·k) compute and, on the sharded ppermute
+backend, O(D·B·k) wire.  ``mix_payload_masked`` is its dense-mask oracle.
 """
 from __future__ import annotations
 
@@ -309,6 +315,191 @@ def mix_sparse(stacked, topo: SparseTopology, *, use_pallas: Optional[bool] = No
     return jax.tree_util.tree_map(f, stacked)
 
 
+# ---------------------------------------------------------------------------
+# payload-indexed aggregation: the compressed-sharing wire primitive
+# ---------------------------------------------------------------------------
+#
+# Sparsified sharing strategies emit compact per-node payloads instead of
+# masked (N, P) matrices: ``idx`` (N, k) int32 coordinate indices and
+# ``val`` (N, k) wire values (possibly dequantized int8).  ``mix_payload``
+# applies DecentralizePy's missing-coordinate rule
+#
+#     x_i'[c] = x_i[c] + sum_j W_ij * m_j[c] * (v_j[c] - x_i[c])
+#
+# in one gather + scatter-accumulate pass over neighbor payloads — O(N·d·k)
+# compute and wire instead of the dense-mask form's two full apply_W
+# passes at O(N·d·P).  The self slot rides along with weight w_self (it
+# cancels exactly when val == x[idx], and reproduces the dense rule's
+# self-roundtrip when values are quantized).  ``mix_payload_masked`` is the
+# dense-mask oracle — identical math through scattered (N, P) masks and
+# two apply_W passes — that the payload path is property-tested against
+# (and the ``DLConfig.payload="off"`` execution path).
+
+
+def _payload_operands(W, idx, valf, include_self: bool):
+    """(idx_ops, val_ops, w_ops) stacked (rows, S, k)/(rows, S) operand
+    payloads for each receiver — the neighbor slots of the mixing operand
+    (exchanged via collective permutes when W is a scheduled
+    ShardedTopology), preceded by the self slot when ``include_self``.
+
+    The self slot's contribution w_self * (val_i - x_i[idx_i]) is exactly
+    zero when payload values are the sender's own coordinates (val == x at
+    idx, bit-for-bit), so callers skip it unless the wire codec perturbs
+    values (int8 quantization), where the dense rule's self-roundtrip term
+    must be reproduced."""
+    if isinstance(W, ShardedTopology):
+        idx_nbr = W.neighbor_stack(idx)                       # (B, D, k)
+        val_nbr = W.neighbor_stack(valf)
+        w, w_self = W.topo.w, W.topo.w_self
+    else:  # SparseTopology
+        idx_nbr = jnp.take(idx, W.nbr, axis=0)                # (N, D, k)
+        val_nbr = jnp.take(valf, W.nbr, axis=0)
+        w, w_self = W.w, W.w_self
+    if not include_self:
+        return idx_nbr, val_nbr, w.astype(jnp.float32)
+    idx_ops = jnp.concatenate([idx[:, None, :], idx_nbr], axis=1)
+    val_ops = jnp.concatenate([valf[:, None, :], val_nbr], axis=1)
+    w_ops = jnp.concatenate(
+        [w_self.astype(jnp.float32)[:, None], w.astype(jnp.float32)], axis=1
+    )
+    return idx_ops, val_ops, w_ops
+
+
+def _payload_scatter(Xf, idx_ops, val_ops, w_ops):
+    """out = Xf + sum over operand slots of w * (val - Xf[idx]) scattered
+    at idx — the XLA lowering (take_along_axis + at[].add)."""
+    n = Xf.shape[0]
+    s, k = idx_ops.shape[1], idx_ops.shape[2]
+    fid = idx_ops.reshape(n, s * k)
+    own = jnp.take_along_axis(Xf, fid, axis=1)
+    contrib = (val_ops.reshape(n, s * k) - own) * jnp.repeat(w_ops, k, axis=1)
+    delta = jnp.zeros_like(Xf).at[jnp.arange(n)[:, None], fid].add(contrib)
+    return Xf + delta
+
+
+def mix_payload(W, idx, val, X, *, exact_values: bool = True,
+                use_pallas: Optional[bool] = None,
+                interpret: Optional[bool] = None):
+    """Payload-indexed sparse aggregation: X' from per-node payloads.
+
+    W: dense (N, N), ``SparseTopology``, or the sharded wrappers
+    (``ShardedTopology``/``ShardedDense`` inside a shard_map body — payload
+    exchange then rides the same per-slot `collective_permute` schedule as
+    plain gossip, carrying (B, k) indices + values: O(D·B·k) wire).
+    idx: (N, k) int32; val: (N, k) wire values; X: (N, P).  Returns fp32.
+
+    exact_values: promise that ``val`` is bit-for-bit the sender's own
+    coordinates (no lossy wire codec) — the self slot's correction is then
+    exactly zero and is skipped; pass False for quantized payloads so the
+    dense rule's self-roundtrip term is reproduced.
+
+    Sparse/sharded forms run the gather + scatter-accumulate pass
+    (optionally through the fused ``kernels.scatter_gossip`` Pallas kernel:
+    compiled on TPU, XLA scatter elsewhere); a dense (N, N) W — the
+    all-pairs oracle regime — falls back to :func:`mix_payload_masked`.
+    """
+    Xf = X.astype(jnp.float32)
+    valf = val.astype(jnp.float32)
+    if isinstance(W, ShardedDense):
+        idx_g, val_g = W.shard.gather(idx), W.shard.gather(valf)
+        MX = _scatter_rows(idx_g, val_g, (idx_g.shape[0], Xf.shape[1]))
+        M = _scatter_rows(idx_g, jnp.ones_like(val_g), MX.shape)
+        return Xf + W.apply(MX) - Xf * W.apply(M)
+    if isinstance(W, (ShardedTopology, SparseTopology)):
+        idx_ops, val_ops, w_ops = _payload_operands(
+            W, idx, valf, include_self=not exact_values
+        )
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        if use_pallas:
+            from repro.kernels.scatter_gossip import payload_mix_nodes
+
+            it = (jax.default_backend() != "tpu") if interpret is None else interpret
+            return payload_mix_nodes(
+                Xf, idx_ops, val_ops, w_ops, interpret=it
+            ).astype(jnp.float32)
+        return _payload_scatter(Xf, idx_ops, val_ops, w_ops)
+    return mix_payload_masked(W, idx, valf, Xf)
+
+
+def mix_payload_strided(W, phase, val, X, *, exact_values: bool = True):
+    """Strided-payload aggregation — the windowed-scatter fast path for
+    ``RandomKSharing(sampler='strided')``.
+
+    The P axis is split into k equal cells of width ``stride`` (the caller
+    pads P up to k·stride); sender n's payload is its value at offset
+    ``phase[n]`` of *every* cell: idx = i·stride + phase_n.  Because one
+    offset addresses a whole k-vector, a receiver applies neighbor s's
+    payload as a single k-wide column update of its (k, stride) cell view
+    — the scatter indexes N·D rows instead of N·D·k elements, which XLA
+    vectorizes (each scattered window is a contiguous k-vector), so the
+    receive runs at O(N·d·k) vector speed with no dense (N, P) mask.
+
+    phase: (N,) int32 in [0, stride); val: (N, k); X: (N, k·stride).
+    Dense (N, N) W falls back to the masked oracle on reconstructed
+    indices.  exact_values as in :func:`mix_payload`.
+    """
+    Xf = X.astype(jnp.float32)
+    valf = val.astype(jnp.float32)
+    n, p = Xf.shape
+    k = valf.shape[1]
+    stride = p // k
+    if isinstance(W, ShardedDense) or not isinstance(
+        W, (ShardedTopology, SparseTopology)
+    ):
+        idx = jnp.arange(k, dtype=jnp.int32)[None, :] * stride + phase[:, None]
+        if isinstance(W, ShardedDense):
+            idx_g, val_g = W.shard.gather(idx), W.shard.gather(valf)
+            MX = _scatter_rows(idx_g, val_g, (idx_g.shape[0], p))
+            M = _scatter_rows(idx_g, jnp.ones_like(val_g), MX.shape)
+            return Xf + W.apply(MX) - Xf * W.apply(M)
+        return mix_payload_masked(W, idx, valf, Xf)
+    if isinstance(W, ShardedTopology):
+        ph_ops = W.neighbor_stack(phase)                   # (B, D)
+        val_ops = W.neighbor_stack(valf)                   # (B, D, k)
+        w_ops = W.topo.w.astype(jnp.float32)
+        w_self = W.topo.w_self
+    else:
+        ph_ops = jnp.take(phase, W.nbr, axis=0)            # (N, D)
+        val_ops = jnp.take(valf, W.nbr, axis=0)            # (N, D, k)
+        w_ops = W.w.astype(jnp.float32)
+        w_self = W.w_self
+    if not exact_values:
+        ph_ops = jnp.concatenate([phase[:, None], ph_ops], axis=1)
+        val_ops = jnp.concatenate([valf[:, None, :], val_ops], axis=1)
+        w_ops = jnp.concatenate(
+            [w_self.astype(jnp.float32)[:, None], w_ops], axis=1
+        )
+    cells_t = jnp.moveaxis(Xf.reshape(n, k, stride), 1, 2)  # (N, stride, k)
+    own = jnp.take_along_axis(cells_t, ph_ops[:, :, None], axis=1)  # (N, D, k)
+    contrib = w_ops[:, :, None] * (val_ops - own)
+    delta_t = jnp.zeros_like(cells_t).at[
+        jnp.arange(n)[:, None], ph_ops, :
+    ].add(contrib)
+    return Xf + jnp.moveaxis(delta_t, 1, 2).reshape(n, p)
+
+
+def _scatter_rows(idx, val, shape):
+    """Dense (N, P) scatter of per-row payloads (payload indices are unique
+    per row, so set == add)."""
+    return jnp.zeros(shape, jnp.float32).at[
+        jnp.arange(shape[0])[:, None], idx
+    ].set(val.astype(jnp.float32))
+
+
+def mix_payload_masked(W, idx, val, X):
+    """Dense-mask oracle of :func:`mix_payload`: scatter the payload into
+    (N, P) value/mask matrices and apply the missing-coordinate rule as
+    X' = X + W@(M*V) - X*(W@M) — two full apply_W passes, O(N·d·P).  With
+    val gathered from X this is bit-for-bit the legacy ``sparse_aggregate``
+    dense-mask path; it stays as the equivalence oracle and the
+    ``payload="off"`` execution mode."""
+    Xf = X.astype(jnp.float32)
+    MX = _scatter_rows(idx, val, Xf.shape)
+    M = _scatter_rows(idx, jnp.ones_like(val, jnp.float32), Xf.shape)
+    return Xf + apply_W(W, MX) - Xf * apply_W(W, M)
+
+
 def mix_fully(stacked):
     """Fully-connected with uniform MH weights == mean over nodes."""
 
@@ -465,20 +656,24 @@ def mix_compressed_circulant_shmap(
     weights: Optional[jax.Array] = None,
 ):
     """Compressed circulant gossip — the paper's sparsification/compression
-    modules on the TPU wire.
+    modules on the TPU wire, for the tensor-parallel trainer
+    (``training/trainer.py`` ``mixing_impl='sparse'/'quant'``).
 
     Per mesh-shard: select the top-``budget`` fraction of the *local* block
-    by magnitude ('sparse'), optionally int8-quantize the values ('quant'),
-    `collective_permute` only the compressed payload, and scatter-merge at
-    the receiver with DecentralizePy's missing-coordinate semantics
+    by magnitude ('sparse'), optionally int8-quantize the values ('quant',
+    via ``compression.quantize_int8`` — the same codec every quantized wire
+    uses), `collective_permute` only the compressed payload, and
+    scatter-merge at the receiver with DecentralizePy's missing-coordinate
+    semantics
 
         x_i' = x_i + sum_nbr w * scatter(idx_nbr, vals_nbr - x_i[idx_nbr]).
 
     Wire bytes drop from P*dtype to ~budget*P*(4+payload) ('sparse') or
     P*1 ('quant') — visible directly in the dry-run's collective-permute
-    operand bytes.  Per-shard top-k is a local decision (no cross-shard
-    sort), exactly like DecentralizePy nodes compress their own serialized
-    model.
+    operand bytes.  The general engine path does the same thing for
+    arbitrary sparse overlays through payload-emitting sharing strategies +
+    :func:`mix_payload` (``DLConfig.payload``); this circulant form remains
+    only where gossip composes with tensor-parallel model shards (pspecs).
     """
     n = 1
     for ax in node_axes:
@@ -496,9 +691,9 @@ def mix_compressed_circulant_shmap(
     ROW = 1 << 20  # top-k row block: keeps indices int32 even for >2^31 leaves
 
     def _quant(v32):
-        scale = jnp.maximum(jnp.max(jnp.abs(v32), axis=-1, keepdims=True) / 127.0, 1e-12)
-        codes = jnp.clip(jnp.round(v32 / scale), -127, 127).astype(jnp.int8)
-        return codes, scale
+        from repro.core.compression import quantize_int8
+
+        return quantize_int8(v32)
 
     def per_leaf(leaf, spec):
         def local(x):

@@ -20,12 +20,13 @@ Two implementations of the same math:
 
 * ``round``            — vectorized and fully jittable: the ragged neighbor
   sets become a padded ``(N, dmax)`` neighbor table (topology.neighbor_table),
-  the per-pair threefry PRF *bits* are generated in batched vmap passes
-  (one per sender slot via lax.map, keeping peak memory O(N·d·P); round
-  index a *traced* value), and the bits→uniform mapping + signed mask
-  accumulation run through the fused ``kernels/secure_mask`` Pallas kernel
-  (compiled on TPU, interpret mode on CPU — one HBM pass instead of one
-  accumulate pass per co-neighbor pair).
+  batched vmap passes derive the per-pair threefry PRF *keys* (one sender
+  slot at a time via lax.map — O(N·d) key words staged, the bit tensors
+  never materialize; round index a *traced* value), and the fused
+  ``kernels/secure_mask`` keyed Pallas kernel (compiled on TPU, interpret
+  mode on CPU) runs the threefry counter expansion in-body, maps
+  bits→uniform, and applies all signed masks in one HBM pass — bit-identical
+  to expanding ``jax.random.bits`` per pair.
   So ``secure=True`` runs inside the engine's lax.scan chunk like any other
   sharing strategy; work is O(N·d²·P) like the reference, without the
   O(N·d) Python dict of messages or the former per-slot fori_loop.
@@ -60,14 +61,20 @@ BYTES_VAL = 4
 METADATA_OVERHEAD = 0.03  # paper: ~3% extra bytes (seeds, framing)
 
 
-def _pair_bits_from(kround, i, j, r, shape):
-    """Threefry PRF bits for ordered pair (i, j) at receiver r, from a key
-    already folded with the round — the single definition of the mask PRF
-    chain (all indices may be tracers)."""
+def _pair_key_from(kround, i, j, r):
+    """PRF key for ordered pair (i, j) at receiver r, from a key already
+    folded with the round — the single definition of the mask PRF chain
+    (all indices may be tracers)."""
     k = jax.random.fold_in(kround, i)
     k = jax.random.fold_in(k, j)
-    k = jax.random.fold_in(k, r)
-    return jax.random.bits(k, shape, jnp.uint32)
+    return jax.random.fold_in(k, r)
+
+
+def _pair_bits_from(kround, i, j, r, shape):
+    """Threefry PRF bits for ordered pair (i, j) at receiver r — the
+    reference expansion of :func:`_pair_key_from` (the fused kernel
+    generates the same bits in-body from the key words alone)."""
+    return jax.random.bits(_pair_key_from(kround, i, j, r), shape, jnp.uint32)
 
 
 def _pair_mask_from(kround, i, j, r, shape, bound: float):
@@ -126,16 +133,16 @@ class SecureAggregation:
         neighbors (true for MH on regular graphs); ``degree`` and ``rnd``
         may be traced scalars.
 
-        Pipeline, per sender slot (lax.map over the D slots keeps peak
-        memory at O(N·d·P) — one (N, D, P) bits tensor at a time — instead
-        of materializing all O(N·d²·P) pair bits at once): (1) a batched
-        vmap pass produces the threefry bits of every (receiver,
-        co-neighbor) pair mask for that slot's messages — bits are keyed by
-        the *sorted* node pair so the +1 and -1 occurrences read identical
-        bits and cancel exactly; (2) the fused Pallas kernel maps bits ->
-        uniform[-b, b) and applies all signed masks to the slot's N
-        messages in one pass.  Finally each receiver sums its valid masked
-        messages with weight w.
+        Pipeline, per sender slot (lax.map over the D slots): (1) a batched
+        vmap pass derives the threefry *pair keys* of every (receiver,
+        co-neighbor) mask for that slot's messages — O(N·d) key words, not
+        O(N·d·P) bit tensors; keys are built from the *sorted* node pair so
+        the +1 and -1 occurrences expand identical bits and cancel exactly;
+        (2) the fused Pallas kernel (``secure_mask_apply_nodes_keyed``)
+        runs the threefry counter expansion in-body per parameter block,
+        maps bits -> uniform[-b, b), and applies all signed masks to the
+        slot's N messages in one HBM pass.  Finally each receiver sums its
+        valid masked messages with weight w.
         """
         if isinstance(W, (ShardedTopology, ShardedDense)):
             return self._round_sharded(X, W, state, key, degree, rnd)
@@ -200,19 +207,19 @@ class SecureAggregation:
         )                                                  # (N, D, D)
 
         def slot_msgs(ii):
-            def receiver_bits(r, nbr_r):
+            def receiver_keys(r, nbr_r):
                 i = nbr_r[ii]
 
                 def pair(j):
                     a, b = jnp.minimum(i, j), jnp.maximum(i, j)
-                    return _pair_bits_from(kr, a, b, r, (P,))
+                    return jax.random.key_data(_pair_key_from(kr, a, b, r))
 
-                return jax.vmap(pair)(nbr_r)               # (D, P)
+                return jax.vmap(pair)(nbr_r)               # (D, 2)
 
-            bits = jax.vmap(receiver_bits)(rows, nbr)      # (N, D, P)
-            return kernel_ops.secure_mask_apply_nodes(
+            keys = jax.vmap(receiver_keys)(rows, nbr)      # (N, D, 2) uint32
+            return kernel_ops.secure_mask_apply_nodes_keyed(
                 jnp.take(Xnbr, ii, axis=1),
-                bits,
+                keys,
                 jnp.take(signs, ii, axis=1),
                 self.mask_bound,
             )                                              # (N, P)
@@ -223,8 +230,15 @@ class SecureAggregation:
             msgs * validf[:, :, None], axis=1
         )
         X2 = jnp.where((deg_r > 0)[:, None], acc, Xf)
-        bytes_sent = degree * P * BYTES_VAL * (1.0 + METADATA_OVERHEAD)
+        item = jnp.dtype(dtype).itemsize
+        bytes_sent = degree * P * item * (1.0 + METADATA_OVERHEAD)
         return X2.astype(dtype), state, bytes_sent
+
+    def wire_dtype(self, x_dtype):
+        return np.dtype(x_dtype)
+
+    def stage_bytes_per_round(self, n: int, p: int) -> int:
+        return n * p * 4  # the masked fp32 messages
 
     def round_reference(self, X, W, state, key, degree: float, rnd: int = 0):
         """Python-scheduled reference: aggregate the dict of masked
@@ -242,5 +256,5 @@ class SecureAggregation:
                 acc = acc + w * msgs[(i, r)]
             rows.append(acc)
         X2 = jnp.stack(rows).astype(X.dtype)
-        bytes_sent = degree * P * BYTES_VAL * (1.0 + METADATA_OVERHEAD)
+        bytes_sent = degree * P * jnp.dtype(X.dtype).itemsize * (1.0 + METADATA_OVERHEAD)
         return X2, state, bytes_sent

@@ -5,27 +5,42 @@ Strategies operate on the node-stacked flat parameter matrix X (N, P)
 is our serializer).  Each returns the post-gossip X' plus the bytes each
 node sent this round, the paper's communication metric.
 
-Sparse aggregation follows DecentralizePy: weights of *missing* coordinates
-fall back to the receiver's own value,
+Sparsified strategies (random-k, top-k, CHOCO) emit compact per-node
+*payloads* — ``idx`` (N, k) int32 coordinate indices and ``val`` (N, k)
+wire values (the payload wire format; optionally int8-quantized through
+``core.compression.quantize_int8``) — and aggregate them with
+DecentralizePy's missing-coordinate rule: weights of coordinates absent
+from a payload fall back to the receiver's own value,
 
-    x_i'[c] = x_i[c] + sum_j W_ij * m_j[c] * (x_j[c] - x_i[c])
+    x_i'[c] = x_i[c] + sum_j W_ij * m_j[c] * (v_j[c] - x_i[c]),
 
-which in matrix form is  X' = X + W@(M*X) - X*(W@M).
+applied in one gather + scatter-accumulate pass by
+:func:`repro.core.mixing.mix_payload` — O(N·d·k) compute, O(N·d·k) wire.
+With ``payload=False`` the same payload is scattered into dense (N, P)
+mask/value matrices and aggregated as X' = X + W@(M*V) - X*(W@M)
+(:func:`mix_payload_masked`, two full apply_W passes) — the legacy
+masked-matrix form, kept as the equivalence oracle the payload path is
+property-tested against.  Coordinate selection (exact ``lax.top_k`` or the
+histogram-threshold kernel, see ``_topk_idx``) is shared by both forms, so
+trajectories agree to fp32 reassociation tolerance.
 
 Every strategy's ``round`` accepts ``degree`` as either a Python float or a
 traced scalar: the RoundEngine scans whole chunks of rounds, so the degree
 (and with participation churn, the *effective* degree) is a per-round
-traced value and byte accounting happens on device.  ``round`` also takes
+traced value and byte accounting happens on device.  Byte accounting
+derives from the actual wire dtype (``wire_dtype``/itemsize — int8 codes
+count 1 byte, bf16 params 2), not a hardcoded fp32.  ``round`` also takes
 the (possibly traced) round index ``rnd`` — used by PRF-keyed strategies
 such as secure aggregation, ignored by the rest — so the engine can call
 every strategy uniformly from inside the scan.
 
 ``W`` may be a dense (N, N) matrix *or* a neighbor-indexed
 ``SparseTopology`` (padded (N, D) tables): every W-product below goes
-through :func:`repro.core.mixing.apply_W`, so each strategy costs
-O(N·D·P) on sparse overlays without code changes.  With churn, the sparse
-reweight (:func:`participation_reweight_sparse`) masks neighbor slots and
-returns the freed mass to the diagonal without ever materializing W.
+through :func:`repro.core.mixing.apply_W` / ``mix_payload``, so each
+strategy costs O(N·D·P) — O(N·D·k) in payload form — on sparse overlays
+without code changes.  With churn, the sparse reweight
+(:func:`participation_reweight_sparse`) masks neighbor slots and returns
+the freed mass to the diagonal without ever materializing W.
 """
 from __future__ import annotations
 
@@ -34,18 +49,71 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.mixing import NodeShard, ShardedDense, ShardedTopology, apply_W
+from repro.core.compression import dequantize_int8, quantize_int8
+from repro.core.mixing import (
+    NodeShard,
+    ShardedDense,
+    ShardedTopology,
+    apply_W,
+    mix_payload,
+    mix_payload_masked,
+    mix_payload_strided,
+)
 from repro.core.topology import SparseTopology
 
-BYTES_VAL = 4   # fp32 value on the wire
+BYTES_VAL = 4   # legacy fp32 wire-value size (kept for external callers;
+#                 strategies now derive bytes from the actual wire dtype)
 BYTES_IDX = 4   # int32 index on the wire
 
 
-def _topk_mask(x_abs, k: int):
-    """Boolean mask of the k largest-|.| coords per row. x_abs: (N, P)."""
-    _, idx = jax.lax.top_k(x_abs, k)
-    return jnp.zeros_like(x_abs, bool).at[jnp.arange(x_abs.shape[0])[:, None], idx].set(True)
+def _topk_idx(x_abs, k: int, selector: str = "auto"):
+    """(N, k) int32 indices of (approximately) the k largest-|.| coords per
+    row — the single selection rule both the payload path and the
+    dense-mask oracle use, so their trajectories stay comparable.
+
+    selector: 'exact' — ``lax.top_k`` (a per-row sort); 'hist' — the
+    histogram-threshold kernel (``kernels.sparsify.topk_threshold_rows``):
+    per-row threshold t with #{|x| >= t} >= k within one fine bin, then the
+    first k survivors in index order (every kept coordinate is >= t, i.e.
+    dominates every dropped sub-threshold one).  'auto' picks 'hist' on
+    TPU, where a histogram pass beats the sort, and 'exact' elsewhere.
+    """
+    if selector == "auto":
+        selector = "hist" if jax.default_backend() == "tpu" else "exact"
+    if selector == "exact":
+        return jax.lax.top_k(x_abs, k)[1]
+    if selector != "hist":
+        raise ValueError(f"unknown selector {selector!r} (auto|exact|hist)")
+    from repro.kernels import ops as kernel_ops
+
+    n, p = x_abs.shape
+    t = kernel_ops.topk_threshold_rows(x_abs, k)
+    mask = x_abs >= t[:, None]
+    pos = jnp.cumsum(mask, axis=1) - 1
+    tgt = jnp.where(mask & (pos < k), pos, k)  # k == out of range -> dropped
+    cols = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32)[None, :], (n, p))
+    return jnp.zeros((n, k), jnp.int32).at[
+        jnp.arange(n)[:, None], tgt
+    ].set(cols, mode="drop")
+
+
+def _wire(val, quantize: Optional[str], x_dtype):
+    """Wire-form payload values: what the receivers reconstruct.
+
+    val: (N, k) selected values -> (valf fp32 after the wire round-trip,
+    bytes per value on the wire, per-node header bytes).  ``quantize``
+    'int8' routes through ``compression.quantize_int8`` (1 byte/value +
+    one fp32 scale per node); otherwise values ship in the parameter dtype.
+    """
+    if quantize in (None, "none"):
+        item = jnp.dtype(x_dtype).itemsize
+        return val.astype(x_dtype).astype(jnp.float32), item, 0
+    if quantize == "int8":
+        codes, scale = quantize_int8(val.astype(jnp.float32))
+        return dequantize_int8(codes, scale), 1, 4
+    raise ValueError(f"unknown payload quantization {quantize!r} (int8|none)")
 
 
 def _node_keys(key, n_rows: int, rows=None):
@@ -61,12 +129,24 @@ def _node_keys(key, n_rows: int, rows=None):
     return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
 
 
-def _randk_mask(key, shape, k: int, rows=None):
-    """k random coords per row via top-k of iid uniforms (no replacement);
-    draws are per-node keyed (see _node_keys)."""
+def _randk_idx(key, shape, k: int, rows=None):
+    """(N, k) indices of k random coords per row via top-k of iid uniforms
+    (no replacement); draws are per-node keyed (see _node_keys)."""
     keys = _node_keys(key, shape[0], rows)
     u = jax.vmap(lambda kk: jax.random.uniform(kk, shape[1:]))(keys)
-    return _topk_mask(u, k)
+    return jax.lax.top_k(u, k)[1]
+
+
+def _strided_phase(key, n: int, stride: int, rows=None):
+    """(N,) random phases in [0, stride) — the strided sampler's only
+    randomness: node n shares coordinates {i·stride + phase_n} (one per
+    stride-wide cell).  Uniform k/P marginal coverage, exact-k payloads,
+    O(N) selection (no (N, P) uniform draw, no top-k sort), and a wire
+    format of one ⌈log2 stride⌉-bit offset per message — the payload hot
+    path's sampler.  Per-node keyed like ``_randk_idx``."""
+    keys = _node_keys(key, n, rows)
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, ()))(keys)
+    return jnp.floor(u * stride).astype(jnp.int32)
 
 
 def _mix_rows(W):
@@ -161,74 +241,206 @@ class FullSharing:
 
     def round(self, X, W, state, key, degree, rnd=0):
         X2 = apply_W(W, X).astype(X.dtype)
-        return X2, state, degree * X.shape[1] * BYTES_VAL
+        return X2, state, degree * X.shape[1] * jnp.dtype(X.dtype).itemsize
+
+    def wire_dtype(self, x_dtype):
+        return np.dtype(x_dtype)
+
+    def stage_bytes_per_round(self, n: int, p: int) -> int:
+        return n * p * 4  # the fp32 mixing operand itself
 
 
 @dataclasses.dataclass(frozen=True)
-class RandomKSharing:
-    """Random sampling sparsification (paper Fig. 4): k random coords."""
+class _PayloadSharing:
+    """Shared machinery of the payload-emitting sparsified strategies.
+
+    payload: aggregate via the indexed O(N·d·k) ``mix_payload`` pass
+    (True, the wire-faithful default) or the dense-mask oracle
+    (False: scattered (N, P) masks + two apply_W passes — the legacy form,
+    kept property-tested equal).  quantize: optional wire codec for the
+    payload values ('int8' -> ``compression.quantize_int8`` + fp32 scale
+    header).  selector: top-k rule for magnitude-based strategies
+    (see ``_topk_idx``).
+    """
 
     budget: float  # fraction of parameters shared (paper: 0.10)
+    payload: bool = True
+    quantize: Optional[str] = None  # None | 'int8'
+    selector: str = "auto"          # auto | exact | hist
+
+    def _k(self, X) -> int:
+        return max(1, int(self.budget * X.shape[1]))
+
+    def _aggregate(self, X, W, idx, valf):
+        if self.payload:
+            return mix_payload(
+                W, idx, valf, X, exact_values=self.quantize is None
+            ).astype(X.dtype)
+        return mix_payload_masked(W, idx, valf, X).astype(X.dtype)
+
+    def _nbytes(self, degree, k: int, item: int, header: int,
+                idx_bytes: int = BYTES_IDX):
+        return degree * (k * (idx_bytes + item) + header)
+
+    def wire_dtype(self, x_dtype):
+        return np.dtype(np.int8) if self.quantize == "int8" else np.dtype(x_dtype)
+
+    def _static_idx_bytes(self, p: int) -> int:
+        return BYTES_IDX
+
+    def stage_bytes_per_round(self, n: int, p: int) -> int:
+        """Bytes of message tensors the sharing stage materializes per
+        round: (idx, val) payloads, vs scattered (N, P) fp32 value + byte
+        mask matrices on the dense-mask oracle path."""
+        k = max(1, int(self.budget * p))
+        item = 1 if self.quantize == "int8" else 4
+        header = 4 if self.quantize == "int8" else 0
+        if self.payload:
+            return n * (k * (self._static_idx_bytes(p) + item) + header)
+        return n * p * (4 + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomKSharing(_PayloadSharing):
+    """Random sampling sparsification (paper Fig. 4): k random coords,
+    emitted as an (idx, val) payload (per-node keyed draws).
+
+    sampler: 'uniform' — iid k-subset via top-k of (N, P) uniforms (the
+    paper-literal rule; indexed payload, int32 coords on the wire);
+    'strided' — a random-phase strided grid: the columns split into k
+    cells of width ⌈P/k⌉ and node n shares {i·stride + phase_n}.  Same
+    k/P marginal coverage, exact-k payloads, O(N) selection (no (N, P)
+    draw, no sort), one narrow offset per message on the wire, and a
+    vectorizable windowed-scatter receive (``mixing.mix_payload_strided``)
+    — the payload hot path's sampler.  Coordinates within one node's
+    payload are grid-correlated (fresh phase per round decorrelates across
+    rounds).
+    """
+
+    sampler: str = "uniform"  # uniform | strided
 
     def init_state(self, X):
         return ()
 
+    def _static_idx_bytes(self, p: int) -> int:
+        if self.sampler != "strided":
+            return BYTES_IDX
+        # one phase offset per message, amortized over the k values
+        stride = -(-p // max(1, int(self.budget * p)))
+        return (1 if stride <= 256 else (2 if stride <= 65536 else 4)) / max(
+            1, int(self.budget * p)
+        )
+
     def round(self, X, W, state, key, degree, rnd=0):
-        k = max(1, int(self.budget * X.shape[1]))
-        M = _randk_mask(key, X.shape, k, rows=_mix_rows(W))
-        X2 = sparse_aggregate(X, W, M)
-        return X2, state, degree * k * (BYTES_VAL + BYTES_IDX)
+        k = self._k(X)
+        if self.sampler == "strided":
+            return self._round_strided(X, W, state, key, degree, k)
+        if self.sampler != "uniform":
+            raise ValueError(
+                f"unknown sampler {self.sampler!r} (uniform|strided)"
+            )
+        idx = _randk_idx(key, X.shape, k, rows=_mix_rows(W))
+        val = jnp.take_along_axis(X, idx, axis=1)
+        valf, item, header = _wire(val, self.quantize, X.dtype)
+        X2 = self._aggregate(X, W, idx, valf)
+        return X2, state, self._nbytes(degree, k, item, header)
+
+    def _round_strided(self, X, W, state, key, degree, k: int):
+        """Strided-grid round: pad P up to k·stride so every cell has full
+        width (phantom pad coordinates are identically zero for every node
+        — they contribute w·(0-0) = 0 and are sliced off), draw one phase
+        per node, and aggregate via the windowed-scatter fast path
+        (payload) or the masked oracle on reconstructed global indices."""
+        n, p = X.shape
+        stride = -(-p // k)
+        ppad = k * stride
+        Xp = jnp.pad(X, ((0, 0), (0, ppad - p)))
+        phase = _strided_phase(key, n, stride, rows=_mix_rows(W))
+        idx = jnp.arange(k, dtype=jnp.int32)[None, :] * stride + phase[:, None]
+        val = jnp.take_along_axis(Xp, idx, axis=1)
+        valf, item, header = _wire(val, self.quantize, X.dtype)
+        if self.payload:
+            X2p = mix_payload_strided(
+                W, phase, valf, Xp, exact_values=self.quantize is None
+            )
+        else:
+            X2p = mix_payload_masked(W, idx, valf, Xp)
+        phase_bytes = 1 if stride <= 256 else (2 if stride <= 65536 else 4)
+        nbytes = degree * (k * item + phase_bytes + header)
+        return X2p[:, :p].astype(X.dtype), state, nbytes
 
 
 @dataclasses.dataclass(frozen=True)
-class TopKSharing:
+class TopKSharing(_PayloadSharing):
     """TopK sparsification [Alistarh et al. '18]: share the k coords whose
     *accumulated change* since last share is largest; residual accumulation
-    stored in the Model-module extra state (paper §2.2 *Model*)."""
-
-    budget: float
+    stored in the Model-module extra state (paper §2.2 *Model*).  The
+    payload update touches only the k shared slots of ``last_shared``
+    (O(N·k) bookkeeping, no (N, P) select)."""
 
     def init_state(self, X):
         return {"last_shared": X.astype(jnp.float32)}
 
     def round(self, X, W, state, key, degree, rnd=0):
-        k = max(1, int(self.budget * X.shape[1]))
-        delta = X.astype(jnp.float32) - state["last_shared"]
-        M = _topk_mask(jnp.abs(delta), k)
-        X2 = sparse_aggregate(X, W, M)
-        new_last = jnp.where(M, X.astype(jnp.float32), state["last_shared"])
-        return X2, {"last_shared": new_last}, degree * k * (BYTES_VAL + BYTES_IDX)
+        k = self._k(X)
+        Xf = X.astype(jnp.float32)
+        delta = Xf - state["last_shared"]
+        idx = _topk_idx(jnp.abs(delta), k, self.selector)
+        val = jnp.take_along_axis(X, idx, axis=1)
+        valf, item, header = _wire(val, self.quantize, X.dtype)
+        X2 = self._aggregate(X, W, idx, valf)
+        # error feedback: record what receivers actually reconstructed (the
+        # wire round-trip valf), so a quantization residual v - v̂ stays in
+        # the delta and is re-shared; identical to the raw value bit-for-bit
+        # on the unquantized wire
+        new_last = state["last_shared"].at[
+            jnp.arange(X.shape[0])[:, None], idx
+        ].set(valf)
+        return X2, {"last_shared": new_last}, self._nbytes(degree, k, item, header)
 
 
 @dataclasses.dataclass(frozen=True)
-class ChocoSGD:
+class ChocoSGD(_PayloadSharing):
     """CHOCO-SGD [Koloskova et al. '19]: gossip on compressed *differences*
     to a public copy x̂, with consensus step size gamma.
 
         q_i  = C(x_i - x̂_i)          (top-k or random-k compressor)
         x̂_i += q_i                    (all nodes track the same x̂'s)
         x_i += gamma * sum_j W_ij (x̂_j - x̂_i)
+
+    The wire carries the (idx, val) payload of q; the x̂ update is an
+    O(N·k) scatter-add.  The consensus step mixes the locally-tracked
+    dense x̂ copies (inherent to CHOCO — not wire traffic).
     """
 
-    budget: float
     gamma: float = 0.3
     compressor: str = "topk"  # 'topk' | 'randk'
 
     def init_state(self, X):
         return {"xhat": jnp.zeros_like(X, jnp.float32)}
 
+    def stage_bytes_per_round(self, n: int, p: int) -> int:
+        # the q compression is payload-form in both modes (the x̂ update is
+        # an O(N·k) scatter either way); the dense x̂ consensus mix is
+        # CHOCO-inherent local state, not staged message content
+        k = max(1, int(self.budget * p))
+        item = 1 if self.quantize == "int8" else 4
+        header = 4 if self.quantize == "int8" else 0
+        return n * (k * (BYTES_IDX + item) + header)
+
     def round(self, X, W, state, key, degree, rnd=0):
-        k = max(1, int(self.budget * X.shape[1]))
+        k = self._k(X)
         Xf = X.astype(jnp.float32)
         diff = Xf - state["xhat"]
         if self.compressor == "topk":
-            M = _topk_mask(jnp.abs(diff), k)
+            idx = _topk_idx(jnp.abs(diff), k, self.selector)
         else:
-            M = _randk_mask(key, X.shape, k, rows=_mix_rows(W))
-        q = jnp.where(M, diff, 0.0)
-        xhat = state["xhat"] + q
+            idx = _randk_idx(key, X.shape, k, rows=_mix_rows(W))
+        val = jnp.take_along_axis(diff, idx, axis=1)
+        valf, item, header = _wire(val, self.quantize, jnp.float32)
+        xhat = state["xhat"].at[jnp.arange(X.shape[0])[:, None], idx].add(valf)
         X2 = Xf + self.gamma * (apply_W(W, xhat) - xhat)
-        return X2.astype(X.dtype), {"xhat": xhat}, degree * k * (BYTES_VAL + BYTES_IDX)
+        return X2.astype(X.dtype), {"xhat": xhat}, self._nbytes(degree, k, item, header)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,8 +456,6 @@ class QuantizedSharing:
         return ()
 
     def round(self, X, W, state, key, degree, rnd=0):
-        from repro.core.compression import dequantize_int8, quantize_int8
-
         if self.stochastic:
             keys = _node_keys(key, X.shape[0], _mix_rows(W))
             codes, scale = jax.vmap(lambda x, kk: quantize_int8(x, key=kk))(X, keys)
@@ -253,19 +463,59 @@ class QuantizedSharing:
             codes, scale = quantize_int8(X)
         Xq = dequantize_int8(codes, scale)  # what the receivers reconstruct
         X2 = apply_W(W, Xq).astype(X.dtype)
-        return X2, state, degree * (X.shape[1] * 1 + 4)  # int8 + scale
+        # int8 codes + the fp32 scale header, from the wire dtype itemsize
+        return X2, state, degree * (X.shape[1] * 1 + 4)
+
+    def wire_dtype(self, x_dtype):
+        return np.dtype(np.int8)
+
+    def stage_bytes_per_round(self, n: int, p: int) -> int:
+        return n * (p * 1 + 4)
 
 
-def make_sharing(name: str, budget: float = 0.1, **kw):
-    name = name.lower()
-    if name in ("full", "fullsharing", "d-psgd"):
-        return FullSharing()
-    if name in ("randomk", "random"):
-        return RandomKSharing(budget)
-    if name == "topk":
-        return TopKSharing(budget)
-    if name in ("choco", "choco-sgd", "chocosgd"):
-        return ChocoSGD(budget, **kw)
-    if name in ("quant", "quantized", "int8"):
-        return QuantizedSharing()
+_FULL_NAMES = ("full", "fullsharing", "d-psgd")
+_QUANT_NAMES = ("quant", "quantized", "int8")
+_RANDK_NAMES = ("randomk", "random")
+_CHOCO_NAMES = ("choco", "choco-sgd", "chocosgd")
+
+
+def strategy_takes_budget(name: str) -> bool:
+    """Whether ``name`` is a sparsified strategy parameterized by a
+    sharing budget (the engine only forwards ``DLConfig.budget`` to
+    these — full/quantized sharing share every coordinate)."""
+    return name.lower() not in _FULL_NAMES + _QUANT_NAMES
+
+
+def make_sharing(name: str, budget: Optional[float] = None, **kw):
+    """Build a sharing strategy by name.
+
+    Every keyword is forwarded to the strategy constructor; unknown or
+    inapplicable ones raise (no more silently-dropped ``budget``/kwargs).
+    ``budget`` defaults to the paper's 0.1 for sparsified strategies and is
+    rejected for full/quantized sharing, which share every coordinate.
+    """
+    name_l = name.lower()
+
+    def build(cls, **kwargs):
+        try:
+            return cls(**kwargs)
+        except TypeError as e:
+            raise ValueError(
+                f"invalid kwargs for sharing strategy {name!r}: {e}"
+            ) from None
+
+    if name_l in _FULL_NAMES + _QUANT_NAMES:
+        if budget is not None:
+            raise ValueError(
+                f"sharing strategy {name!r} shares every coordinate; "
+                "'budget' does not apply"
+            )
+        return build(FullSharing if name_l in _FULL_NAMES else QuantizedSharing, **kw)
+    b = 0.1 if budget is None else budget
+    if name_l in _RANDK_NAMES:
+        return build(RandomKSharing, budget=b, **kw)
+    if name_l == "topk":
+        return build(TopKSharing, budget=b, **kw)
+    if name_l in _CHOCO_NAMES:
+        return build(ChocoSGD, budget=b, **kw)
     raise ValueError(f"unknown sharing strategy {name!r}")

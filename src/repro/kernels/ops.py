@@ -17,11 +17,17 @@ from repro.kernels.gossip_mix import gossip_mix as _gossip_mix
 from repro.kernels.gossip_mix import gossip_mix_nodes as _gossip_mix_nodes
 from repro.kernels.quantize import dequantize as _dequantize
 from repro.kernels.quantize import quantize as _quantize
+from repro.kernels.scatter_gossip import payload_mix_nodes as _payload_mix_nodes
 from repro.kernels.secure_mask import secure_mask_apply as _secure_mask_apply
 from repro.kernels.secure_mask import secure_mask_apply_nodes as _secure_mask_apply_nodes
+from repro.kernels.secure_mask import (
+    secure_mask_apply_nodes_keyed as _secure_mask_apply_nodes_keyed,
+)
 from repro.kernels.sparsify import abs_histogram as _abs_histogram
+from repro.kernels.sparsify import abs_histogram_rows as _abs_histogram_rows
 from repro.kernels.sparsify import threshold_mask as _threshold_mask
 from repro.kernels.sparsify import topk_threshold as _topk_threshold
+from repro.kernels.sparsify import topk_threshold_rows as _topk_threshold_rows
 from repro.kernels.ssd_chunk import ssd_chunk as _ssd_chunk
 from repro.kernels.swa_attention import swa_attention as _swa_attention
 
@@ -57,9 +63,32 @@ def secure_mask_apply_nodes(x, bits, signs, bound: float = 1.0, interpret: bool 
                                     interpret=INTERPRET if interpret is None else interpret)
 
 
+def secure_mask_apply_nodes_keyed(x, keys, signs, bound: float = 1.0,
+                                  interpret: bool = None):
+    return _secure_mask_apply_nodes_keyed(
+        x, keys, signs, bound,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def payload_mix_nodes(x, idx, val, w, interpret: bool = None):
+    return _payload_mix_nodes(x, idx, val, w,
+                              interpret=INTERPRET if interpret is None else interpret)
+
+
 def abs_histogram(x, edges, interpret: bool = None):
     return _abs_histogram(x, edges,
                           interpret=INTERPRET if interpret is None else interpret)
+
+
+def abs_histogram_rows(x, edges, interpret: bool = None):
+    return _abs_histogram_rows(x, edges,
+                               interpret=INTERPRET if interpret is None else interpret)
+
+
+def topk_threshold_rows(x, k: int, interpret: bool = None):
+    """Per-row histogram top-k threshold (N,) for x (N, P)."""
+    return _topk_threshold_rows(x, k,
+                                interpret=INTERPRET if interpret is None else interpret)
 
 
 def threshold_mask(x, threshold, interpret: bool = None):

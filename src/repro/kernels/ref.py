@@ -57,6 +57,101 @@ def secure_mask_apply_ref(x, bits, signs, bound):
     return (x.astype(jnp.float32) + jnp.einsum("k,km->m", signs.astype(jnp.float32), masks)).astype(x.dtype)
 
 
+def threefry2x32_ref(k1, k2, x0, x1):
+    """Elementwise Threefry-2x32 block cipher (the JAX PRNG core), pure jnp.
+
+    k1/k2: uint32 key words (broadcastable against x0/x1); x0/x1: uint32
+    counter words.  Returns (y0, y1).  This is the single definition the
+    in-kernel bit generation (kernels/secure_mask) and its oracle share —
+    it must stay bit-identical to ``jax.random.bits``'s cipher.
+    """
+    def rotl(x, d):
+        return (x << jnp.uint32(d)) | (x >> jnp.uint32(32 - d))
+
+    ks0 = k1
+    ks1 = k2
+    ks2 = k1 ^ k2 ^ jnp.uint32(0x1BD11BDA)
+    ks = [ks0, ks1, ks2]
+    rots = ((13, 15, 26, 6), (17, 29, 16, 24))
+    x0 = x0 + ks0
+    x1 = x1 + ks1
+    for i in range(5):
+        for r in rots[i % 2]:
+            x0 = x0 + x1
+            x1 = rotl(x1, r) ^ x0
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def counter_bits_ref(k1, k2, positions, total: int):
+    """uint32 PRF bits at ``positions`` of a ``jax.random.bits(key, (total,))``
+    draw, computed positionally (no (total,) materialization).
+
+    Replicates jax's non-partitionable threefry expansion: the counter iota
+    is zero-padded *at the end* to even length S, split into halves
+    x0 = v[:S/2], x1 = v[S/2:], cipher outputs concatenated and truncated
+    back to ``total``.  Elementwise in ``positions``, so a kernel can
+    generate exactly its block's bits.  Bit-identity is asserted in
+    tests/test_kernels.py against jax.random.bits.
+    """
+    total = int(total)
+    s = total + (total % 2)
+    h = s // 2
+    q = positions.astype(jnp.uint32)
+    lane = jnp.where(q < h, q, q - jnp.uint32(h))
+    x1_pos = lane + jnp.uint32(h)
+    x0 = lane
+    x1 = jnp.where(x1_pos < total, x1_pos, jnp.uint32(0))
+    y0, y1 = threefry2x32_ref(k1, k2, x0, x1)
+    return jnp.where(q < h, y0, y1)
+
+
+def secure_mask_apply_nodes_keyed_ref(x, keys, signs, bound):
+    """x: (B, M); keys: (B, K, 2) uint32 pair-PRF keys; signs: (B, K).
+    out[b] = x[b] + sum_k signs[b, k] * uniform(bits(keys[b, k])), the bits
+    being jax.random.bits(key, (M,)) — generated here via counter_bits_ref
+    so the fused kernel and jax.random agree bit-exactly."""
+    B, K, _ = keys.shape
+    M = x.shape[1]
+    pos = jnp.arange(M, dtype=jnp.uint32)[None, None, :]
+    bits = counter_bits_ref(keys[:, :, 0:1], keys[:, :, 1:2], pos, M)  # (B, K, M)
+    masks = mask_bits_to_uniform(bits, bound)
+    return (
+        x.astype(jnp.float32)
+        + jnp.einsum("bk,bkm->bm", signs.astype(jnp.float32), masks)
+    ).astype(x.dtype)
+
+
+def payload_mix_nodes_ref(x, idx, val, w):
+    """Payload-indexed gossip merge oracle (missing-coordinate rule).
+
+    x: (N, P); idx: (N, K, k) int32; val: (N, K, k) fp32; w: (N, K).
+    out[n] = x[n] + sum_{K,k} w[n, K] * scatter(idx[n, K], val - x[n][idx])
+    — each operand slot contributes only its payload coordinates, missing
+    coordinates fall back to the receiver's own value.  fp32 accumulate.
+    """
+    n, K, k = idx.shape
+    xf = x.astype(jnp.float32)
+    fid = idx.reshape(n, K * k)
+    own = jnp.take_along_axis(xf, fid, axis=1)                    # (N, K*k)
+    contrib = (val.astype(jnp.float32).reshape(n, K * k) - own) * jnp.repeat(
+        w.astype(jnp.float32), k, axis=1
+    )
+    delta = jnp.zeros_like(xf).at[jnp.arange(n)[:, None], fid].add(contrib)
+    return (xf + delta).astype(x.dtype)
+
+
+def abs_histogram_rows_ref(x, edges):
+    """Row-batched abs_histogram_ref: x (N, P), edges (N, E) per-row
+    ascending -> (N, E+1) int32 counts."""
+    a = jnp.abs(x.astype(jnp.float32))
+    idx = jnp.sum(a[:, :, None] >= edges.astype(jnp.float32)[:, None, :], axis=2)
+    E = edges.shape[1]
+    onehot = idx[:, :, None] == jnp.arange(E + 1)[None, None, :]
+    return jnp.sum(onehot, axis=1).astype(jnp.int32)
+
+
 def gossip_mix_nodes_ref(neighbors, weights):
     """neighbors: (N, K, M); weights: (N, K).  Per-receiver fused merge:
     out[n, m] = sum_k w[n, k] * neighbors[n, k, m] (fp32 accumulate)."""

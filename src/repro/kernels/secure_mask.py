@@ -1,10 +1,21 @@
-"""Pallas TPU kernel: fused secure-aggregation mask apply.
+"""Pallas TPU kernels: fused secure-aggregation mask apply.
 
 A sender adds one cancellable mask per co-neighbor pair before the message
 leaves the chip: out = x + sum_k sign_k * U(bits_k), U mapping uint32 PRF
 bits to uniform [-b, b).  Fusing the K mask materializations + adds into
-one pass avoids K HBM round-trips of the full parameter vector.  Bits are
-produced outside (threefry) so the kernel is bit-exact against the oracle.
+one pass avoids K HBM round-trips of the full parameter vector.
+
+Two bit sources:
+
+* ``secure_mask_apply`` / ``secure_mask_apply_nodes`` — bits produced
+  outside (threefry) and staged as (…, K, M) uint32 tensors: simple, but
+  the caller pays O(B·K·M) HBM for the bit stacks.
+* ``secure_mask_apply_nodes_keyed`` — the fused form: the caller passes
+  only the (B, K, 2) uint32 *pair keys* and the kernel runs the
+  Threefry-2x32 counter expansion in-body per block, bit-identical to
+  ``jax.random.bits(key, (M,))`` (asserted against
+  ``kernels.ref.counter_bits_ref``).  Peak staging for a secure round
+  drops from O(N·d·P) bits to O(N·d) keys.
 """
 from __future__ import annotations
 
@@ -91,4 +102,89 @@ def secure_mask_apply_nodes(x, bits, signs, bound: float = 1.0, *,
         out_shape=jax.ShapeDtypeStruct((B, xp.shape[1]), x.dtype),
         interpret=interpret,
     )(jnp.asarray(bound, jnp.float32)[None], xp, bp, signs[:, :, None])
+    return out[:, :M]
+
+
+def _threefry2x32(k1, k2, x0, x1):
+    """In-kernel Threefry-2x32: uint32 adds/rotates/xors only (VPU ops).
+    Must stay bit-identical to kernels.ref.threefry2x32_ref."""
+    def rotl(x, d):
+        return (x << jnp.uint32(d)) | (x >> jnp.uint32(32 - d))
+
+    ks2 = k1 ^ k2 ^ jnp.uint32(0x1BD11BDA)
+    ks = (k1, k2, ks2)
+    rots = ((13, 15, 26, 6), (17, 29, 16, 24))
+    x0 = x0 + k1
+    x1 = x1 + k2
+    for i in range(5):
+        for r in rots[i % 2]:
+            x0 = x0 + x1
+            x1 = rotl(x1, r) ^ x0
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def _kernel_nodes_keyed(bound_ref, x_ref, keys_ref, signs_ref, o_ref, *,
+                        block_n: int, total: int):
+    """One (receiver, param-block) program: expand each pair key's counter
+    bits for this block's positions, map to uniform [-b, b), apply signed.
+
+    Positional replication of jax's threefry expansion for a (total,) draw:
+    the counter iota is zero-padded at the end to even length S, halved
+    into cipher lanes (x0 = v[:S/2], x1 = v[S/2:]), outputs concatenated —
+    so position p needs only its own lane pair, computable from p alone.
+    """
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)            # (1, BN)
+    keys = keys_ref[...]                          # (1, K, 2) uint32
+    signs = signs_ref[...].astype(jnp.float32)    # (1, K, 1)
+    bound = bound_ref[0]
+    s = total + (total % 2)
+    h = s // 2
+    q = (jax.lax.broadcasted_iota(jnp.uint32, (1, block_n), 1)
+         + (j * block_n).astype(jnp.uint32))      # global positions
+    lane = jnp.where(q < h, q, q - jnp.uint32(h))
+    x1_pos = lane + jnp.uint32(h)
+    x0 = lane                                     # (1, BN)
+    x1 = jnp.where(x1_pos < total, x1_pos, jnp.uint32(0))
+    k1 = keys[:, :, 0][:, :, None]                # (1, K, 1)
+    k2 = keys[:, :, 1][:, :, None]
+    y0, y1 = _threefry2x32(k1, k2, x0[:, None, :], x1[:, None, :])  # (1, K, BN)
+    bits = jnp.where(q[:, None, :] < h, y0, y1)
+    u01 = (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    masks = (u01 * 2.0 - 1.0) * bound
+    o_ref[...] = (x + jnp.sum(masks * signs, axis=1)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def secure_mask_apply_nodes_keyed(x, keys, signs, bound: float = 1.0, *,
+                                  interpret: bool = False, block_n: int = BLOCK_N):
+    """Fused mask apply with in-kernel bit generation.
+
+    x: (B, M) messages; keys: (B, K, 2) uint32 pair-PRF key words
+    (``jax.random.key_data`` of the folded-in pair keys); signs: (B, K) in
+    {-1, 0, +1} -> (B, M).  Equivalent to staging
+    ``jax.random.bits(key, (M,))`` per pair and calling
+    ``secure_mask_apply_nodes`` — without the (B, K, M) bit tensor.
+    """
+    B, K, _ = keys.shape
+    M = x.shape[1]
+    bn = min(block_n, -(-M // 128) * 128)
+    pad = (-M) % bn
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    grid = (B, xp.shape[1] // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel_nodes_keyed, block_n=bn, total=M),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, i: (0,)),
+            pl.BlockSpec((1, bn), lambda b, i: (b, i)),
+            pl.BlockSpec((1, K, 2), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, K, 1), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, xp.shape[1]), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(bound, jnp.float32)[None], xp, keys, signs[:, :, None])
     return out[:, :M]

@@ -106,6 +106,99 @@ class TestSparsify:
         assert amin_sel >= amax_drop - 1e-6 or nsel == M
 
 
+class TestScatterGossip:
+    @pytest.mark.parametrize("N,P,K,k", [(4, 100, 3, 5), (8, 1000, 7, 11),
+                                         (2, 65536 + 3, 2, 4)])
+    def test_sweep(self, N, P, K, k):
+        x = jax.random.normal(jax.random.key(N * P), (N, P))
+        idx = jax.random.randint(jax.random.key(1), (N, K, k), 0, P)
+        val = jax.random.normal(jax.random.key(2), (N, K, k))
+        w = jax.random.uniform(jax.random.key(3), (N, K))
+        got = ops.payload_mix_nodes(x, idx, val, w)
+        want = ref.payload_mix_nodes_ref(x, idx, val, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_duplicate_indices_accumulate(self):
+        """Two operands landing on the same coordinate must both apply."""
+        x = jnp.zeros((1, 8))
+        idx = jnp.array([[[3], [3]]], jnp.int32)
+        val = jnp.array([[[1.0], [2.0]]])
+        w = jnp.array([[0.5, 0.25]])
+        out = ops.payload_mix_nodes(x, idx, val, w)
+        np.testing.assert_allclose(np.asarray(out[0, 3]), 0.5 * 1.0 + 0.25 * 2.0,
+                                   rtol=1e-6)
+        assert float(jnp.abs(out).sum()) == pytest.approx(1.0)
+
+
+class TestSparsifyRows:
+    @pytest.mark.parametrize("N,P", [(4, 1000), (7, 65536 + 5)])
+    def test_histogram_rows_exact(self, N, P):
+        x = jax.random.normal(jax.random.key(N * P), (N, P))
+        edges = jnp.sort(
+            jnp.abs(jax.random.normal(jax.random.key(1), (N, 48))), axis=1
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ops.abs_histogram_rows(x, edges)),
+            np.asarray(ref.abs_histogram_rows_ref(x, edges)),
+        )
+
+    @pytest.mark.parametrize("k_frac", [0.01, 0.1])
+    def test_topk_threshold_rows_quality(self, k_frac):
+        N, P = 6, 20_000
+        k = int(P * k_frac)
+        x = jax.random.normal(jax.random.key(77), (N, P))
+        t = ops.topk_threshold_rows(x, k)
+        nsel = np.asarray((jnp.abs(x) >= t[:, None]).sum(1))
+        assert (nsel >= k).all() and (nsel <= int(k * 1.35) + 8).all(), nsel
+
+    def test_zero_rows(self):
+        t = ops.topk_threshold_rows(jnp.zeros((3, 256)), 4)
+        assert (np.asarray(t) == 0).all()  # all-zero row: everything survives
+
+
+class TestThreefryKernel:
+    @pytest.mark.parametrize("P", [1, 9, 100, 257, 70001])
+    def test_counter_bits_bit_identical_to_jax(self, P):
+        """The positional threefry expansion must reproduce
+        jax.random.bits exactly — the property the in-kernel generation
+        of secure masks rests on."""
+        key = jax.random.fold_in(jax.random.key(3), 7)
+        want = np.asarray(jax.random.bits(key, (P,), jnp.uint32))
+        kd = jax.random.key_data(key)
+        got = ref.counter_bits_ref(kd[0], kd[1], jnp.arange(P), P)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_keyed_kernel_bit_identical_to_bits_kernel(self):
+        """secure_mask_apply_nodes_keyed(keys) == secure_mask_apply_nodes
+        (pre-expanded jax.random bits) — bit-for-bit, odd M."""
+        B, K, M = 3, 4, 333
+        x = jax.random.normal(jax.random.key(7), (B, M))
+        base = jax.random.key(9)
+        ids = jnp.arange(B * K).reshape(B, K)
+        keys = jax.vmap(jax.vmap(
+            lambda i: jax.random.key_data(jax.random.fold_in(base, i))))(ids)
+        bits = jax.vmap(jax.vmap(
+            lambda i: jax.random.bits(jax.random.fold_in(base, i), (M,), jnp.uint32)
+        ))(ids)
+        signs = jnp.asarray(
+            np.random.default_rng(0).choice([-1.0, 0.0, 1.0], (B, K)), jnp.float32
+        )
+        a = ops.secure_mask_apply_nodes(x, bits, signs, 0.9)
+        b = ops.secure_mask_apply_nodes_keyed(x, keys, signs, 0.9)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("B,K,M", [(2, 3, 128), (5, 2, 70001)])
+    def test_keyed_kernel_matches_ref(self, B, K, M):
+        x = jax.random.normal(jax.random.key(M), (B, M))
+        keys = jax.random.bits(jax.random.key(1), (B, K, 2), jnp.uint32)
+        signs = jnp.where(jnp.arange(K)[None, :] % 2 == 0, 1.0, -1.0) * jnp.ones((B, 1))
+        got = ops.secure_mask_apply_nodes_keyed(x, keys, signs, 1.3)
+        want = ref.secure_mask_apply_nodes_keyed_ref(x, keys, signs, 1.3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
 class TestSSDChunk:
     @pytest.mark.parametrize("L,N,P,H", [(32, 16, 16, 2), (64, 32, 32, 4), (128, 64, 64, 2)])
     def test_sweep(self, L, N, P, H):

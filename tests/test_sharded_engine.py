@@ -1,7 +1,9 @@
 """Multi-device execution: the node-sharded RoundEngine must reproduce the
 single-device engine's trajectories for every scenario axis (dense, sparse,
-churn, secure), and the permutation decomposition behind the
-collective_permute gossip must round-trip exactly.
+churn, secure, payload-form compressed sharing — where the ppermute backend
+exchanges (B, k) idx/val payloads instead of (B, P) rows), and the
+permutation decomposition behind the collective_permute gossip must
+round-trip exactly.
 
 The sharded tests need 8 devices.  Under the plain tier-1 run (one CPU
 device — conftest deliberately does not force a device count) a launcher
@@ -168,6 +170,48 @@ class TestShardedEngine:
 
     def test_choco(self):
         _assert_equivalent(topology="regular", degree=5, sharing="choco")
+
+    # --- payload wire format: sharded == single-device, both gossip
+    # lowerings; the ppermute backend exchanges (B, k) idx/val payloads ---
+    def test_payload_randomk(self):
+        _assert_equivalent(topology="regular", degree=5, sharing="randomk",
+                           payload="on")
+
+    def test_payload_randomk_strided_ppermute(self):
+        _assert_equivalent(topology="regular", degree=5, sharing="randomk",
+                           randk_sampler="strided", payload="on",
+                           shard_backend="ppermute")
+
+    def test_payload_topk_ppermute(self):
+        _assert_equivalent(topology="regular", degree=5, sharing="topk",
+                           payload="on", shard_backend="ppermute")
+
+    def test_payload_topk_dynamic(self):
+        _assert_equivalent(topology="dynamic", degree=5, sharing="topk",
+                           payload="on")
+
+    def test_payload_churn(self):
+        _assert_equivalent(topology="regular", degree=5, sharing="randomk",
+                           payload="on", participation=0.6)
+
+    def test_payload_choco(self):
+        _assert_equivalent(topology="regular", degree=5, sharing="choco",
+                           payload="on")
+
+    def test_payload_quant_ppermute(self):
+        _assert_equivalent(topology="regular", degree=5, sharing="topk",
+                           payload="on", payload_quant=True,
+                           shard_backend="ppermute")
+
+    def test_payload_topk_churn_ppermute(self):
+        _assert_equivalent(topology="regular", degree=5, sharing="topk",
+                           payload="on", participation=0.6,
+                           shard_backend="ppermute")
+
+    def test_payload_strided_dynamic_churn(self):
+        _assert_equivalent(topology="dynamic", degree=5, sharing="randomk",
+                           randk_sampler="strided", payload="on",
+                           participation=0.6)
 
     def test_uneven_nodes_rejected(self):
         with pytest.raises(ValueError, match="divide evenly"):

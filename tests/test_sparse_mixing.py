@@ -121,7 +121,8 @@ class TestSharingStrategiesSparse:
         W = jnp.asarray(g.metropolis_hastings(), jnp.float32)
         st_ = _dev(SparseTopology.from_graph(g))
         X = jax.random.normal(jax.random.key(5), (g.n, 96))
-        s = make_sharing(strategy, 0.2, **kw)
+        budget = 0.2 if strategy not in ("full", "quant") else None
+        s = make_sharing(strategy, budget, **kw)
         key = jax.random.key(6)
         deg = float(g.degrees().mean())
         Xd, std, bd = s.round(X, W, s.init_state(X), key, deg, rnd=1)
@@ -291,6 +292,190 @@ class TestEngineSparseVsDense:
         dl = DLConfig(n_nodes=8, mixing="banana")
         with pytest.raises(ValueError):
             _engine(dl)
+
+
+class TestPayloadEquivalence:
+    """Payload-form compressed sharing == the dense-mask oracle: every
+    sparsified strategy, both W representations, quantized wire, the
+    histogram selector, and the engine end-to-end across topology/churn."""
+
+    @pytest.mark.parametrize("strategy,kw", [
+        ("randomk", {}),
+        ("randomk", {"sampler": "strided"}),
+        ("topk", {}),
+        ("choco", {"gamma": 0.4}),
+        ("choco", {"compressor": "randk"}),
+        ("randomk", {"quantize": "int8"}),
+        ("topk", {"quantize": "int8"}),
+        ("randomk", {"sampler": "strided", "quantize": "int8"}),
+        ("topk", {"selector": "hist"}),
+    ], ids=["randomk", "randomk-strided", "topk", "choco", "choco-randk",
+            "randomk-int8", "topk-int8", "strided-int8", "topk-hist"])
+    @pytest.mark.parametrize("name", ["ring", "random-regular"])
+    def test_round_payload_matches_masked(self, strategy, kw, name):
+        g = _graphs()[name]
+        W = jnp.asarray(g.metropolis_hastings(), jnp.float32)
+        st_ = _dev(SparseTopology.from_graph(g))
+        X = jax.random.normal(jax.random.key(5), (g.n, 96))
+        key = jax.random.key(6)
+        outs = {}
+        for payload in (True, False):
+            s = make_sharing(strategy, 0.2, payload=payload, **kw)
+            for Wf, tag in ((W, "dense"), (st_, "sparse")):
+                X2, stt, nb = s.round(X, Wf, s.init_state(X), key, 4.0, rnd=1)
+                outs[(payload, tag)] = (np.asarray(X2), float(nb),
+                                        jax.tree_util.tree_leaves(stt))
+        x_ref, nb_ref, st_ref = outs[(False, "dense")]
+        for k_, (x2, nb, stt) in outs.items():
+            np.testing.assert_allclose(x2, x_ref, rtol=5e-5, atol=5e-6,
+                                       err_msg=str(k_))
+            assert nb == pytest.approx(nb_ref), k_
+            for a, b in zip(stt, st_ref):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=5e-5, atol=5e-6)
+
+    def test_quantized_payload_bytes_and_dtype(self):
+        s = make_sharing("topk", 0.1, quantize="int8")
+        X = jax.random.normal(jax.random.key(0), (8, 100))
+        _, _, nb = s.round(X, jnp.eye(8), s.init_state(X), jax.random.key(1), 4.0)
+        # k=10 coords: 4B index + 1B code each, + 4B per-node scale header
+        assert float(nb) == pytest.approx(4.0 * (10 * 5 + 4))
+        assert s.wire_dtype(np.float32) == np.dtype(np.int8)
+        s32 = make_sharing("topk", 0.1)
+        assert s32.wire_dtype(np.float32) == np.dtype(np.float32)
+
+    def test_full_sharing_bytes_track_dtype(self):
+        from repro.core.sharing import FullSharing
+
+        s = FullSharing()
+        Xb = jax.random.normal(jax.random.key(0), (4, 64)).astype(jnp.bfloat16)
+        _, _, nb = s.round(Xb, jnp.eye(4), (), jax.random.key(1), 3.0)
+        assert float(nb) == pytest.approx(3.0 * 64 * 2)  # bf16 = 2 bytes/val
+
+    def test_make_sharing_rejects_unused_args(self):
+        with pytest.raises(ValueError, match="does not apply"):
+            make_sharing("full", 0.2)
+        with pytest.raises(ValueError, match="does not apply"):
+            make_sharing("quant", 0.2)
+        with pytest.raises(ValueError, match="invalid kwargs"):
+            make_sharing("topk", 0.2, banana=1)
+        with pytest.raises(ValueError, match="invalid kwargs"):
+            make_sharing("randomk", 0.2, gamma=0.5)
+        # valid kwargs still forwarded
+        assert make_sharing("quant", stochastic=False).stochastic is False
+        assert make_sharing("randomk", 0.2, sampler="strided").sampler == "strided"
+
+    def test_topk_quantized_error_feedback(self):
+        """last_shared must record the *dequantized* wire value so the
+        quantization residual stays in the delta and is re-shared."""
+        from repro.core.compression import dequantize_int8, quantize_int8
+
+        s = make_sharing("topk", 0.1, quantize="int8")
+        X = jax.random.normal(jax.random.key(0), (6, 50))
+        st0 = s.init_state(X)
+        X1 = X.at[:, :5].add(100.0)
+        _, st1, _ = s.round(X1, jnp.eye(6), st0, jax.random.key(1), 4.0)
+        idx = np.asarray(jax.lax.top_k(jnp.abs(X1 - st0["last_shared"]), 5)[1])
+        vals = np.take_along_axis(np.asarray(X1), idx, axis=1)
+        codes, scale = quantize_int8(jnp.asarray(vals))
+        want = np.asarray(dequantize_int8(codes, scale))
+        got = np.take_along_axis(np.asarray(st1["last_shared"]), idx, axis=1)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        assert (np.abs(got - vals) > 0).any()  # residual is really nonzero
+
+    def test_hist_selector_selects_above_threshold(self):
+        from repro.core.sharing import _topk_idx
+
+        x = jnp.abs(jax.random.normal(jax.random.key(3), (6, 4000)))
+        k = 40
+        idx = _topk_idx(x, k, selector="hist")
+        assert idx.shape == (6, k)
+        picked = np.asarray(jnp.take_along_axis(x, idx, axis=1))
+        for r in range(6):
+            assert len(set(np.asarray(idx[r]))) == k  # distinct
+        # every selected magnitude within one fine bin of the exact top-k
+        exact = np.asarray(jax.lax.top_k(x, k)[0])
+        assert (picked.min(1) >= exact.min(1) * 0.95).all()
+
+
+def _run_engine_pair(cfg, seed=2, rounds=4, n_nodes=8):
+    """Engine trajectories with payload on vs off; everything else equal."""
+    outs = {}
+    for payload in ("on", "off"):
+        dl = DLConfig(n_nodes=n_nodes, rounds=rounds, eval_every=3,
+                      chunk_rounds=2, seed=seed, payload=payload, **cfg)
+        e = _engine(dl)
+        e.run(log=False)
+        outs[payload] = (_flat(e.params), e.bytes_sent, e.share_stage_bytes,
+                         e.wire_dtype)
+    return outs
+
+
+class TestEnginePayload:
+    """DLConfig.payload on == off (the dense-mask oracle) end-to-end for
+    every sparsified strategy × {static ring, dynamic 5-regular} ×
+    {churn on/off} (the 8-device axis lives in test_sharded_engine)."""
+
+    @pytest.mark.parametrize("churn", [False, True], ids=["all-up", "churn"])
+    @pytest.mark.parametrize("topo", [
+        dict(topology="ring"), dict(topology="dynamic", degree=5),
+    ], ids=["ring", "dynamic"])
+    @pytest.mark.parametrize("sharing", [
+        dict(sharing="randomk", budget=0.2),
+        dict(sharing="randomk", budget=0.2, randk_sampler="strided"),
+        dict(sharing="topk", budget=0.2),
+        dict(sharing="choco", budget=0.2),
+    ], ids=["randomk", "randomk-strided", "topk", "choco"])
+    def test_trajectories_match(self, sharing, topo, churn):
+        cfg = {**sharing, **topo}
+        if churn:
+            cfg["participation"] = 0.6
+        outs = _run_engine_pair(cfg)
+        p_on, b_on, stage_on, dt_on = outs["on"]
+        p_off, b_off, stage_off, _ = outs["off"]
+        np.testing.assert_allclose(p_on, p_off, rtol=5e-4, atol=5e-5)
+        assert b_on == pytest.approx(b_off, rel=1e-6)
+        if sharing["sharing"] != "choco":  # choco stages payloads either way
+            assert stage_on < stage_off  # compact payloads vs (N, P) masks
+        assert dt_on == "float32"
+
+    def test_quantized_payload_trajectories(self):
+        outs = _run_engine_pair(dict(sharing="topk", budget=0.2,
+                                     topology="ring", payload_quant=True))
+        np.testing.assert_allclose(outs["on"][0], outs["off"][0],
+                                   rtol=5e-4, atol=5e-5)
+        assert outs["on"][3] == "int8"
+
+    def test_chunk_invariance(self):
+        """Payload trajectories must not depend on the scan chunking."""
+        base = dict(sharing="topk", budget=0.2, topology="dynamic", degree=5)
+        flats = {}
+        for chunk in (1, 3, 4):
+            dl = DLConfig(n_nodes=8, rounds=4, eval_every=4, chunk_rounds=chunk,
+                          seed=3, payload="on", **base)
+            e = _engine(dl)
+            e.run(log=False)
+            flats[chunk] = (_flat(e.params), e.bytes_sent)
+        for chunk in (3, 4):
+            np.testing.assert_array_equal(flats[chunk][0], flats[1][0])
+            assert flats[chunk][1] == pytest.approx(flats[1][1])
+
+    def test_payload_on_requires_sparsified(self):
+        dl = DLConfig(n_nodes=8, sharing="full", payload="on")
+        with pytest.raises(ValueError, match="sparsified"):
+            _engine(dl)
+        dl = DLConfig(n_nodes=8, sharing="full", payload_quant=True)
+        with pytest.raises(ValueError, match="payload_quant"):
+            _engine(dl)
+        dl = DLConfig(n_nodes=8, sharing="topk", payload="banana")
+        with pytest.raises(ValueError, match="payload mode"):
+            _engine(dl)
+        for kw in (dict(payload="on"), dict(payload_quant=True),
+                   dict(randk_sampler="strided")):
+            dl = DLConfig(n_nodes=8, topology="regular", degree=4,
+                          secure=True, **kw)
+            with pytest.raises(ValueError, match="secure"):
+                _engine(dl)
 
 
 class TestBatchedParticipationMask:
