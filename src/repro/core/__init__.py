@@ -11,6 +11,7 @@ from repro.core.topology import (
     mh_weight_table,
     neighbor_table,
     random_regular_neighbors,
+    sample_neighbor_slots,
 )
 from repro.core.mixing import (
     NodeShard,
@@ -18,6 +19,7 @@ from repro.core.mixing import (
     ShardedDense,
     ShardedTopology,
     apply_W,
+    gossip_pair_avg,
     mix_dense,
     mix_payload,
     mix_payload_masked,
@@ -44,10 +46,20 @@ from repro.core.network import (
     LinkSpec,
     Mapping,
     NetworkModel,
+    node_round_times,
     paper_testbed,
+    straggler_compute_times,
     wan_deployment,
 )
 from repro.core.secure import SecureAggregation
 from repro.core.engine import RoundEngine, build_network
+from repro.core.steps import RoundSteps
+from repro.core.scheduler import (
+    AsyncScheduler,
+    LocalScheduler,
+    Scheduler,
+    SyncScheduler,
+    make_scheduler,
+)
 from repro.core.node import DLConfig, DecentralizedRunner, build_graph
 from repro.core.federated import FLConfig, FederatedRunner

@@ -3,86 +3,51 @@ emulator (paper Fig. 2 loop, compiled R rounds at a time).
 
 ## Execution model
 
-The engine executes rounds in **chunks of R rounds compiled into a single
-``lax.scan``** instead of one host-driven jit dispatch per round:
+Execution is layered (the pluggable-semantics split):
 
-* **Batches are pre-stacked on device.**  The full (synthetic) dataset is
-  resident on the device; the host only produces a tiny ``(R, L, N, B)``
-  int32 index tensor per chunk (``NodeBatcher.chunk_indices``) and each
-  scanned round gathers its batch with one ``take``.  No per-round
-  host->device batch transfer, no per-round ``np.stack``.
-* **Mixing topologies are traced scan inputs — sparse by default.**  For
-  sparse overlays (ring, d-regular, the paper's dynamic 5-regular: d ≪ N)
-  the round program mixes in neighbor-indexed form: a ``SparseTopology``
-  of padded (N, D) neighbor + weight tables, gathered and contracted in
-  O(N·D·P) instead of the dense O(N²·P) ``W @ X``.  Dynamic topologies
-  stage an (R, N, D) per-chunk table stack (``PeerSampler.sparse_stack``,
-  O(N·d) per round) instead of the (R, N, N) ``weights_stack``, so chunk
-  length no longer shrinks under the W-stack byte cap at N=1024+.  The
-  dense path survives behind ``mixing="dense"`` — the right lowering for
-  ``fully``/``star`` (D ≈ N) and the equivalence oracle the sparse path is
-  property-tested against; ``mixing="auto"`` (default) picks per topology.
-  Either way the per-round mixing operand is a traced scan input, so
-  dynamic topologies never recompile, and the mean degree used for byte
-  accounting is a traced per-round scalar.
-* **Metrics are traced per-round outputs.**  Bytes-sent and (when a
-  ``NetworkModel`` is configured) the simulated synchronous-round
-  wall-clock are collected by the scan as ``(R,)`` arrays and synced to the
-  host once per chunk, not once per round.
-* **Sparsified sharing runs in payload form.**  With ``payload`` on
-  (default for randomk/topk/choco), strategies emit compact per-node
-  ``(idx, val)`` payloads inside the scanned round and aggregate them via
-  ``mixing.mix_payload``'s gather + scatter-accumulate pass — O(N·d·k)
-  instead of the dense-mask form's two O(N·d·P) ``apply_W`` passes; in the
-  sharded chunk the ppermute backend then exchanges (B, k) payloads
-  (O(D·B·k) wire).  ``payload="off"`` forces the dense-mask oracle, kept
-  property-tested equal; byte accounting and the ``wire_dtype`` /
-  ``share_stage_bytes`` metrics derive from the actual wire dtype.
-* **Secure aggregation runs inside the scan.**  ``core/secure.py``'s
-  vectorized masked-mixing path is jittable (padded neighbor tables +
-  traced round index for the PRF), so ``secure=True`` uses the same scanned
-  loop as every other sharing strategy.
-* **Participation masks (churn / stragglers).**  An ``(R, N)`` per-round
-  activity mask is threaded through the scan; down nodes skip their local
-  update and are cut out of the mixing operand on the fly
-  (``sharing.participation_reweight`` dense, ``participation_reweight_sparse``
-  for neighbor tables — slot masking, freed mass back to the diagonal),
-  with byte accounting following the effective degree.  Masks come from a
-  single batched counter-based draw per chunk (splitmix64 over (seed,
-  absolute round, node)), so they are chunk-boundary invariant without a
-  per-round ``default_rng`` host loop.
+* **Step layer** (``core/steps.py``): the pure jittable per-round
+  functions — local-SGD step, share/mix step through the configured
+  sharing strategy, per-node simulated round time — identical inside a
+  ``lax.scan`` body, a legacy per-round jit, or a ``shard_map`` block.
+* **Scheduler layer** (``core/scheduler.py``): time and activation
+  semantics, selected by ``DLConfig.semantics``:
 
-* **The chunk shards over a device mesh.**  With ``shard_devices=K`` the
-  same scanned chunk runs under ``shard_map`` on a 1-D node mesh
-  (``launch.mesh.make_node_mesh``): every node-stacked carry and scan
-  input — params stack, optimizer state, sharing state, per-chunk batches,
-  participation masks, mixing tables — is row-block sharded over the node
-  axis (B = N/K rows per device), local training stays embarrassingly
-  parallel, and only the gossip crosses devices.  Two distributed gossip
-  lowerings (``shard_backend``): ``'ppermute'`` slot-rebalances a static
-  ``SparseTopology`` into D permutation columns
-  (``topology.decompose_slot_permutations``) and applies each as
-  rotation-grouped `collective_permute`s — O(D·B·P) wire, the
-  interconnect-native path, generalizing the circulant shard_map mixer to
-  arbitrary sparse graphs; ``'gather'`` all-gathers the node axis and
-  reuses the single-device neighbor gather (any table, incl. per-round
-  dynamic stacks).  Per-round scalar metrics (effective degree, bytes,
-  simulated round time) are psum/pmax-reduced so every device carries the
-  same global values, per-node PRNG draws are keyed by global node id
-  (``sharing._node_keys``) so sharded trajectories reproduce the
-  single-device ones (bit-identical on the gather path; within fp32
-  reassociation tolerance where slot rebalancing reorders per-receiver
-  sums), and secure aggregation exchanges its masked messages along the
-  same permutations.  Testable on CPU via
-  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-  (tests/test_sharded_engine.py).
+  - ``"sync"`` — the synchronous round barrier (chunks of R rounds in one
+    ``lax.scan``; the bit-for-bit equivalence oracle, and the only
+    semantics the legacy ``chunk_rounds=0`` dispatch and the node-sharded
+    ``shard_map`` chunk run under),
+  - ``"local"`` — identical trajectories, per-node virtual clocks with a
+    neighborhood barrier (stragglers delay only their graph
+    neighborhood),
+  - ``"async"`` — event-driven gossip on a first-class virtual clock
+    (the AD-PSGD family): per-node next-event times driven by the
+    heterogeneous per-node ``compute_time_s`` vector, scanned event
+    cohorts, pairwise or neighborhood averaging against possibly-stale
+    neighbor params, with staleness / per-node wall-clock / event counts
+    as traced outputs.
 
-Chunk boundaries are aligned to the eval cadence, so the recorded history
-is identical to per-round execution; distinct chunk lengths (full chunks
-vs the remainder before an eval round) each compile once and are cached.
-``chunk_rounds=0`` selects the legacy per-round dispatch path (host-stacked
-batches, one jit call and one host sync per round) — kept as the baseline
-``benchmarks/bench_engine.py`` measures against.
+* **Engine** (this module): resources and the run loop — node-stacked
+  state, device-resident data, topology/network/sharing construction,
+  eval cadence, history, results.
+
+The mechanics the layers inherit from the earlier engine generations are
+unchanged and still property-tested: batches pre-stacked on device with
+per-chunk index tensors; sparse neighbor-indexed mixing with traced
+per-round (R, N, D) topology stacks (``mixing="auto"|"sparse"|"dense"``);
+payload-form compressed sharing (``payload``); jittable secure
+aggregation; per-round participation masks for churn — now iid *or*
+machine-correlated (``churn_machines``); metrics as traced scan outputs
+synced once per chunk; and the node-sharded chunk over a device mesh
+(``shard_devices``/``shard_backend``) with collective_permute or
+all-gather gossip.  Chunk boundaries align to the eval cadence, so the
+recorded history is identical to per-round execution.
+
+Heterogeneous time is a first-class axis: ``compute_time_s`` is the base
+per-node local compute, and ``straggler_factor``/``straggler_frac`` mark
+a seeded fraction of nodes as stragglers (``network.straggler_compute_
+times``); the (N,) vector feeds the traced round-time formula — one
+implementation, ``network.node_round_times``, shared with the host
+``NetworkModel`` so the Python model and the compiled model cannot drift.
 """
 from __future__ import annotations
 
@@ -95,18 +60,18 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.core import sharing as sharing_lib
-from repro.core.mixing import (
-    NodeShard,
-    PermuteSchedule,
-    ShardedDense,
-    ShardedTopology,
+from repro.core.mixing import NodeShard, PermuteSchedule
+from repro.core.network import (
+    NetworkModel,
+    paper_testbed,
+    straggler_compute_times,
+    wan_deployment,
 )
-from repro.core.network import NetworkModel, paper_testbed, wan_deployment
+from repro.core.scheduler import make_scheduler
 from repro.core.secure import SecureAggregation
-from repro.core.sharing import participation_reweight, participation_reweight_sparse
+from repro.core.steps import RoundSteps
 from repro.core.topology import (
     Graph,
     PeerSampler,
@@ -114,17 +79,12 @@ from repro.core.topology import (
     decompose_slot_permutations,
 )
 from repro.optim import Optimizer
-from repro.optim.optimizers import apply_updates
-from repro.utils.compat import shard_map
-from repro.utils.pytree import tree_unvector, tree_vector
+from repro.utils.pytree import tree_vector
 
 # cap on the (R, N, N) mixing-matrix stack a single *dense-path* chunk
 # materializes; dense chunks shrink automatically at very large N.  The
 # sparse path stages O(N·d) tables per round and is exempt.
 _W_STACK_BYTES_CAP = 64 * 1024 * 1024
-# cap on the pre-gathered (R, L, N, B, ...) batch stack; above it the scan
-# falls back to gathering each round's batch inside the loop body.
-_BATCH_STACK_BYTES_CAP = 256 * 1024 * 1024
 
 
 @dataclasses.dataclass
@@ -155,14 +115,131 @@ class DLConfig:
     # --- engine (scan) execution ------------------------------------------
     chunk_rounds: int = 8      # rounds per compiled lax.scan chunk; 0 = legacy
     mixing: str = "auto"       # auto | sparse (neighbor tables) | dense (N,N W)
+    # --- execution semantics (scheduler layer) -----------------------------
+    # 'sync'  — synchronous round barrier (the paper's default; oracle)
+    # 'local' — same trajectories, per-node clocks w/ neighborhood barrier
+    # 'async' — event-driven gossip on a virtual clock (AD-PSGD family)
+    semantics: str = "sync"
+    async_gossip: str = "neighborhood"  # neighborhood | pairwise (AD-PSGD)
+    async_slice_s: float = 0.0  # event-cohort window on the virtual clock
     # --- multi-device execution -------------------------------------------
     shard_devices: int = 0     # shard the node axis over this many devices
     shard_backend: str = "auto"  # auto | ppermute (slot collective_permutes) | gather
     # --- scenario axes -----------------------------------------------------
     participation: float = 1.0  # P(node active in a round); <1 models churn
+    churn_machines: int = 0    # >0: correlated churn — machines fail, not nodes
     network: str = "none"       # simulated network: none | lan | wan
-    compute_time_s: float = 0.0  # per-round local compute in the time model
+    compute_time_s: float = 0.0  # base per-node local compute in the time model
+    straggler_factor: float = 1.0  # stragglers run at factor x compute_time_s
+    straggler_frac: float = 0.0    # seeded fraction of straggler nodes
     parallel_sends: bool = False  # overlap a node's sends (dedicated NICs)
+
+    # ------------------------------------------------------------------
+    def validate(self) -> "DLConfig":
+        """Centralized knob validation — every cross-knob constraint lives
+        here (the engine calls it first; tests exercise it directly).
+        Raises ValueError on the first violation; returns self."""
+        def bad(msg):
+            raise ValueError(f"invalid DLConfig: {msg}")
+
+        if self.semantics not in ("sync", "local", "async"):
+            bad(f"unknown semantics {self.semantics!r} (sync|local|async)")
+        if self.async_gossip not in ("neighborhood", "pairwise"):
+            bad(f"unknown async_gossip {self.async_gossip!r} "
+                "(neighborhood|pairwise)")
+        if self.payload not in ("auto", "on", "off"):
+            bad(f"unknown payload mode {self.payload!r} (auto|on|off)")
+        if self.mixing not in ("auto", "sparse", "dense"):
+            bad(f"unknown mixing mode {self.mixing!r} (auto|sparse|dense)")
+        if self.shard_backend not in ("auto", "ppermute", "gather"):
+            bad(f"unknown shard_backend {self.shard_backend!r} "
+                "(auto|ppermute|gather)")
+        if self.randk_sampler not in ("uniform", "strided"):
+            bad(f"unknown randk_sampler {self.randk_sampler!r} "
+                "(uniform|strided)")
+        if not 0.0 < self.participation <= 1.0:
+            bad(f"participation must be in (0, 1], got {self.participation}")
+        if self.churn_machines < 0:
+            bad("churn_machines must be >= 0")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            bad(f"straggler_frac must be in [0, 1], got {self.straggler_frac}")
+        if self.straggler_factor <= 0:
+            bad("straggler_factor must be > 0")
+        if self.compute_time_s < 0 or self.async_slice_s < 0:
+            bad("compute_time_s / async_slice_s must be >= 0")
+        if (
+            self.straggler_frac > 0
+            and self.straggler_factor != 1.0
+            and self.compute_time_s == 0
+        ):
+            bad("straggler_factor/straggler_frac scale compute_time_s, "
+                "which is 0 — the straggler distribution would be a silent "
+                "no-op; set a base compute_time_s")
+        # (churn_machines with participation=1.0 is permitted: sweeps use
+        # p=1.0 as the no-churn baseline row)
+        # -- sharing-strategy knob compatibility ---------------------------
+        sparsified = sharing_lib.strategy_takes_budget(self.sharing)
+        if self.secure:
+            if self.topology == "dynamic":
+                bad("secure=True needs a static graph (the pairwise-mask "
+                    "PRF schedule is per-edge); topology='dynamic' has none")
+            if self.participation < 1.0 or self.churn_machines > 0:
+                bad("secure=True is incompatible with churn (participation "
+                    "< 1 or churn_machines > 0): a dropped node's pairwise "
+                    "masks would not cancel (seed recovery is not modeled)")
+            if self.payload == "on" or self.payload_quant or self.randk_sampler != "uniform":
+                bad("payload/payload_quant/randk_sampler do not compose "
+                    "with secure=True (masked messages are full fp32 "
+                    "vectors; compressing them would break mask "
+                    "cancellation)")
+        else:
+            if self.payload == "on" and not sparsified:
+                bad(f"payload='on' needs a sparsified sharing strategy "
+                    f"(randomk/topk/choco), not {self.sharing!r}")
+            if self.payload_quant and not sparsified:
+                bad("payload_quant applies to payload-emitting strategies "
+                    "(randomk/topk/choco); use sharing='quant' for "
+                    "quantized full sharing")
+            if self.randk_sampler != "uniform" and self.sharing.lower() not in (
+                "randomk", "random"
+            ):
+                bad("randk_sampler applies to sharing='randomk' only")
+        # -- multi-device constraints --------------------------------------
+        if self.shard_devices > 0:
+            if self.chunk_rounds <= 0:
+                bad("shard_devices requires the scanned chunk path "
+                    "(chunk_rounds > 0); the legacy per-round dispatch is "
+                    "single-device only")
+            if self.n_nodes % self.shard_devices:
+                bad(f"n_nodes={self.n_nodes} must divide evenly over "
+                    f"shard_devices={self.shard_devices}")
+        # -- execution-semantics constraints -------------------------------
+        if self.semantics != "sync":
+            if self.chunk_rounds <= 0:
+                bad(f"semantics={self.semantics!r} runs on the scanned "
+                    "chunk path only (chunk_rounds > 0); the legacy "
+                    "per-round dispatch is synchronous by construction")
+            if self.shard_devices > 0:
+                bad(f"semantics={self.semantics!r} is single-host for now "
+                    "(the virtual clock is not yet distributed); use "
+                    "semantics='sync' with shard_devices")
+        if self.semantics == "async":
+            if self.secure:
+                bad("semantics='async' rejects secure=True until masked "
+                    "asynchronous rounds are modeled (pairwise masks "
+                    "assume all co-neighbors mix in the same round)")
+            if not sharing_lib.is_full_sharing(self.sharing):
+                bad("semantics='async' models one-sided stale reads for "
+                    f"sharing='full' only (got {self.sharing!r}); "
+                    "compressed/stateful strategies assume a synchronous "
+                    "exchange")
+            if self.async_gossip == "pairwise" and (
+                self.mixing == "dense" or self.topology in ("fully", "star")
+            ):
+                bad("async_gossip='pairwise' samples partners from sparse "
+                    "neighbor tables; use async_gossip='neighborhood' for "
+                    "dense mixing / fully|star topologies")
+        return self
 
 
 def build_graph(cfg: DLConfig) -> Optional[Graph]:
@@ -184,14 +261,30 @@ def build_graph(cfg: DLConfig) -> Optional[Graph]:
     raise ValueError(f"unknown topology {t!r}")
 
 
+def compute_time_vector(cfg: DLConfig) -> np.ndarray:
+    """THE per-node (N,) compute-time vector of a config — the single
+    derivation (including the straggler draw's seed offset) shared by the
+    host ``NetworkModel`` and the engine's traced step/scheduler layers,
+    so the two cannot disagree about who the stragglers are."""
+    return straggler_compute_times(
+        cfg.n_nodes, cfg.compute_time_s, cfg.straggler_factor,
+        cfg.straggler_frac, seed=cfg.seed + 31,
+    )
+
+
 def build_network(cfg: DLConfig) -> Optional[NetworkModel]:
     if cfg.network in (None, "", "none"):
         return None
     if cfg.network == "lan":
-        return paper_testbed(cfg.n_nodes)
-    if cfg.network == "wan":
-        return wan_deployment(cfg.n_nodes)
-    raise ValueError(f"unknown network model {cfg.network!r} (none|lan|wan)")
+        net = paper_testbed(cfg.n_nodes)
+    elif cfg.network == "wan":
+        net = wan_deployment(cfg.n_nodes)
+    else:
+        raise ValueError(f"unknown network model {cfg.network!r} (none|lan|wan)")
+    # promote the config's (possibly heterogeneous) compute times into the
+    # model, so the host-side NetworkModel and the traced engine agree
+    net.compute_time_s = compute_time_vector(cfg)
+    return net
 
 
 class RoundEngine:
@@ -213,6 +306,7 @@ class RoundEngine:
         batcher,
         heterogeneous_lrs: Optional[np.ndarray] = None,
     ):
+        dl.validate()
         self.dl = dl
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
@@ -234,28 +328,9 @@ class RoundEngine:
         self.sampler = PeerSampler(dl.n_nodes, dl.degree, dl.seed) if dl.topology == "dynamic" else None
         if dl.secure:
             assert self.graph is not None, "secure aggregation needs a static graph"
-            if dl.participation < 1.0:
-                raise ValueError(
-                    "secure=True is incompatible with participation < 1: a "
-                    "dropped node's pairwise masks would not cancel (seed "
-                    "recovery is not modeled); run churn without secure."
-                )
-            if dl.payload == "on" or dl.payload_quant or dl.randk_sampler != "uniform":
-                raise ValueError(
-                    "payload/payload_quant/randk_sampler do not compose with "
-                    "secure=True (masked messages are full fp32 vectors; "
-                    "compressing them would break mask cancellation)"
-                )
             self.sharing = SecureAggregation(self.graph.adj)
         else:
-            if dl.payload not in ("auto", "on", "off"):
-                raise ValueError(f"unknown payload mode {dl.payload!r} (auto|on|off)")
             sparsified = sharing_lib.strategy_takes_budget(dl.sharing)
-            if dl.payload == "on" and not sparsified:
-                raise ValueError(
-                    f"payload='on' needs a sparsified sharing strategy "
-                    f"(randomk/topk/choco), not {dl.sharing!r}"
-                )
             kw = {"gamma": dl.choco_gamma} if dl.sharing.startswith("choco") else {}
             if sparsified:
                 kw["budget"] = dl.budget
@@ -264,16 +339,6 @@ class RoundEngine:
                     kw["quantize"] = "int8"
                 if dl.sharing.lower() in ("randomk", "random"):
                     kw["sampler"] = dl.randk_sampler
-                elif dl.randk_sampler != "uniform":
-                    raise ValueError(
-                        "randk_sampler applies to sharing='randomk' only"
-                    )
-            elif dl.payload_quant:
-                raise ValueError(
-                    "payload_quant applies to payload-emitting strategies "
-                    "(randomk/topk/choco); use sharing='quant' for "
-                    "quantized full sharing"
-                )
             self.sharing = sharing_lib.make_sharing(dl.sharing, **kw)
         X0 = jax.vmap(tree_vector)(self.params)
         self.share_state = self.sharing.init_state(X0)
@@ -286,22 +351,21 @@ class RoundEngine:
             self.sharing.stage_bytes_per_round(dl.n_nodes, self.n_params)
         )
         self.mix_mode = self._resolve_mix_mode()
+        if (
+            dl.semantics == "async"
+            and dl.async_gossip == "pairwise"
+            and self.mix_mode != "sparse"
+        ):
+            raise ValueError(
+                "async_gossip='pairwise' needs sparse neighbor tables; this "
+                "topology resolved to dense mixing — use "
+                "async_gossip='neighborhood'"
+            )
         # --- node-axis sharding (multi-device execution) -------------------
         self.sharded = dl.shard_devices > 0
         self._shard: Optional[NodeShard] = None
         self._perm_sched: Optional[PermuteSchedule] = None
         if self.sharded:
-            if dl.chunk_rounds <= 0:
-                raise ValueError(
-                    "shard_devices requires the scanned chunk path "
-                    "(chunk_rounds > 0); the legacy per-round dispatch is "
-                    "single-device only"
-                )
-            if dl.n_nodes % dl.shard_devices:
-                raise ValueError(
-                    f"n_nodes={dl.n_nodes} must divide evenly over "
-                    f"shard_devices={dl.shard_devices}"
-                )
             from repro.launch.mesh import make_node_mesh
 
             self._mesh = make_node_mesh(dl.shard_devices)
@@ -309,7 +373,6 @@ class RoundEngine:
                 "nodes", (dl.shard_devices,), dl.n_nodes // dl.shard_devices
             )
             self._shard_backend = self._resolve_shard_backend()
-            self._shard_jit_cache: Dict = {}
         # peak host->device bytes staged per chunk (or once, if static) for
         # the mixing topology — O(N·d) sparse vs 4·N² dense; the perf gate
         # benchmarks record it
@@ -352,6 +415,15 @@ class RoundEngine:
             self._goodput = jnp.asarray(gp)
         else:
             self._lat = self._goodput = None
+        # heterogeneous per-node compute times — the (N,) vector both the
+        # traced round-time formula and the async event clock consume;
+        # reuse the network model's copy so both sides see one derivation
+        self._compute_node_np = (
+            self.network_model.compute_time_s
+            if self.network_model is not None
+            else compute_time_vector(dl)
+        )
+        self._compute_node = jnp.asarray(self._compute_node_np)
         # device-resident dataset for in-scan batch gathers
         self._dev_x = jnp.asarray(batcher.x)
         self._dev_y = jnp.asarray(batcher.y)
@@ -366,11 +438,24 @@ class RoundEngine:
             self.chunk = max(1, min(dl.chunk_rounds, _W_STACK_BYTES_CAP // (4 * n * n)))
         else:
             self.chunk = dl.chunk_rounds
+        # --- the two execution layers --------------------------------------
+        self.steps = RoundSteps(
+            loss_fn=loss_fn,
+            opt=optimizer,
+            sharing=self.sharing,
+            template=self.template,
+            base_key=self._base_key,
+            mean_degree=self._mean_degree,
+            compute_node=self._compute_node,
+            parallel_sends=dl.parallel_sends,
+            lr_scales=self.lr_scales,
+            lat=self._lat,
+            goodput=self._goodput,
+        )
+        self.scheduler = make_scheduler(self)
         self.history: List[Dict] = []
         self.bytes_sent = 0.0
         self.sim_time_s = 0.0
-        self._chunk_jit = jax.jit(self._chunk_fn)
-        self._legacy_jit = jax.jit(self._legacy_round)
         self._eval_jit = jax.jit(self._eval)
 
     def _resolve_shard_backend(self) -> str:
@@ -383,10 +468,6 @@ class RoundEngine:
         TPU interconnects and gather on CPU emulation, where host-emulated
         collectives cost more than the bytes they save."""
         b = self.dl.shard_backend
-        if b not in ("auto", "ppermute", "gather"):
-            raise ValueError(
-                f"unknown shard_backend {b!r} (auto|ppermute|gather)"
-            )
         static_sparse = self.sampler is None and self.mix_mode == "sparse"
         if b == "ppermute":
             if not static_sparse:
@@ -404,8 +485,6 @@ class RoundEngine:
         """'sparse' (neighbor-indexed O(N·d·P) gossip) for sparse overlays,
         'dense' (W @ X) where the graph is effectively complete."""
         m = self.dl.mixing
-        if m not in ("auto", "sparse", "dense"):
-            raise ValueError(f"unknown mixing mode {m!r} (auto|sparse|dense)")
         if m != "auto":
             return m
         if self.dl.topology in ("fully", "star"):
@@ -415,381 +494,13 @@ class RoundEngine:
         return "sparse"
 
     # ------------------------------------------------------------------
-    # traced round program (shared by scan body and legacy dispatch)
+    # back-compat shims (tests and external callers poke these)
     # ------------------------------------------------------------------
-    def _node_scale(self, tree, scale):
-        """Multiply every node-stacked leaf by a per-node (N,) factor."""
-
-        def f(a):
-            return a * scale.reshape((scale.shape[0],) + (1,) * (a.ndim - 1))
-
-        return jax.tree_util.tree_map(f, tree)
-
-    def _node_where(self, mask, new, old):
-        """Per-node select between two node-stacked pytrees."""
-
-        def f(n, o):
-            m = mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1))
-            return jnp.where(m > 0, n, o)
-
-        return jax.tree_util.tree_map(f, new, old)
-
-    def _local_train(self, params, opt_state, bx, by, active, shard=None):
-        def node_grad(p, x, y):
-            return jax.grad(self.loss_fn)(p, x, y)
-
-        if self.lr_scales is not None:
-            # sharded: slice this device's block of the per-node multipliers
-            lrs = shard.local(self.lr_scales) if shard is not None else self.lr_scales
-        # local_steps is small and static: unroll instead of nesting a scan
-        for s in range(bx.shape[0]):
-            grads = jax.vmap(node_grad)(params, bx[s], by[s])
-            updates, new_opt = jax.vmap(self.opt.update)(grads, opt_state, params)
-            if self.lr_scales is not None:
-                updates = self._node_scale(updates, lrs)
-            if active is not None:
-                # down nodes do no local work: zero update, frozen opt state
-                updates = self._node_scale(updates, active)
-                new_opt = self._node_where(active, new_opt, opt_state)
-            params, opt_state = apply_updates(params, updates), new_opt
-        return params, opt_state
-
-    def _round_time(self, Wm, active, nbytes, deg_eff, shard=None):
-        """Simulated synchronous-round wall-clock, traced (network.py's
-        round_time vectorized over the reweighted mixing operand).  For a
-        SparseTopology the per-edge latency/goodput are gathered through the
-        neighbor table — O(N·D) — instead of masking (N, N) matrices.
-        Sharded: rows are this device's block (global ids index the
-        replicated latency/goodput matrices) and the synchronous-round max
-        is a pmax over the node axis."""
-        per_edge = jnp.where(deg_eff > 0, nbytes / jnp.maximum(deg_eff, 1e-9), 0.0)
-        if isinstance(Wm, ShardedTopology):
-            topo, rows = Wm.topo, Wm.rows[:, None]
-            A = (topo.w > 0).astype(jnp.float32)
-            t_edge = (
-                self._lat[rows, topo.nbr]
-                + per_edge * 8.0 / self._goodput[rows, topo.nbr]
-            )
-        elif isinstance(Wm, ShardedDense):
-            rows = Wm.rows
-            offdiag = (jnp.arange(Wm.W.shape[1])[None, :] != rows[:, None]).astype(
-                jnp.float32
-            )
-            A = (Wm.W * offdiag > 0).astype(jnp.float32)
-            t_edge = (
-                jnp.take(self._lat, rows, axis=0)
-                + per_edge * 8.0 / jnp.take(self._goodput, rows, axis=0)
-            )
-        elif isinstance(Wm, SparseTopology):
-            rows = jnp.arange(Wm.nbr.shape[0])[:, None]
-            A = (Wm.w > 0).astype(jnp.float32)  # live edge slots post-reweight
-            t_edge = (
-                self._lat[rows, Wm.nbr]
-                + per_edge * 8.0 / self._goodput[rows, Wm.nbr]
-            )
-        else:
-            n = Wm.shape[0]
-            offdiag = 1.0 - jnp.eye(n, dtype=jnp.float32)
-            A = (Wm * offdiag > 0).astype(jnp.float32)
-            t_edge = self._lat + per_edge * 8.0 / self._goodput
-        if self.dl.parallel_sends:
-            comm = jnp.max(A * t_edge, axis=1)
-        else:
-            comm = jnp.sum(A * t_edge, axis=1)
-        node_t = self.dl.compute_time_s + comm
-        if active is not None:
-            node_t = active * node_t
-        t = jnp.max(node_t)
-        return shard.pmax(t) if shard is not None else t
-
-    def _train_and_mix(self, params, opt_state, share_state, bx, by, W, active,
-                       rnd, shard=None):
-        """One round.  ``active`` is None for full participation (statically
-        skips masking/reweighting: W flows through untouched and the degree
-        stays a Python float, exactly like per-round dispatch did).
-        ``shard`` is the node-axis sharding inside a shard_map body (all
-        node-stacked operands are then this device's row blocks)."""
-        key = jax.random.fold_in(self._base_key, rnd)
-        params, opt_state = self._local_train(params, opt_state, bx, by, active, shard)
-        if active is not None:
-            if isinstance(W, ShardedTopology):
-                t2, deg_eff = participation_reweight_sparse(
-                    W.topo, active, shard=W.shard
-                )
-                Wm = ShardedTopology(t2, W.shard, W.sched)
-            elif isinstance(W, ShardedDense):
-                W2, deg_eff = participation_reweight(W.W, active, shard=W.shard)
-                Wm = ShardedDense(W2, W.shard)
-            elif isinstance(W, SparseTopology):
-                Wm, deg_eff = participation_reweight_sparse(W, active)
-            else:
-                Wm, deg_eff = participation_reweight(W, active)
-        else:
-            Wm, deg_eff = W, self._mean_degree
-        X = jax.vmap(tree_vector)(params)
-        X2, new_share, nbytes = self.sharing.round(
-            X, Wm, share_state, key, degree=deg_eff, rnd=rnd
-        )
-        if active is not None:
-            # a down node transmitted nothing: its sharing bookkeeping
-            # (TopK last_shared, CHOCO xhat — node-stacked leaves) must not
-            # record this round's payload as sent
-            share_state = self._node_where(active, new_share, share_state)
-        else:
-            share_state = new_share
-        new_params = jax.vmap(lambda v: tree_unvector(v, self.template))(X2)
-        if active is not None:
-            # don't trust each strategy's W-row-identity property for down
-            # nodes (e.g. QuantizedSharing would hand them the int8
-            # roundtrip of their own params): freeze them explicitly
-            params = self._node_where(active, new_params, params)
-        else:
-            params = new_params
-        nbytes = jnp.asarray(nbytes, jnp.float32)
-        if self._lat is not None:
-            sim_t = self._round_time(Wm, active, nbytes, deg_eff, shard)
-        else:
-            sim_t = jnp.float32(0.0)
-        return params, opt_state, share_state, nbytes, sim_t
-
-    def _chunk_fn(self, params, opt_state, share_state, xs):
-        """R rounds in one lax.scan.  ``xs`` is a dict of per-round scan
-        inputs: always idx (R,L,N,B) int32 and rnd (R,) int32; plus, for
-        dynamic topologies, ``mix`` — an (R,N,N) f32 W stack (dense mode)
-        or an (R,N,D) SparseTopology table stack (sparse mode); static
-        topologies capture one device-constant mixing operand.  ``act``
-        (R,N) f32 rides along when participation < 1."""
-
-        def body(carry, xs_r):
-            params, opt_state, share_state = carry
-            W = xs_r["mix"] if "mix" in xs_r else self._mix_static
-            act = xs_r.get("act")
-            if "bx" in xs_r:  # chunk batches pre-gathered on device
-                bx, by = xs_r["bx"], xs_r["by"]
-            else:  # oversized chunk: gather (L, N, B, ...) per round
-                bx = jnp.take(self._dev_x, xs_r["idx"], axis=0)
-                by = jnp.take(self._dev_y, xs_r["idx"], axis=0)
-            params, opt_state, share_state, nbytes, sim_t = self._train_and_mix(
-                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"]
-            )
-            return (params, opt_state, share_state), (nbytes, sim_t)
-
-        carry, (nbytes, times) = jax.lax.scan(
-            body, (params, opt_state, share_state), xs
-        )
-        return carry + (nbytes, times)
-
-    # ------------------------------------------------------------------
-    # node-sharded chunk execution (shard_map over the device mesh)
-    # ------------------------------------------------------------------
-    def _wrap_mix(self, mix):
-        """Sharded mixing operand for one round inside the shard body.
-
-        ``mix`` is the scanned per-round operand (this device's row block,
-        cut by the in_specs) or None for static topologies — those capture
-        the full replicated tables and slice the local block by device
-        index, keeping the wrapper shapes identical either way."""
-        shard = self._shard
-        if mix is None:
-            if self.mix_mode == "sparse":
-                st = self._mix_static
-                topo_l = SparseTopology(
-                    shard.local(st.nbr), shard.local(st.w), shard.local(st.w_self)
-                )
-                return ShardedTopology(topo_l, shard, self._perm_sched)
-            return ShardedDense(shard.local(self._mix_static), shard)
-        if isinstance(mix, SparseTopology):
-            return ShardedTopology(mix, shard, None)
-        return ShardedDense(mix, shard)
-
-    def _chunk_fn_sharded(self, params, opt_state, share_state, xs):
-        """The scanned chunk, run inside shard_map: every node-stacked
-        carry/input is this device's (B, ...) row block; gossip crosses
-        devices through the sharded mixing operand (collective_permute
-        slots or all-gather — see mixing.ShardedTopology) and the per-round
-        scalar metrics are psum/pmax-reduced so each device returns the
-        same global values."""
-
-        def body(carry, xs_r):
-            params, opt_state, share_state = carry
-            W = self._wrap_mix(xs_r.get("mix"))
-            act = xs_r.get("act")
-            if "bx" in xs_r:
-                bx, by = xs_r["bx"], xs_r["by"]
-            else:  # oversized chunk: gather this block's batches per round
-                bx = jnp.take(self._dev_x, xs_r["idx"], axis=0)
-                by = jnp.take(self._dev_y, xs_r["idx"], axis=0)
-            params, opt_state, share_state, nbytes, sim_t = self._train_and_mix(
-                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"],
-                shard=self._shard,
-            )
-            return (params, opt_state, share_state), (nbytes, sim_t)
-
-        carry, (nbytes, times) = jax.lax.scan(
-            body, (params, opt_state, share_state), xs
-        )
-        return carry + (nbytes, times)
-
-    def _xs_pspec(self, xs):
-        """Per-leaf PartitionSpecs for the scan-input dict: the node axis of
-        every leaf maps to the mesh 'nodes' axis, everything else is
-        replicated."""
-
-        def spec(path, leaf):
-            key = path[0].key
-            if key == "rnd":
-                return P()
-            if key in ("bx", "by", "idx"):  # (R, L, N, B, ...)
-                return P(None, None, "nodes", *((None,) * (leaf.ndim - 3)))
-            if key == "act":                # (R, N)
-                return P(None, "nodes")
-            if key == "mix":                # (R, N, N) W or (R, N, D)/(R, N) tables
-                return P(None, "nodes", *((None,) * (leaf.ndim - 2)))
-            raise KeyError(f"unknown scan input {key!r}")
-
-        return jax.tree_util.tree_map_with_path(spec, xs)
-
-    def _node_pspec(self, tree):
-        return jax.tree_util.tree_map(
-            lambda l: P("nodes", *((None,) * (l.ndim - 1))), tree
-        )
-
-    def _sharded_chunk_call(self, xs):
-        """shard_map-wrap + jit the chunk for this xs structure (cached —
-        structures recur: full chunks and the pre-eval remainder)."""
-        leaves, treedef = jax.tree_util.tree_flatten(xs)
-        key = (treedef, tuple(l.ndim for l in leaves))
-        fn = self._shard_jit_cache.get(key)
-        if fn is None:
-            state_specs = (
-                self._node_pspec(self.params),
-                self._node_pspec(self.opt_state),
-                self._node_pspec(self.share_state),
-            )
-            fn = jax.jit(
-                shard_map(
-                    self._chunk_fn_sharded,
-                    mesh=self._mesh,
-                    in_specs=state_specs + (self._xs_pspec(xs),),
-                    out_specs=state_specs + (P(), P()),
-                    check_vma=False,
-                )
-            )
-            self._shard_jit_cache[key] = fn
-        return fn(self.params, self.opt_state, self.share_state, xs)
-
-    def _legacy_round(self, params, opt_state, share_state, bx, by, W, active, rnd):
-        return self._train_and_mix(params, opt_state, share_state, bx, by, W, active, rnd)
+    def _participation_mask(self, start: int, n_rounds: int) -> np.ndarray:
+        return self.scheduler.participation_mask(start, n_rounds)
 
     def _eval(self, params, tx, ty):
         return jax.vmap(lambda p: self.acc_fn(p, tx, ty))(params)
-
-    # ------------------------------------------------------------------
-    # host-side chunk staging
-    # ------------------------------------------------------------------
-    def _round_mix(self, rnd: int):
-        """Device mixing operand for one round (legacy per-round dispatch):
-        dense (N, N) W or SparseTopology neighbor tables, matching the mode
-        the scanned path uses so both execute the identical workload."""
-        if self.sampler is None:
-            return self._mix_static
-        if self.mix_mode == "sparse":
-            t = self.sampler.round_table(rnd)
-            return SparseTopology(
-                jnp.asarray(t.nbr), jnp.asarray(t.w), jnp.asarray(t.w_self)
-            )
-        return jnp.asarray(self.sampler.round_weights(rnd).astype(np.float32))
-
-    def _participation_mask(self, start: int, n_rounds: int) -> np.ndarray:
-        """(R, N) {0,1} activity masks for rounds [start, start+n_rounds).
-
-        One batched counter-based draw (splitmix64 hash over (seed,
-        absolute round, node)) — each round's randomness is a pure function
-        of its absolute index, so masks are chunk-boundary invariant, with
-        no per-round ``default_rng`` host loop.  Column n holds each
-        round's fallback draw: if every node sampled down, one node
-        (uniform via that draw) is kept alive.
-        """
-        n = self.dl.n_nodes
-        if self.dl.participation >= 1.0:
-            return np.ones((n_rounds, n), np.float32)
-        with np.errstate(over="ignore"):  # uint64 wraparound is the point
-            x = (
-                np.uint64(self.dl.seed * 1_000_003 + 7_919)
-                * np.uint64(0x9E3779B97F4A7C15)
-                + np.arange(start, start + n_rounds, dtype=np.uint64)[:, None]
-                * np.uint64(0xBF58476D1CE4E5B9)
-                + np.arange(n + 1, dtype=np.uint64)[None, :]
-                * np.uint64(0x94D049BB133111EB)
-            )
-            x ^= x >> np.uint64(30)
-            x *= np.uint64(0xBF58476D1CE4E5B9)
-            x ^= x >> np.uint64(27)
-            x *= np.uint64(0x94D049BB133111EB)
-            x ^= x >> np.uint64(31)
-        u = (x >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
-        m = u[:, :n] < self.dl.participation
-        dead = ~m.any(1)
-        if dead.any():  # keep at least one node alive per round
-            m[dead, (u[dead, n] * n).astype(np.int64)] = True
-        return m.astype(np.float32)
-
-    def _run_chunk(self, start: int, n_rounds: int):
-        dl = self.dl
-        idx = self.batcher.chunk_indices(start, n_rounds, dl.local_steps)
-        xs = {"rnd": jnp.asarray(np.arange(start, start + n_rounds, dtype=np.int32))}
-        item_bytes = self._dev_x.nbytes // max(self._dev_x.shape[0], 1)
-        if idx.size * item_bytes <= _BATCH_STACK_BYTES_CAP:
-            # pre-stack the whole chunk's batches on device: one gather per
-            # chunk instead of one per scanned round
-            idx_dev = jnp.asarray(idx)
-            xs["bx"] = jnp.take(self._dev_x, idx_dev, axis=0)  # (R, L, N, B, ...)
-            xs["by"] = jnp.take(self._dev_y, idx_dev, axis=0)
-        else:
-            xs["idx"] = jnp.asarray(idx)
-        if self.sampler is not None:
-            if self.mix_mode == "sparse":
-                st = self.sampler.sparse_stack(start, n_rounds)  # (R, N, D)
-                xs["mix"] = SparseTopology(
-                    jnp.asarray(st.nbr), jnp.asarray(st.w), jnp.asarray(st.w_self)
-                )
-                staged = st.stage_bytes()
-            else:
-                Wst = self.sampler.weights_stack(start, n_rounds)  # (R, N, N)
-                xs["mix"] = jnp.asarray(Wst)
-                staged = int(Wst.nbytes)
-            self.topo_stage_bytes_peak = max(self.topo_stage_bytes_peak, staged)
-        if dl.participation < 1.0:
-            xs["act"] = jnp.asarray(self._participation_mask(start, n_rounds))
-        if self.sharded:
-            out = self._sharded_chunk_call(xs)
-        else:
-            out = self._chunk_jit(self.params, self.opt_state, self.share_state, xs)
-        self.params, self.opt_state, self.share_state, nbytes, times = out
-        # ONE host sync per chunk for all per-round metrics
-        self.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
-        self.sim_time_s += float(np.asarray(times, np.float64).sum())
-
-    def _run_legacy_round(self, rnd: int):
-        """Per-round dispatch baseline: host-gathered full batches, one jit
-        call and one metric sync per round.  Samples the same round_indices
-        as the scanned path so both execute the identical workload."""
-        dl = self.dl
-        idx = self.batcher.round_indices(rnd, dl.local_steps)  # (L, N, B)
-        bx = jnp.asarray(self.batcher.x[idx])
-        by = jnp.asarray(self.batcher.y[idx])
-        W = self._round_mix(rnd)
-        act = (
-            jnp.asarray(self._participation_mask(rnd, 1)[0])
-            if dl.participation < 1.0 else None
-        )
-        out = self._legacy_jit(
-            self.params, self.opt_state, self.share_state, bx, by, W, act,
-            jnp.int32(rnd),
-        )
-        self.params, self.opt_state, self.share_state, nbytes, sim_t = out
-        self.bytes_sent += float(nbytes)
-        self.sim_time_s += float(sim_t)
 
     # ------------------------------------------------------------------
     def _record(self, rnd: int, tx, ty, t0: float, log: bool):
@@ -803,6 +514,7 @@ class RoundEngine:
             "sim_time_s": self.sim_time_s,
             "wire_dtype": self.wire_dtype,
         }
+        rec.update(self.scheduler.extra_metrics())
         self.history.append(rec)
         if log:
             print(
@@ -813,15 +525,18 @@ class RoundEngine:
             )
 
     def run(self, rounds: Optional[int] = None, log: bool = True) -> List[Dict]:
+        """Execute ``rounds`` scheduler steps (synchronous rounds, or event
+        cohorts under ``semantics='async'``) with evals every
+        ``eval_every``."""
         dl = self.dl
         rounds = rounds if rounds is not None else dl.rounds
         tx, ty = self.batcher.test_batch()
         tx, ty = jnp.asarray(tx), jnp.asarray(ty)
         ev = max(dl.eval_every, 1)
         t0 = time.time()
-        if self.chunk == 0:  # legacy per-round dispatch
+        if self.chunk == 0:  # legacy per-round dispatch (sync only)
             for rnd in range(rounds):
-                self._run_legacy_round(rnd)
+                self.scheduler.run_legacy_round(rnd)
                 if rnd % ev == 0 or rnd == rounds - 1:
                     self._record(rnd, tx, ty, t0, log)
         else:
@@ -833,7 +548,7 @@ class RoundEngine:
                 end = nxt + 1
                 while rnd < end:
                     r = min(self.chunk, end - rnd)
-                    self._run_chunk(rnd, r)
+                    self.scheduler.run_span(rnd, r)
                     rnd += r
                 self._record(nxt, tx, ty, t0, log)
         self._dump_results()

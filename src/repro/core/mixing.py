@@ -55,6 +55,7 @@ from repro.core.topology import (
     build_permute_schedule,
     circulant_offsets,
     decompose_slot_permutations,
+    sample_neighbor_slots,
 )
 from repro.utils.compat import shard_map
 
@@ -498,6 +499,53 @@ def mix_payload_masked(W, idx, val, X):
     MX = _scatter_rows(idx, val, Xf.shape)
     M = _scatter_rows(idx, jnp.ones_like(val, jnp.float32), Xf.shape)
     return Xf + apply_W(W, MX) - Xf * apply_W(W, M)
+
+
+def gossip_pair_avg(topo: SparseTopology, X, key, *, fire=None, act=None,
+                    rows=None):
+    """One event-cohort of *pairwise* asynchronous gossip — the AD-PSGD
+    update (Lian et al. 2018) in one-sided-read form.  This IS the
+    execution path of ``AsyncScheduler`` with ``async_gossip="pairwise"``
+    (not just a reference implementation).
+
+    Each node draws one uniformly-random neighbor slot from its
+    ``SparseTopology`` table (``topology.sample_neighbor_slots`` — the
+    per-event sampling primitive) and averages with that partner's
+    current — possibly stale — row:
+
+        x_i' = (x_i + x_{j(i)}) / 2      for fired nodes i (partner up)
+        x_i' = x_i                       otherwise
+
+    fire: optional (N,) {0,1} mask of nodes whose event fires this cohort
+    (None = everyone).  act: optional (N,) {0,1} churn mask — a sampled
+    partner that is down blocks the exchange (the node keeps its local
+    step and retries at its next event).  The read is one-sided: partner
+    j's row is read but not written, so concurrent events never conflict
+    — the write-locked symmetric exchange of the original algorithm is
+    modeled in expectation (each direction of an edge fires as its
+    endpoint's event).  In expectation over the partner draw the
+    fired-row update equals the uniform-neighbor mixing matrix row
+    (0.5 self + 0.5/deg per neighbor) — seeded-statistically tested in
+    tests/test_scheduler.py.
+
+    Returns (X', partner, ok): partner the (N,) global partner ids (a
+    node's own id where no exchange happened), ok the (N,) {0,1} mask of
+    exchanges that actually fired — for staleness/comm accounting by the
+    caller.
+    """
+    Xf = X.astype(jnp.float32)
+    slot = sample_neighbor_slots(key, topo, rows=rows)
+    partner = jnp.take_along_axis(topo.nbr, slot[:, None], axis=1)[:, 0]
+    ok = jnp.ones(partner.shape[0], jnp.float32)
+    if fire is not None:
+        ok = ok * fire
+    if act is not None:
+        ok = ok * jnp.take(act, partner)
+    X2 = 0.5 * (Xf + jnp.take(Xf, partner, axis=0))
+    m = ok.reshape((-1,) + (1,) * (Xf.ndim - 1))
+    X2 = jnp.where(m > 0, X2, Xf)
+    partner = jnp.where(ok > 0, partner, jnp.arange(partner.shape[0]))
+    return X2.astype(X.dtype), partner, ok
 
 
 def mix_fully(stacked):

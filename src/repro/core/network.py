@@ -18,11 +18,53 @@ Packet drop is modeled as goodput derating (TCP retransmission).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
 from repro.core.topology import Graph
+
+
+def node_round_times(A, lat, goodput, per_edge_bytes, compute_time,
+                     parallel_sends: bool = False):
+    """Per-node round time — THE compute+comm formula, shared by the host
+    ``NetworkModel.round_time`` (numpy) and the engine's traced step layer
+    (jax; ``steps.RoundSteps.round_time``), so the Python model and the
+    compiled model cannot drift (equivalence-tested in tests/test_network.py).
+
+        t_edge  = latency + bytes * 8 / goodput          per live edge
+        comm_i  = sum_j t_edge[i,j]   (serialized uplink sends)
+                | max_j t_edge[i,j]   (parallel_sends: dedicated NICs)
+        time_i  = compute_time_i + comm_i
+
+    A: (N, E) {0,1} live-edge mask; lat/goodput: matching link matrices
+    (dense (N, N) or neighbor-gathered (N, D)); per_edge_bytes: scalar
+    message size; compute_time: scalar or per-node (N,) seconds.  Works on
+    numpy and jax arrays alike (pure operator arithmetic).
+    """
+    t_edge = lat + per_edge_bytes * 8.0 / goodput
+    masked = A * t_edge
+    comm = masked.max(axis=1) if parallel_sends else masked.sum(axis=1)
+    return compute_time + comm
+
+
+def straggler_compute_times(
+    n: int,
+    base_s: float,
+    factor: float = 1.0,
+    frac: float = 0.0,
+    seed: int = 0,
+) -> np.ndarray:
+    """Heterogeneous per-node compute times: a seeded ``frac`` fraction of
+    nodes are stragglers running at ``factor`` x the base compute time —
+    the paper's missing system-heterogeneity axis (and the distribution the
+    async-vs-sync benchmark gate runs under).  Returns (N,) float32."""
+    ct = np.full((n,), base_s, np.float32)
+    k = int(round(frac * n))
+    if k > 0 and factor != 1.0:
+        idx = np.random.default_rng(seed).choice(n, size=k, replace=False)
+        ct[idx] = base_s * factor
+    return ct
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,13 +106,17 @@ class NetworkModel:
     mapping: Mapping
     local: LinkSpec = LOOPBACK
     remote: LinkSpec = LAN
+    # per-node local compute seconds, (N,) — the heterogeneous-time axis
+    # (stragglers = heavy-tailed entries).  None means homogeneous zero;
+    # a scalar passed to round_time overrides/broadcasts as before.
+    compute_time_s: Optional[np.ndarray] = None
 
     def link(self, a: int, b: int) -> LinkSpec:
         return self.local if self.mapping.same_machine(a, b) else self.remote
 
-    def matrices(self) -> "tuple[np.ndarray, np.ndarray]":
-        """(latency_s, goodput_bps) as (N, N) float32 matrices over all
-        ordered node pairs — the dense form the RoundEngine closes over so
+    def matrices(self, dtype=np.float32) -> "tuple[np.ndarray, np.ndarray]":
+        """(latency_s, goodput_bps) as (N, N) matrices over all ordered
+        node pairs — the dense form the RoundEngine closes over so
         per-round simulated wall-clock is a *traced* output of the scanned
         chunk instead of a per-round host computation."""
         n = self.mapping.n_nodes
@@ -78,40 +124,52 @@ class NetworkModel:
         same = machines[:, None] == machines[None, :]
         lat = np.where(same, self.local.latency_s, self.remote.latency_s)
         gp = np.where(same, self.local.goodput_bps(), self.remote.goodput_bps())
-        return lat.astype(np.float32), gp.astype(np.float32)
+        return lat.astype(dtype), gp.astype(dtype)
+
+    def node_times(
+        self,
+        graph: Graph,
+        bytes_per_edge: float,
+        compute_time_s: Union[float, np.ndarray, None] = None,
+        parallel_sends: bool = False,
+    ) -> np.ndarray:
+        """(N,) per-node round times through the shared
+        :func:`node_round_times` formula (float64 host arithmetic).
+        compute_time_s: scalar or (N,) array; None uses the model's
+        per-node ``compute_time_s`` (or 0)."""
+        if compute_time_s is None:
+            compute_time_s = (
+                0.0 if self.compute_time_s is None
+                else np.asarray(self.compute_time_s, np.float64)
+            )
+        lat, gp = self.matrices(dtype=np.float64)
+        A = graph.adj.astype(np.float64)
+        return node_round_times(
+            A, lat, gp, float(bytes_per_edge), compute_time_s, parallel_sends
+        )
 
     def round_time(
         self,
         graph: Graph,
         bytes_per_edge: float,
-        compute_time_s: float = 0.0,
+        compute_time_s: Union[float, np.ndarray, None] = None,
         parallel_sends: bool = False,
     ) -> float:
-        """Simulated synchronous-round wall-clock.
+        """Simulated synchronous-round wall-clock: the max of
+        :meth:`node_times` (the round barrier — stragglers bind).
 
         bytes_per_edge: serialized message size one node sends one neighbor.
         parallel_sends: True models per-link dedicated NICs (sends overlap);
         False (default) serializes a node's sends on its uplink, which is
         what makes fully-connected rounds take ~degree x longer (Fig. 3b).
         """
-        n = graph.n
-        times = np.zeros(n)
-        for i in range(n):
-            sends = [
-                self.link(i, int(j)).transfer_time(bytes_per_edge)
-                for j in graph.neighbors(i)
-            ]
-            if not sends:
-                comm = 0.0
-            elif parallel_sends:
-                comm = max(sends)
-            else:
-                comm = sum(sends)
-            times[i] = compute_time_s + comm
-        return float(times.max())
+        return float(
+            self.node_times(graph, bytes_per_edge, compute_time_s,
+                            parallel_sends).max()
+        )
 
     def experiment_time(self, graph: Graph, bytes_per_edge: float,
-                        compute_time_s: float, rounds: int) -> float:
+                        compute_time_s, rounds: int) -> float:
         return rounds * self.round_time(graph, bytes_per_edge, compute_time_s)
 
 

@@ -12,10 +12,14 @@ The per-round program is exactly Fig. 2 of the paper:
         sharing.aggregate()         #   MH-weighted merge
         dataset.test(model)         #   per-node eval
 
-Execution now lives in ``core/engine.py``: the RoundEngine compiles chunks
-of R rounds into a single ``lax.scan`` (see its module docstring for the
-execution model).  ``DecentralizedRunner`` is kept as a thin wrapper so all
-existing entry points — examples, benchmarks, tests — keep working
+Execution now lives in three layers: ``core/steps.py`` (the pure jittable
+per-round functions — local SGD, share/mix, per-node round time),
+``core/scheduler.py`` (time and activation semantics:
+``DLConfig.semantics`` selects the synchronous barrier, per-node
+neighborhood-barrier clocks, or event-driven AD-PSGD-style gossip on a
+virtual clock), and ``core/engine.py`` (resources + the run loop; see its
+module docstring).  ``DecentralizedRunner`` is kept as a thin wrapper so
+all existing entry points — examples, benchmarks, tests — keep working
 unchanged.
 """
 from __future__ import annotations

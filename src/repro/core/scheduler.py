@@ -1,0 +1,647 @@
+"""Scheduler layer — who fires when, and what time means.
+
+The engine's execution model is split in two (``core/steps.py`` holds the
+other half): the **step layer** defines what one round does (local SGD,
+share/mix, per-node round time) as pure jittable functions, and this
+**scheduler layer** owns time and activation semantics.  Three schedulers
+implement ``DLConfig.semantics``:
+
+* ``sync`` (:class:`SyncScheduler`) — the synchronous round barrier:
+  every node mixes in lockstep, the simulated round time is the max over
+  nodes (stragglers bind the whole network).  This is bit-for-bit the
+  pre-split engine — the equivalence oracle the other semantics are
+  tested against — including the legacy per-round dispatch
+  (``chunk_rounds=0``) and the node-sharded ``shard_map`` chunk.
+* ``local`` (:class:`LocalScheduler`) — same lockstep *trajectories* (the
+  mixing math is identical, property-tested), but time is a per-node
+  virtual clock with a **neighborhood barrier**: node i starts round r
+  when it and its live neighbors have finished round r-1, so non-adjacent
+  stragglers no longer bind each other.  Simulated experiment time is the
+  max final clock — a lower bound pairing with sync's global barrier.
+* ``async`` (:class:`AsyncScheduler`) — event-driven gossip on a virtual
+  clock (the AD-PSGD family, Lian et al. 2018).  Each node's next event
+  completes at ``t_next[i]``; every scanned step executes one event
+  *cohort* (all nodes whose events land in the earliest time slice).  A
+  fired node takes a local step, then gossip-averages against
+  possibly-stale neighbor params — pairwise (one sampled partner,
+  ``mixing.gossip_pair_avg``) or neighborhood (its whole W row through
+  the sharing strategy) — and reschedules at
+  ``t_next[i] += compute_time[i] + comm_time[i]``.  Staleness
+  (event-count gap of the rows read), per-node virtual wall-clock, and
+  event counts are traced scan outputs surfaced via
+  :meth:`extra_metrics` into ``history`` / ``results.json``.
+
+Activation masks are also owned here: iid per-node participation (the
+original churn axis), **machine-correlated failures** (all nodes mapped
+to a down machine drop together, ``DLConfig.churn_machines``), and the
+rejoin-with-stale-model rule — a down node freezes its params/optimizer/
+sharing state and re-enters with them (no silent reweight-away); under
+``async`` its pending events burn their time slots while it is down.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.mixing import ShardedDense, ShardedTopology, gossip_pair_avg
+from repro.core.sharing import participation_reweight, participation_reweight_sparse
+from repro.core.steps import node_where
+from repro.core.topology import SparseTopology
+from repro.utils.compat import shard_map
+from repro.utils.pytree import tree_unvector, tree_vector
+
+# cap on the pre-gathered (R, L, N, B, ...) batch stack; above it the scan
+# falls back to gathering each round's batch inside the loop body.
+_BATCH_STACK_BYTES_CAP = 256 * 1024 * 1024
+
+
+def _live_edges(W, act):
+    """Live off-diagonal edges of a mixing operand, pruned by a churn mask.
+
+    Returns ``(live, gather)``: ``live`` is the {True} edge mask — (N, D)
+    over neighbor slots for a ``SparseTopology``, (N, N) for a dense W —
+    and ``gather(v)`` aligns a per-node (N,) vector with it (neighbor
+    gather / row broadcast).  One derivation of edge liveness shared by
+    the local scheduler's neighborhood barrier and the async scheduler's
+    staleness accounting."""
+    if isinstance(W, SparseTopology):
+        live = W.w > 0
+        if act is not None:
+            live = live & (act[:, None] > 0) & (jnp.take(act, W.nbr, axis=0) > 0)
+        return live, lambda v: jnp.take(v, W.nbr, axis=0)
+    n = W.shape[0]
+    live = W * (1.0 - jnp.eye(n, dtype=W.dtype)) > 0
+    if act is not None:
+        live = live & (act[:, None] > 0) & (act[None, :] > 0)
+    return live, lambda v: jnp.broadcast_to(v[None, :], (n, n))
+
+
+class Scheduler:
+    """Base: host-side chunk staging + activation-mask machinery shared by
+    every semantics.  ``eng`` is the owning RoundEngine — the scheduler
+    reads its static resources (batcher, topology operands, steps) and
+    writes its running metrics (bytes_sent, sim_time_s)."""
+
+    semantics = "sync"
+
+    def __init__(self, eng):
+        self.eng = eng
+
+    # ------------------------------------------------------------------
+    # activation masks (churn)
+    # ------------------------------------------------------------------
+    def participation_mask(self, start: int, n_rounds: int) -> np.ndarray:
+        """(R, N) {0,1} activity masks for rounds [start, start+n_rounds).
+
+        One batched counter-based draw (splitmix64 hash over (seed,
+        absolute round, unit)) — each round's randomness is a pure function
+        of its absolute index, so masks are chunk-boundary invariant, with
+        no per-round ``default_rng`` host loop.  The draw unit is the node
+        (iid churn) or, with ``churn_machines=M`` set, the *machine*: all
+        nodes round-robin-mapped to a down machine drop together —
+        correlated machine-level failures.  The final column holds each
+        round's fallback draw: if every unit sampled down, one (uniform
+        via that draw) is kept alive.
+        """
+        dl = self.eng.dl
+        n = dl.n_nodes
+        if dl.participation >= 1.0:
+            return np.ones((n_rounds, n), np.float32)
+        m_units = dl.churn_machines if dl.churn_machines > 0 else n
+        with np.errstate(over="ignore"):  # uint64 wraparound is the point
+            x = (
+                np.uint64(dl.seed * 1_000_003 + 7_919)
+                * np.uint64(0x9E3779B97F4A7C15)
+                + np.arange(start, start + n_rounds, dtype=np.uint64)[:, None]
+                * np.uint64(0xBF58476D1CE4E5B9)
+                + np.arange(m_units + 1, dtype=np.uint64)[None, :]
+                * np.uint64(0x94D049BB133111EB)
+            )
+            x ^= x >> np.uint64(30)
+            x *= np.uint64(0xBF58476D1CE4E5B9)
+            x ^= x >> np.uint64(27)
+            x *= np.uint64(0x94D049BB133111EB)
+            x ^= x >> np.uint64(31)
+        u = (x >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
+        up = u[:, :m_units] < dl.participation
+        dead = ~up.any(1)
+        if dead.any():  # keep at least one unit alive per round
+            up[dead, (u[dead, m_units] * m_units).astype(np.int64)] = True
+        if dl.churn_machines > 0:
+            # broadcast machine up/down to its round-robin node set
+            up = up[:, np.arange(n) % dl.churn_machines]
+        return up.astype(np.float32)
+
+    # ------------------------------------------------------------------
+    # host-side chunk staging (shared)
+    # ------------------------------------------------------------------
+    def _stage_xs(self, start: int, n_rounds: int) -> Dict:
+        """Per-round scan inputs for rounds [start, start+n_rounds): always
+        ``rnd`` (R,) int32 and the chunk's batches — pre-gathered ``bx``/
+        ``by`` under the byte cap, raw ``idx`` above it; plus ``mix`` for
+        dynamic topologies ((R,N,N) W stack in dense mode, (R,N,D)
+        SparseTopology stack in sparse mode) and ``act`` (R,N) with
+        churn."""
+        eng = self.eng
+        dl = eng.dl
+        idx = eng.batcher.chunk_indices(start, n_rounds, dl.local_steps)
+        xs = {"rnd": jnp.asarray(np.arange(start, start + n_rounds, dtype=np.int32))}
+        item_bytes = eng._dev_x.nbytes // max(eng._dev_x.shape[0], 1)
+        if idx.size * item_bytes <= _BATCH_STACK_BYTES_CAP:
+            # pre-stack the whole chunk's batches on device: one gather per
+            # chunk instead of one per scanned round
+            idx_dev = jnp.asarray(idx)
+            xs["bx"] = jnp.take(eng._dev_x, idx_dev, axis=0)  # (R, L, N, B, ...)
+            xs["by"] = jnp.take(eng._dev_y, idx_dev, axis=0)
+        else:
+            xs["idx"] = jnp.asarray(idx)
+        if eng.sampler is not None:
+            if eng.mix_mode == "sparse":
+                st = eng.sampler.sparse_stack(start, n_rounds)  # (R, N, D)
+                xs["mix"] = SparseTopology(
+                    jnp.asarray(st.nbr), jnp.asarray(st.w), jnp.asarray(st.w_self)
+                )
+                staged = st.stage_bytes()
+            else:
+                Wst = eng.sampler.weights_stack(start, n_rounds)  # (R, N, N)
+                xs["mix"] = jnp.asarray(Wst)
+                staged = int(Wst.nbytes)
+            eng.topo_stage_bytes_peak = max(eng.topo_stage_bytes_peak, staged)
+        if dl.participation < 1.0:
+            xs["act"] = jnp.asarray(self.participation_mask(start, n_rounds))
+        return xs
+
+    def _round_batch(self, xs_r):
+        """One round's (L, N, B, ...) batches inside a scan body: the
+        pre-gathered slice, or an in-loop gather for oversized chunks."""
+        if "bx" in xs_r:
+            return xs_r["bx"], xs_r["by"]
+        bx = jnp.take(self.eng._dev_x, xs_r["idx"], axis=0)
+        by = jnp.take(self.eng._dev_y, xs_r["idx"], axis=0)
+        return bx, by
+
+    # ------------------------------------------------------------------
+    def run_span(self, start: int, n_rounds: int) -> None:
+        raise NotImplementedError
+
+    def run_legacy_round(self, rnd: int) -> None:
+        raise ValueError(
+            f"legacy per-round dispatch (chunk_rounds=0) supports "
+            f"semantics='sync' only, not {self.semantics!r}"
+        )
+
+    def extra_metrics(self) -> Dict:
+        """Semantics-specific metrics merged into each history record."""
+        return {}
+
+
+class SyncScheduler(Scheduler):
+    """The synchronous round barrier — today's scanned chunk, verbatim:
+    every node mixes each round, per-round simulated time is the max over
+    nodes, and metrics accumulate as sums.  Also owns the legacy per-round
+    dispatch and the node-sharded shard_map chunk."""
+
+    semantics = "sync"
+
+    def __init__(self, eng):
+        super().__init__(eng)
+        self._chunk_jit = jax.jit(self._chunk_fn)
+        self._legacy_jit = jax.jit(self._legacy_round)
+        self._shard_jit_cache: Dict = {}
+
+    # -- scan bodies ----------------------------------------------------
+    def _chunk_fn(self, params, opt_state, share_state, xs):
+        """R rounds in one lax.scan.  ``xs`` is a dict of per-round scan
+        inputs (see ``_stage_xs``); static topologies capture one
+        device-constant mixing operand."""
+        eng = self.eng
+
+        def body(carry, xs_r):
+            params, opt_state, share_state = carry
+            W = xs_r["mix"] if "mix" in xs_r else eng._mix_static
+            act = xs_r.get("act")
+            bx, by = self._round_batch(xs_r)
+            params, opt_state, share_state, nbytes, sim_t = eng.steps.train_and_mix(
+                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"]
+            )
+            return (params, opt_state, share_state), (nbytes, sim_t)
+
+        carry, (nbytes, times) = jax.lax.scan(
+            body, (params, opt_state, share_state), xs
+        )
+        return carry + (nbytes, times)
+
+    def _legacy_round(self, params, opt_state, share_state, bx, by, W, active, rnd):
+        return self.eng.steps.train_and_mix(
+            params, opt_state, share_state, bx, by, W, active, rnd
+        )
+
+    # -- node-sharded chunk (shard_map over the device mesh) -------------
+    def _wrap_mix(self, mix):
+        """Sharded mixing operand for one round inside the shard body.
+
+        ``mix`` is the scanned per-round operand (this device's row block,
+        cut by the in_specs) or None for static topologies — those capture
+        the full replicated tables and slice the local block by device
+        index, keeping the wrapper shapes identical either way."""
+        eng = self.eng
+        shard = eng._shard
+        if mix is None:
+            if eng.mix_mode == "sparse":
+                st = eng._mix_static
+                topo_l = SparseTopology(
+                    shard.local(st.nbr), shard.local(st.w), shard.local(st.w_self)
+                )
+                return ShardedTopology(topo_l, shard, eng._perm_sched)
+            return ShardedDense(shard.local(eng._mix_static), shard)
+        if isinstance(mix, SparseTopology):
+            return ShardedTopology(mix, shard, None)
+        return ShardedDense(mix, shard)
+
+    def _chunk_fn_sharded(self, params, opt_state, share_state, xs):
+        """The scanned chunk, run inside shard_map: every node-stacked
+        carry/input is this device's (B, ...) row block; gossip crosses
+        devices through the sharded mixing operand (collective_permute
+        slots or all-gather — see mixing.ShardedTopology) and the per-round
+        scalar metrics are psum/pmax-reduced so each device returns the
+        same global values."""
+        eng = self.eng
+
+        def body(carry, xs_r):
+            params, opt_state, share_state = carry
+            W = self._wrap_mix(xs_r.get("mix"))
+            act = xs_r.get("act")
+            bx, by = self._round_batch(xs_r)
+            params, opt_state, share_state, nbytes, sim_t = eng.steps.train_and_mix(
+                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"],
+                shard=eng._shard,
+            )
+            return (params, opt_state, share_state), (nbytes, sim_t)
+
+        carry, (nbytes, times) = jax.lax.scan(
+            body, (params, opt_state, share_state), xs
+        )
+        return carry + (nbytes, times)
+
+    def _xs_pspec(self, xs):
+        """Per-leaf PartitionSpecs for the scan-input dict: the node axis of
+        every leaf maps to the mesh 'nodes' axis, everything else is
+        replicated."""
+
+        def spec(path, leaf):
+            key = path[0].key
+            if key == "rnd":
+                return P()
+            if key in ("bx", "by", "idx"):  # (R, L, N, B, ...)
+                return P(None, None, "nodes", *((None,) * (leaf.ndim - 3)))
+            if key == "act":                # (R, N)
+                return P(None, "nodes")
+            if key == "mix":                # (R, N, N) W or (R, N, D)/(R, N) tables
+                return P(None, "nodes", *((None,) * (leaf.ndim - 2)))
+            raise KeyError(f"unknown scan input {key!r}")
+
+        return jax.tree_util.tree_map_with_path(spec, xs)
+
+    def _node_pspec(self, tree):
+        return jax.tree_util.tree_map(
+            lambda l: P("nodes", *((None,) * (l.ndim - 1))), tree
+        )
+
+    def _sharded_chunk_call(self, xs):
+        """shard_map-wrap + jit the chunk for this xs structure (cached —
+        structures recur: full chunks and the pre-eval remainder)."""
+        eng = self.eng
+        leaves, treedef = jax.tree_util.tree_flatten(xs)
+        key = (treedef, tuple(l.ndim for l in leaves))
+        fn = self._shard_jit_cache.get(key)
+        if fn is None:
+            state_specs = (
+                self._node_pspec(eng.params),
+                self._node_pspec(eng.opt_state),
+                self._node_pspec(eng.share_state),
+            )
+            fn = jax.jit(
+                shard_map(
+                    self._chunk_fn_sharded,
+                    mesh=eng._mesh,
+                    in_specs=state_specs + (self._xs_pspec(xs),),
+                    out_specs=state_specs + (P(), P()),
+                    check_vma=False,
+                )
+            )
+            self._shard_jit_cache[key] = fn
+        return fn(eng.params, eng.opt_state, eng.share_state, xs)
+
+    # -- host-side dispatch ----------------------------------------------
+    def run_span(self, start: int, n_rounds: int) -> None:
+        eng = self.eng
+        xs = self._stage_xs(start, n_rounds)
+        if eng.sharded:
+            out = self._sharded_chunk_call(xs)
+        else:
+            out = self._chunk_jit(eng.params, eng.opt_state, eng.share_state, xs)
+        eng.params, eng.opt_state, eng.share_state, nbytes, times = out
+        # ONE host sync per chunk for all per-round metrics
+        eng.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
+        eng.sim_time_s += float(np.asarray(times, np.float64).sum())
+
+    def _round_mix(self, rnd: int):
+        """Device mixing operand for one round (legacy per-round dispatch):
+        dense (N, N) W or SparseTopology neighbor tables, matching the mode
+        the scanned path uses so both execute the identical workload."""
+        eng = self.eng
+        if eng.sampler is None:
+            return eng._mix_static
+        if eng.mix_mode == "sparse":
+            t = eng.sampler.round_table(rnd)
+            return SparseTopology(
+                jnp.asarray(t.nbr), jnp.asarray(t.w), jnp.asarray(t.w_self)
+            )
+        return jnp.asarray(eng.sampler.round_weights(rnd).astype(np.float32))
+
+    def run_legacy_round(self, rnd: int) -> None:
+        """Per-round dispatch baseline: host-gathered full batches, one jit
+        call and one metric sync per round.  Samples the same round_indices
+        as the scanned path so both execute the identical workload."""
+        eng = self.eng
+        dl = eng.dl
+        idx = eng.batcher.round_indices(rnd, dl.local_steps)  # (L, N, B)
+        bx = jnp.asarray(eng.batcher.x[idx])
+        by = jnp.asarray(eng.batcher.y[idx])
+        W = self._round_mix(rnd)
+        act = (
+            jnp.asarray(self.participation_mask(rnd, 1)[0])
+            if dl.participation < 1.0 else None
+        )
+        out = self._legacy_jit(
+            eng.params, eng.opt_state, eng.share_state, bx, by, W, act,
+            jnp.int32(rnd),
+        )
+        eng.params, eng.opt_state, eng.share_state, nbytes, sim_t = out
+        eng.bytes_sent += float(nbytes)
+        eng.sim_time_s += float(sim_t)
+
+
+class LocalScheduler(Scheduler):
+    """Neighborhood-barrier semantics: trajectories identical to sync (the
+    mixing math is untouched), but each node runs on its own virtual
+    clock — node i starts round r once it and its *live neighbors* have
+    finished round r-1 (a gossip exchange needs both endpoints), then adds
+    its own compute+comm time.  No global barrier: stragglers only delay
+    their graph neighborhood, so the simulated experiment time (max final
+    clock) lower-bounds sync's ``sum of per-round maxima``.  Down (churn)
+    nodes stall their clock and rejoin where they left off."""
+
+    semantics = "local"
+
+    def __init__(self, eng):
+        super().__init__(eng)
+        self._clock = jnp.zeros((eng.dl.n_nodes,), jnp.float32)
+        self._chunk_jit = jax.jit(self._chunk_fn)
+
+    def _nbr_clock_max(self, W, act, clock):
+        """Per-node max of live-neighbor clocks (-inf when none)."""
+        live, gather = _live_edges(W, act)
+        return jnp.max(jnp.where(live, gather(clock), -jnp.inf), axis=1)
+
+    def _chunk_fn(self, params, opt_state, share_state, clock, xs):
+        eng = self.eng
+
+        def body(carry, xs_r):
+            params, opt_state, share_state, clock = carry
+            W = xs_r["mix"] if "mix" in xs_r else eng._mix_static
+            act = xs_r.get("act")
+            bx, by = self._round_batch(xs_r)
+            params, opt_state, share_state, nbytes, node_t = eng.steps.train_and_mix(
+                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"],
+                time_reduce="none",
+            )
+            # neighborhood barrier: wait for the live neighbors' previous
+            # round, then run this one (node_t is 0 for down nodes, whose
+            # clocks stall until they rejoin)
+            ready = jnp.maximum(clock, self._nbr_clock_max(W, act, clock))
+            if act is not None:
+                clock = jnp.where(act > 0, ready + node_t, clock)
+            else:
+                clock = ready + node_t
+            return (params, opt_state, share_state, clock), (nbytes, jnp.max(clock))
+
+        carry, (nbytes, times) = jax.lax.scan(
+            body, (params, opt_state, share_state, clock), xs
+        )
+        return carry + (nbytes, times)
+
+    def run_span(self, start: int, n_rounds: int) -> None:
+        eng = self.eng
+        xs = self._stage_xs(start, n_rounds)
+        out = self._chunk_jit(
+            eng.params, eng.opt_state, eng.share_state, self._clock, xs
+        )
+        eng.params, eng.opt_state, eng.share_state, self._clock, nbytes, times = out
+        eng.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
+        # the virtual clock is a running maximum, not a per-round sum
+        eng.sim_time_s = float(np.asarray(times)[-1])
+
+    def extra_metrics(self) -> Dict:
+        clock = np.asarray(self._clock, np.float64)
+        return {
+            "semantics": "local",
+            "vclock_min_s": float(clock.min()),
+            "vclock_median_s": float(np.median(clock)),
+            "vclock_max_s": float(clock.max()),
+        }
+
+
+class AsyncScheduler(Scheduler):
+    """Event-driven asynchronous gossip on a virtual clock (AD-PSGD
+    family).  One scanned step = one event *cohort*: the nodes whose next
+    event completes inside the earliest ``async_slice_s`` window all fire
+    — each takes a local step on that cohort's batch row, gossips against
+    possibly-stale neighbor rows, and reschedules its next event at
+    ``+compute_time[i] + comm_time[i]`` on its own clock.  Nodes with
+    equal event durations therefore stay in lockstep cohorts (with
+    homogeneous times and full participation, every cohort is exactly one
+    synchronous round — the reduction the equivalence tests pin), while a
+    10x straggler fires ~10x fewer events per unit of virtual time.
+
+    Gossip forms (``DLConfig.async_gossip``):
+
+    * ``"neighborhood"`` — the fired node reads its whole (churn-pruned) W
+      row through the configured sharing strategy; non-fired rows are
+      frozen (one-sided read, no write conflicts).
+    * ``"pairwise"`` — classic AD-PSGD: one uniformly-sampled partner per
+      event (``topology.sample_neighbor_slots``), ``x_i' = (x_i+x_j)/2``;
+      a sampled partner that is churn-down blocks the exchange (the node
+      keeps its local step and retries at its next event).
+
+    Down (churn) nodes burn their event slots — virtual time passes, no
+    work happens, params freeze — and rejoin with their stale model.
+    Traced per-cohort outputs: bytes, the cohort's virtual time (max
+    completion among fired events), fired-event count, and the staleness
+    (event-count gap receiver-minus-sender over the rows read) sum/max —
+    aggregated into :meth:`extra_metrics` for ``history``/results.
+    """
+
+    semantics = "async"
+
+    def __init__(self, eng):
+        super().__init__(eng)
+        n = eng.dl.n_nodes
+        # completion time of each node's next local step (first event =
+        # one local compute; each event's comm delays the one after it)
+        self._t_next = jnp.asarray(eng._compute_node, jnp.float32)
+        self._vclock = jnp.zeros((n,), jnp.float32)   # last fired completion
+        self._events = jnp.zeros((n,), jnp.int32)     # model version counter
+        self._stale_sum = 0.0
+        self._stale_n = 0.0
+        self._stale_max = 0.0
+        self._fired_total = 0.0
+        self._chunk_jit = jax.jit(self._chunk_fn)
+
+    # -- traced cohort helpers -------------------------------------------
+    def _pair_comm(self, partner, ok):
+        """Per-event comm seconds of a pairwise exchange (one message of
+        the full parameter vector from the sampled partner)."""
+        eng = self.eng
+        if eng.steps.lat is None:
+            return jnp.zeros_like(ok)
+        rows = jnp.arange(partner.shape[0])
+        nbytes = eng.n_params * jnp.dtype(jnp.float32).itemsize
+        t = (
+            eng.steps.lat[rows, partner]
+            + nbytes * 8.0 / eng.steps.goodput[rows, partner]
+        )
+        return ok * t
+
+    def _cohort(self, carry, xs_r):
+        eng = self.eng
+        dl = eng.dl
+        params, opt_state, share_state, t_next, vclock, events = carry
+        W = xs_r["mix"] if "mix" in xs_r else eng._mix_static
+        act = xs_r.get("act")
+        rnd = xs_r["rnd"]
+        # --- cohort membership on the virtual clock ----------------------
+        t_min = jnp.min(t_next)
+        fire = (t_next <= t_min + dl.async_slice_s).astype(jnp.float32)
+        actv = fire * act if act is not None else fire  # fired AND up
+        # --- local step (down/unfired nodes frozen) ----------------------
+        bx, by = self._round_batch(xs_r)
+        params, opt_state = eng.steps.local_train(
+            params, opt_state, bx, by, actv
+        )
+        X = jax.vmap(tree_vector)(params)
+        key = jax.random.fold_in(eng.steps.base_key, rnd)
+        ev_f = events.astype(jnp.float32)
+        if dl.async_gossip == "pairwise":
+            X2, partner, ok = gossip_pair_avg(W, X, key, fire=actv, act=act)
+            share_state_new = share_state
+            stale_i = ok * jnp.maximum(ev_f - jnp.take(ev_f, partner), 0.0)
+            n_reads = ok
+            msg = jnp.float32(eng.n_params * np.dtype(np.float32).itemsize)
+            nbytes = jnp.sum(ok) * msg / dl.n_nodes
+            comm = self._pair_comm(partner, ok)
+        else:  # neighborhood: the full (churn-pruned) W row, stale reads
+            if act is not None:
+                if isinstance(W, SparseTopology):
+                    Wm, deg_eff = participation_reweight_sparse(W, act)
+                else:
+                    Wm, deg_eff = participation_reweight(W, act)
+            else:
+                Wm, deg_eff = W, eng.steps.mean_degree
+            X2_all, share_state_new, nbytes_rate = eng.sharing.round(
+                X, Wm, share_state, key, degree=deg_eff, rnd=rnd
+            )
+            X2 = jnp.where(actv[:, None] > 0, X2_all, X)
+            # staleness over the rows actually read: the same live-edge
+            # derivation the local scheduler's barrier uses (the churn
+            # reweight above zeroes exactly these down-endpoint slots)
+            live_b, gather = _live_edges(W, act)
+            live = live_b.astype(jnp.float32)
+            gap = jnp.maximum(ev_f[:, None] - gather(ev_f), 0.0)
+            cnt = jnp.maximum(live.sum(1), 1.0)
+            stale_i = actv * (live * gap).sum(1) / cnt
+            n_reads = actv
+            # only fired nodes' exchanges hit the wire this cohort
+            nbytes = jnp.asarray(nbytes_rate, jnp.float32) * jnp.sum(actv) / dl.n_nodes
+            if eng.steps.lat is not None:
+                comm = eng.steps.round_time(
+                    Wm, None, jnp.asarray(nbytes_rate, jnp.float32), deg_eff,
+                    reduce="none",
+                )
+                comm = comm - eng.steps.compute_node  # compute added below
+            else:
+                comm = jnp.zeros((dl.n_nodes,), jnp.float32)
+        share_state = node_where(actv, share_state_new, share_state)
+        new_params = jax.vmap(lambda v: tree_unvector(v, eng.template))(
+            X2.astype(X.dtype)
+        )
+        params = node_where(actv, new_params, params)
+        # --- clock advance ------------------------------------------------
+        dur = eng.steps.compute_node + comm
+        vclock = jnp.where(fire > 0, t_next, vclock)
+        t_next = t_next + fire * dur  # down-but-scheduled slots burn time too
+        events = events + actv.astype(jnp.int32)
+        out = (
+            nbytes,
+            jnp.max(vclock),
+            jnp.sum(actv),
+            jnp.sum(stale_i),
+            jnp.sum(n_reads),
+            jnp.max(stale_i),
+        )
+        return (params, opt_state, share_state, t_next, vclock, events), out
+
+    def _chunk_fn(self, params, opt_state, share_state, t_next, vclock, events, xs):
+        carry, outs = jax.lax.scan(
+            self._cohort, (params, opt_state, share_state, t_next, vclock, events), xs
+        )
+        return carry + outs
+
+    # -- host-side dispatch ----------------------------------------------
+    def run_span(self, start: int, n_rounds: int) -> None:
+        eng = self.eng
+        xs = self._stage_xs(start, n_rounds)
+        out = self._chunk_jit(
+            eng.params, eng.opt_state, eng.share_state,
+            self._t_next, self._vclock, self._events, xs,
+        )
+        (eng.params, eng.opt_state, eng.share_state,
+         self._t_next, self._vclock, self._events,
+         nbytes, t_virt, fired, stale_sum, stale_n, stale_max) = out
+        eng.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
+        # the virtual clock is a running maximum, not a per-cohort sum
+        eng.sim_time_s = float(np.asarray(t_virt)[-1])
+        self._fired_total += float(np.asarray(fired, np.float64).sum())
+        self._stale_sum += float(np.asarray(stale_sum, np.float64).sum())
+        self._stale_n += float(np.asarray(stale_n, np.float64).sum())
+        self._stale_max = max(self._stale_max, float(np.asarray(stale_max).max()))
+
+    def extra_metrics(self) -> Dict:
+        events = np.asarray(self._events, np.float64)
+        vclock = np.asarray(self._vclock, np.float64)
+        return {
+            "semantics": "async",
+            "events_total": int(events.sum()),
+            "events_min": int(events.min()),
+            "events_max": int(events.max()),
+            "vclock_min_s": float(vclock.min()),
+            "vclock_median_s": float(np.median(vclock)),
+            "vclock_max_s": float(vclock.max()),
+            "staleness_mean": self._stale_sum / max(self._stale_n, 1.0),
+            "staleness_max": self._stale_max,
+        }
+
+
+def make_scheduler(eng) -> Scheduler:
+    sem = eng.dl.semantics
+    if sem == "sync":
+        return SyncScheduler(eng)
+    if sem == "local":
+        return LocalScheduler(eng)
+    if sem == "async":
+        return AsyncScheduler(eng)
+    raise ValueError(f"unknown semantics {sem!r} (sync|local|async)")

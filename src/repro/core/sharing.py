@@ -486,6 +486,14 @@ def strategy_takes_budget(name: str) -> bool:
     return name.lower() not in _FULL_NAMES + _QUANT_NAMES
 
 
+def is_full_sharing(name: str) -> bool:
+    """Whether ``name`` aliases plain full sharing (D-PSGD) — the only
+    strategy the async scheduler's one-sided stale reads are modeled for
+    (``DLConfig.validate()`` gates on this predicate, so alias lists stay
+    in one module)."""
+    return name.lower() in _FULL_NAMES
+
+
 def make_sharing(name: str, budget: Optional[float] = None, **kw):
     """Build a sharing strategy by name.
 

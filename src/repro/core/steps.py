@@ -1,0 +1,209 @@
+"""Step layer — the pure, jittable per-round functions of the engine.
+
+The execution model splits into two layers (see ``core/scheduler.py`` for
+the other half):
+
+* **steps** (this module): what one node-stacked round *does* — the local
+  SGD step (``RoundSteps.local_train``), the share/mix step through the
+  configured sharing strategy (``RoundSteps.train_and_mix``), and the
+  simulated per-node round time (``RoundSteps.round_time``).  Every
+  function is pure in its traced arguments and runs identically inside a
+  ``lax.scan`` body, a legacy per-round jit, or a ``shard_map`` block
+  (``shard`` carries the node-axis sharding when present).
+* **scheduler**: when those steps fire and what time means — the
+  synchronous round barrier, per-node local clocks, or event-driven
+  cohorts on a virtual clock.
+
+``RoundSteps`` is a plain container of the static experiment pieces
+(loss/optimizer/sharing, per-node compute times, link matrices); it holds
+no mutable state — params/opt/sharing state are threaded by the caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mixing import ShardedDense, ShardedTopology
+from repro.core.network import node_round_times
+from repro.core.sharing import participation_reweight, participation_reweight_sparse
+from repro.core.topology import SparseTopology
+from repro.optim.optimizers import apply_updates
+from repro.utils.pytree import tree_unvector, tree_vector
+
+
+def node_scale(tree, scale):
+    """Multiply every node-stacked leaf by a per-node (N,) factor."""
+
+    def f(a):
+        return a * scale.reshape((scale.shape[0],) + (1,) * (a.ndim - 1))
+
+    return jax.tree_util.tree_map(f, tree)
+
+
+def node_where(mask, new, old):
+    """Per-node select between two node-stacked pytrees."""
+
+    def f(n, o):
+        m = mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m > 0, n, o)
+
+    return jax.tree_util.tree_map(f, new, old)
+
+
+@dataclasses.dataclass(eq=False)
+class RoundSteps:
+    """The traced per-round step functions, shared by every scheduler.
+
+    compute_node: (N,) float32 per-node local compute seconds (the
+    heterogeneous-time axis — a straggler is simply a large entry).
+    lat/goodput: (N, N) link matrices of the simulated network, or None.
+    """
+
+    loss_fn: Callable
+    opt: Any
+    sharing: Any
+    template: Any
+    base_key: jax.Array
+    mean_degree: float
+    compute_node: jnp.ndarray
+    parallel_sends: bool
+    lr_scales: Optional[jnp.ndarray] = None
+    lat: Optional[jnp.ndarray] = None
+    goodput: Optional[jnp.ndarray] = None
+
+    # ------------------------------------------------------------------
+    def local_train(self, params, opt_state, bx, by, active, shard=None):
+        def node_grad(p, x, y):
+            return jax.grad(self.loss_fn)(p, x, y)
+
+        if self.lr_scales is not None:
+            # sharded: slice this device's block of the per-node multipliers
+            lrs = shard.local(self.lr_scales) if shard is not None else self.lr_scales
+        # local_steps is small and static: unroll instead of nesting a scan
+        for s in range(bx.shape[0]):
+            grads = jax.vmap(node_grad)(params, bx[s], by[s])
+            updates, new_opt = jax.vmap(self.opt.update)(grads, opt_state, params)
+            if self.lr_scales is not None:
+                updates = node_scale(updates, lrs)
+            if active is not None:
+                # down nodes do no local work: zero update, frozen opt state
+                updates = node_scale(updates, active)
+                new_opt = node_where(active, new_opt, opt_state)
+            params, opt_state = apply_updates(params, updates), new_opt
+        return params, opt_state
+
+    # ------------------------------------------------------------------
+    def round_time(self, Wm, active, nbytes, deg_eff, shard=None, *,
+                   reduce: str = "max"):
+        """Simulated round wall-clock, traced — the same compute+comm
+        formula as ``NetworkModel.round_time`` (both call
+        ``network.node_round_times``; an equivalence test pins them
+        together).  For a SparseTopology the per-edge latency/goodput are
+        gathered through the neighbor table — O(N·D) — instead of masking
+        (N, N) matrices.  Sharded: rows are this device's block (global ids
+        index the replicated latency/goodput matrices) and the synchronous
+        round max is a pmax over the node axis.
+
+        reduce: 'max' — the synchronous-barrier scalar (every node waits
+        for the slowest); 'none' — the per-node (N,) time vector, for
+        schedulers that own their own clock semantics (local / async).
+        """
+        per_edge = jnp.where(deg_eff > 0, nbytes / jnp.maximum(deg_eff, 1e-9), 0.0)
+        if isinstance(Wm, ShardedTopology):
+            topo, rows = Wm.topo, Wm.rows[:, None]
+            A = (topo.w > 0).astype(jnp.float32)
+            lat = self.lat[rows, topo.nbr]
+            gp = self.goodput[rows, topo.nbr]
+        elif isinstance(Wm, ShardedDense):
+            rows = Wm.rows
+            offdiag = (jnp.arange(Wm.W.shape[1])[None, :] != rows[:, None]).astype(
+                jnp.float32
+            )
+            A = (Wm.W * offdiag > 0).astype(jnp.float32)
+            lat = jnp.take(self.lat, rows, axis=0)
+            gp = jnp.take(self.goodput, rows, axis=0)
+        elif isinstance(Wm, SparseTopology):
+            rows = jnp.arange(Wm.nbr.shape[0])[:, None]
+            A = (Wm.w > 0).astype(jnp.float32)  # live edge slots post-reweight
+            lat = self.lat[rows, Wm.nbr]
+            gp = self.goodput[rows, Wm.nbr]
+        else:
+            n = Wm.shape[0]
+            offdiag = 1.0 - jnp.eye(n, dtype=jnp.float32)
+            A = (Wm * offdiag > 0).astype(jnp.float32)
+            lat, gp = self.lat, self.goodput
+        ct = shard.local(self.compute_node) if shard is not None else self.compute_node
+        node_t = node_round_times(A, lat, gp, per_edge, ct, self.parallel_sends)
+        if active is not None:
+            node_t = active * node_t
+        if reduce == "none":
+            return node_t
+        t = jnp.max(node_t)
+        return shard.pmax(t) if shard is not None else t
+
+    # ------------------------------------------------------------------
+    def train_and_mix(self, params, opt_state, share_state, bx, by, W, active,
+                      rnd, shard=None, *, time_reduce: str = "max"):
+        """One round: local step, then the share/mix step through the
+        configured sharing strategy.  ``active`` is None for full
+        participation (statically skips masking/reweighting: W flows
+        through untouched and the degree stays a Python float, exactly
+        like per-round dispatch did).  ``shard`` is the node-axis sharding
+        inside a shard_map body (all node-stacked operands are then this
+        device's row blocks).  ``time_reduce`` is forwarded to
+        :meth:`round_time` — 'max' for the synchronous barrier scalar,
+        'none' for the per-node vector."""
+        key = jax.random.fold_in(self.base_key, rnd)
+        params, opt_state = self.local_train(params, opt_state, bx, by, active, shard)
+        if active is not None:
+            if isinstance(W, ShardedTopology):
+                t2, deg_eff = participation_reweight_sparse(
+                    W.topo, active, shard=W.shard
+                )
+                Wm = ShardedTopology(t2, W.shard, W.sched)
+            elif isinstance(W, ShardedDense):
+                W2, deg_eff = participation_reweight(W.W, active, shard=W.shard)
+                Wm = ShardedDense(W2, W.shard)
+            elif isinstance(W, SparseTopology):
+                Wm, deg_eff = participation_reweight_sparse(W, active)
+            else:
+                Wm, deg_eff = participation_reweight(W, active)
+        else:
+            Wm, deg_eff = W, self.mean_degree
+        X = jax.vmap(tree_vector)(params)
+        X2, new_share, nbytes = self.sharing.round(
+            X, Wm, share_state, key, degree=deg_eff, rnd=rnd
+        )
+        if active is not None:
+            # a down node transmitted nothing: its sharing bookkeeping
+            # (TopK last_shared, CHOCO xhat — node-stacked leaves) must not
+            # record this round's payload as sent
+            share_state = node_where(active, new_share, share_state)
+        else:
+            share_state = new_share
+        new_params = jax.vmap(lambda v: tree_unvector(v, self.template))(X2)
+        if active is not None:
+            # don't trust each strategy's W-row-identity property for down
+            # nodes (e.g. QuantizedSharing would hand them the int8
+            # roundtrip of their own params): freeze them explicitly
+            params = node_where(active, new_params, params)
+        else:
+            params = new_params
+        nbytes = jnp.asarray(nbytes, jnp.float32)
+        if self.lat is not None:
+            sim_t = self.round_time(Wm, active, nbytes, deg_eff, shard,
+                                    reduce=time_reduce)
+        elif time_reduce == "none":
+            # no network model: comm is free but per-node compute time still
+            # drives the virtual clocks (matching the async scheduler, whose
+            # event cadence is compute-only without a network)
+            node_t = self.compute_node
+            if active is not None:
+                node_t = active * node_t
+            sim_t = node_t
+        else:
+            sim_t = jnp.float32(0.0)
+        return params, opt_state, share_state, nbytes, sim_t

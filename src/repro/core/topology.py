@@ -410,6 +410,34 @@ def decompose_slot_permutations(topo: "SparseTopology") -> Optional["SparseTopol
         sys.setrecursionlimit(limit)
 
 
+def sample_neighbor_slots(key, topo: "SparseTopology", rows=None):
+    """(N,) int32 — one uniformly-random *valid* neighbor slot per node,
+    the per-event sampling primitive of asynchronous (AD-PSGD-style)
+    gossip: each fired node draws a single partner from its neighbor table
+    for this event.
+
+    Valid slots are ``w > 0`` (MH weights are strictly positive on real
+    edges, zero on padding).  Draws are per-node keyed (fold_in of the
+    global node id, like ``sharing._node_keys``) so sharded engines could
+    reproduce them; ``rows`` overrides the ids (defaults to arange).  A
+    node with no valid neighbor gets slot 0, whose padded entry is the
+    node itself — a harmless self-gossip.  Traced/jittable.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    valid = topo.w > 0                              # (N, D)
+    deg = valid.sum(1)                              # (N,)
+    ids = jnp.arange(valid.shape[0]) if rows is None else rows
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, ()))(keys)
+    # target rank among the valid slots, then the slot holding that rank
+    t = jnp.floor(u * jnp.maximum(deg, 1)).astype(jnp.int32)
+    pos = jnp.cumsum(valid, axis=1) - 1             # rank of each valid slot
+    hit = valid & (pos == t[:, None])
+    return jnp.argmax(hit, axis=1).astype(jnp.int32)
+
+
 def build_permute_schedule(nbr_perm: np.ndarray, ndev: int):
     """Per-slot rotation-grouped send/recv index tables for block-sharded
     permutation gossip.

@@ -105,6 +105,87 @@ class TestRoundTime:
         assert net.round_time(g, 1e9) == 0.0
 
 
+class TestHeterogeneousCompute:
+    def test_per_node_compute_times_bind_via_max(self):
+        n = 8
+        g = Graph.regular_circulant(n, 4)
+        net = paper_testbed(n)
+        ct = np.full(n, 0.01)
+        ct[3] = 1.0  # straggler
+        t_het = net.round_time(g, 1e6, compute_time_s=ct)
+        t_base = net.round_time(g, 1e6, compute_time_s=0.01)
+        assert t_het == pytest.approx(t_base + (1.0 - 0.01))
+        # per-node vector exposes who binds
+        nt = net.node_times(g, 1e6, compute_time_s=ct)
+        assert nt.argmax() == 3
+
+    def test_model_level_compute_times(self):
+        """compute_time_s promoted into the NetworkModel: round_time uses
+        the model's per-node vector when no override is passed."""
+        n = 4
+        g = Graph.ring(n)
+        net = paper_testbed(n)
+        net.compute_time_s = np.array([0.0, 0.0, 0.5, 0.0])
+        assert net.round_time(g, 0.0) == pytest.approx(
+            net.round_time(g, 0.0, compute_time_s=net.compute_time_s)
+        )
+        assert net.round_time(g, 0.0) >= 0.5
+
+    def test_straggler_distribution_helper(self):
+        from repro.core.network import straggler_compute_times
+
+        ct = straggler_compute_times(100, 0.1, factor=10.0, frac=0.2, seed=1)
+        assert ct.shape == (100,)
+        assert int(np.isclose(ct, 1.0).sum()) == 20
+        assert int(np.isclose(ct, 0.1).sum()) == 80
+        # seeded: same call -> same stragglers
+        np.testing.assert_array_equal(
+            ct, straggler_compute_times(100, 0.1, factor=10.0, frac=0.2, seed=1)
+        )
+        np.testing.assert_array_equal(
+            straggler_compute_times(8, 0.2), np.full(8, 0.2, np.float32)
+        )
+
+
+class TestModelEngineEquivalence:
+    """The Python NetworkModel and the engine's traced round time share one
+    formula (network.node_round_times) — R rounds of the compiled scan must
+    sum to R x the host model's round_time, so the two can't drift."""
+
+    @pytest.mark.parametrize("parallel", [False, True], ids=["serial", "nic"])
+    def test_traced_sim_time_matches_python_model(self, parallel):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import DLConfig, RoundEngine
+        from repro.data import NodeBatcher, make_dataset, sharding_partition
+        from repro.optim import make_optimizer
+
+        n, rounds = 8, 3
+        ds = make_dataset("cifar10", n_train=128, n_test=16, shape=(2, 2, 1),
+                          sigma=2.0)
+        parts = sharding_partition(ds.train_y, n, 2, seed=0)
+        batcher = NodeBatcher(ds.train_x, ds.train_y, parts, batch_size=4, seed=0)
+
+        def loss(p, x, y):
+            t = x.reshape(x.shape[0], -1).mean(0)
+            return jnp.mean((p["w"].reshape(-1, t.shape[0]) - t) ** 2)
+
+        dl = DLConfig(n_nodes=n, topology="regular", degree=4, rounds=rounds,
+                      eval_every=rounds - 1, network="lan", compute_time_s=0.02,
+                      straggler_factor=5.0, straggler_frac=0.25,
+                      parallel_sends=parallel, chunk_rounds=2)
+        e = RoundEngine(dl, lambda k: {"w": jax.random.normal(k, (8,))}, loss,
+                        lambda p, x, y: -loss(p, x, y),
+                        make_optimizer("sgd", 0.05), batcher)
+        e.run(log=False)
+        bytes_per_edge = e.n_params * 4  # fp32 full sharing
+        want = rounds * e.network_model.round_time(
+            e.graph, bytes_per_edge, parallel_sends=parallel
+        )
+        assert e.sim_time_s == pytest.approx(want, rel=1e-4)
+
+
 class TestLinkMatrices:
     def test_matrices_match_link(self):
         net = paper_testbed(6)

@@ -1,0 +1,381 @@
+"""Scheduler layer (execution semantics): ``semantics="sync"`` must be
+trajectory-equivalent to the per-round oracle across every scenario axis,
+``"local"`` keeps sync's trajectories on per-node neighborhood-barrier
+clocks, and ``"async"`` runs event-driven (AD-PSGD-style) gossip on a
+virtual clock — reducing to sync under homogeneous time + full activation,
+matching uniform-neighbor mixing in expectation for the pairwise sampler,
+and exposing staleness / per-node wall-clock / event-count metrics.  Also:
+machine-correlated churn masks and the centralized ``DLConfig.validate()``.
+
+(8-device coverage of the sync scheduler — sharded == single across the
+same scenario axes, incl. heterogeneous compute times and machine churn —
+lives in tests/test_sharded_engine.py, which relaunches itself with
+emulated devices under the plain tier-1 run.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DLConfig, RoundEngine
+from repro.core.mixing import gossip_pair_avg
+from repro.core.topology import Graph, SparseTopology, sample_neighbor_slots
+from repro.data import NodeBatcher, make_dataset, sharding_partition
+from repro.optim import make_optimizer
+
+SHAPE = (2, 2, 1)
+
+
+def _loss(p, x, y):
+    # consensus workload (cheapest possible round program): pull every
+    # 4-wide row of the state toward the local batch mean
+    t = x.reshape(x.shape[0], -1).mean(0)
+    return jnp.mean((p["w"].reshape(-1, t.shape[0]) - t) ** 2)
+
+
+def _acc(p, x, y):
+    return -_loss(p, x, y)
+
+
+def _engine(p_dim: int = 8, **kw) -> RoundEngine:
+    n = kw.setdefault("n_nodes", 12)
+    ds = make_dataset("cifar10", n_train=256, n_test=32, shape=SHAPE, sigma=2.0)
+    parts = sharding_partition(ds.train_y, n, 2, seed=0)
+    batcher = NodeBatcher(ds.train_x, ds.train_y, parts, batch_size=4, seed=0)
+    kw.setdefault("chunk_rounds", 4)
+    kw.setdefault("eval_every", 4)
+    dl = DLConfig(local_steps=1, batch_size=4, **kw)
+    init = lambda key: {"w": jax.random.normal(key, (p_dim,))}
+    return RoundEngine(dl, init, _loss, _acc, make_optimizer("sgd", 0.05), batcher)
+
+
+def _w(e):
+    return np.asarray(jax.vmap(lambda p: p["w"])(e.params))
+
+
+# ---------------------------------------------------------------------------
+# sync: the refactored scheduler must reproduce the per-round oracle
+# ---------------------------------------------------------------------------
+
+SCENARIOS = {
+    "dense": dict(topology="fully"),
+    "sparse": dict(topology="regular", degree=4),
+    "payload": dict(topology="regular", degree=4, sharing="randomk",
+                    budget=0.25, payload="on"),
+    "secure": dict(topology="regular", degree=4, secure=True),
+    "churn": dict(topology="regular", degree=4, participation=0.6),
+}
+
+
+class TestSyncEquivalence:
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS), ids=sorted(SCENARIOS))
+    def test_sync_scheduler_matches_per_round_oracle(self, scenario):
+        """The scheduler-layer scan (semantics='sync', explicit) must give
+        the legacy per-round dispatch's trajectories — the pre-refactor
+        engine's round program, preserved verbatim as chunk_rounds=0 —
+        for every scenario axis."""
+        kw = SCENARIOS[scenario]
+        e_scan = _engine(semantics="sync", rounds=8, seed=3, **kw)
+        e_scan.run(log=False)
+        e_oracle = _engine(chunk_rounds=0, rounds=8, seed=3, **kw)
+        e_oracle.run(log=False)
+        np.testing.assert_allclose(_w(e_scan), _w(e_oracle), rtol=2e-5, atol=1e-6)
+        assert e_scan.bytes_sent == pytest.approx(e_oracle.bytes_sent, rel=1e-6)
+
+    def test_sync_is_the_default(self):
+        assert _engine(rounds=1).dl.semantics == "sync"
+        assert type(_engine(rounds=1).scheduler).__name__ == "SyncScheduler"
+
+
+# ---------------------------------------------------------------------------
+# local: same trajectories, per-node neighborhood-barrier clocks
+# ---------------------------------------------------------------------------
+
+class TestLocalSemantics:
+    def _pair(self, **kw):
+        out = {}
+        for sem in ("sync", "local"):
+            e = _engine(semantics=sem, **kw)
+            e.run(log=False)
+            out[sem] = e
+        return out
+
+    def test_trajectories_identical_to_sync(self):
+        es = self._pair(topology="regular", degree=4, rounds=8, seed=1,
+                        network="lan", compute_time_s=0.01)
+        np.testing.assert_array_equal(_w(es["sync"]), _w(es["local"]))
+        assert es["local"].bytes_sent == pytest.approx(es["sync"].bytes_sent)
+
+    def test_local_clock_bounded_by_sync_barrier(self):
+        """No global barrier: the max per-node clock can never exceed the
+        sum of per-round maxima, and with a constant straggler the *median*
+        node finishes far earlier (only its neighborhood waits — the delay
+        propagates one ring hop per round, so after 6 rounds a single
+        straggler on a 32-ring has dragged 13 of 32 clocks)."""
+        es = self._pair(topology="ring", n_nodes=32, rounds=6, seed=0,
+                        network="lan", compute_time_s=0.05,
+                        straggler_factor=10.0, straggler_frac=0.03)
+        sync_t, local_t = es["sync"].sim_time_s, es["local"].sim_time_s
+        assert local_t <= sync_t * (1 + 1e-6)
+        rec = es["local"].history[-1]
+        assert rec["semantics"] == "local"
+        assert rec["vclock_median_s"] < 0.5 * sync_t
+        assert rec["vclock_max_s"] == pytest.approx(local_t)
+
+    def test_local_clock_advances_without_network_model(self):
+        """No network model: comm is free but per-node compute time still
+        drives the virtual clocks (regression: the clocks used to stay at
+        zero, silently ignoring compute_time_s unlike async)."""
+        e = _engine(semantics="local", topology="regular", degree=4,
+                    n_nodes=12, rounds=6, eval_every=5, compute_time_s=0.1,
+                    straggler_factor=10.0, straggler_frac=0.1)
+        e.run(log=False)
+        # the straggler (1.0 s/round, never waits) binds the max clock
+        assert e.sim_time_s == pytest.approx(6 * 1.0, rel=1e-5)
+        assert e.history[-1]["vclock_min_s"] >= 6 * 0.1 - 1e-6
+
+    def test_local_with_churn_runs(self):
+        es = self._pair(topology="regular", degree=4, rounds=8, seed=2,
+                        participation=0.6, network="lan", compute_time_s=0.01)
+        np.testing.assert_array_equal(_w(es["sync"]), _w(es["local"]))
+        assert es["local"].sim_time_s <= es["sync"].sim_time_s * (1 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# async: event-driven gossip on the virtual clock
+# ---------------------------------------------------------------------------
+
+class TestAsyncSemantics:
+    def test_homogeneous_full_activation_reduces_to_sync(self):
+        """With homogeneous compute times and full participation every
+        event cohort is exactly one synchronous round (all nodes tie on
+        the virtual clock and fire together), so neighborhood-async
+        trajectories coincide with sync."""
+        out = {}
+        for sem in ("sync", "async"):
+            e = _engine(semantics=sem, topology="regular", degree=4,
+                        rounds=8, seed=4, compute_time_s=0.1)
+            e.run(log=False)
+            out[sem] = e
+        np.testing.assert_allclose(_w(out["sync"]), _w(out["async"]),
+                                   rtol=1e-6, atol=1e-7)
+        assert out["async"].bytes_sent == pytest.approx(out["sync"].bytes_sent,
+                                                        rel=1e-5)
+        rec = out["async"].history[-1]
+        assert rec["semantics"] == "async"
+        assert rec["events_min"] == rec["events_max"] == 8  # lockstep cohorts
+        assert rec["staleness_mean"] == pytest.approx(0.0)  # no lag anywhere
+
+    def test_pairwise_expectation_matches_uniform_neighbor_mixing(self):
+        """Seeded statistical test: averaged over the partner draw, the
+        pairwise AD-PSGD update equals the uniform-neighbor mixing row
+        0.5·x_i + 0.5·mean_{j~i} x_j."""
+        g = Graph.regular_circulant(12, 4)
+        st = jax.tree_util.tree_map(jnp.asarray, SparseTopology.from_graph(g))
+        X = jax.random.normal(jax.random.key(0), (12, 6))
+        S = 2048
+        keys = jax.vmap(jax.random.key)(jnp.arange(S))
+        Xs = jax.vmap(lambda k: gossip_pair_avg(st, X, k)[0])(keys)  # (S, N, P)
+        emp = np.asarray(Xs.mean(0), np.float64)
+        A = g.adj / g.degrees()[:, None]
+        want = 0.5 * np.asarray(X) + 0.5 * (A @ np.asarray(X))
+        stderr = np.asarray(Xs.std(0), np.float64) / np.sqrt(S)
+        assert np.all(np.abs(emp - want) < 6 * stderr + 1e-5)
+
+    def test_pairwise_partner_sampling_uniform(self):
+        g = Graph.regular_circulant(16, 4)
+        st = jax.tree_util.tree_map(jnp.asarray, SparseTopology.from_graph(g))
+        counts = np.zeros((16, st.nbr.shape[1]))
+        for s in range(400):
+            slot = np.asarray(sample_neighbor_slots(jax.random.key(s), st))
+            counts[np.arange(16), slot] += 1
+        freq = counts / 400.0
+        np.testing.assert_allclose(freq, 0.25, atol=0.08)  # 4 slots each
+
+    def test_stragglers_fire_fewer_events(self):
+        e = _engine(semantics="async", topology="regular", degree=4,
+                    n_nodes=16, rounds=40, eval_every=40, seed=5,
+                    compute_time_s=0.1, straggler_factor=10.0,
+                    straggler_frac=0.25)
+        e.run(log=False)
+        ct = e._compute_node_np
+        events = np.asarray(e.scheduler._events)
+        slow, fast = events[ct > 0.5], events[ct < 0.5]
+        assert slow.max() < fast.min() / 2  # ~10x fewer events
+        rec = e.history[-1]
+        assert rec["staleness_mean"] > 0.5   # fast nodes read lagging rows
+        assert rec["vclock_max_s"] > rec["vclock_min_s"]
+        assert rec["events_total"] == int(events.sum())
+
+    def test_async_virtual_time_beats_sync_barrier_under_stragglers(self):
+        """The headline property (benchmarked at N=1024 in bench_engine):
+        per step of progress, the async virtual clock advances at the fast
+        nodes' pace while the sync barrier pays the straggler every
+        round."""
+        out = {}
+        for sem in ("sync", "async"):
+            e = _engine(semantics=sem, topology="regular", degree=4,
+                        n_nodes=16, rounds=24, eval_every=24, seed=6,
+                        compute_time_s=0.05, straggler_factor=10.0,
+                        straggler_frac=0.1, network="lan")
+            e.run(log=False)
+            out[sem] = e
+        assert out["async"].sim_time_s < 0.5 * out["sync"].sim_time_s
+        # ... while still making training progress
+        assert out["async"].history[-1]["acc_mean"] > 2 * out[
+            "sync"
+        ].history[0]["acc_mean"]  # acc = -loss: losses shrink
+
+    def test_pairwise_runs_and_records(self):
+        e = _engine(semantics="async", async_gossip="pairwise",
+                    topology="regular", degree=4, rounds=16, eval_every=8,
+                    seed=7, compute_time_s=0.05, straggler_factor=4.0,
+                    straggler_frac=0.25, network="lan")
+        h = e.run(log=False)
+        assert e.bytes_sent > 0
+        assert h[-1]["acc_mean"] > h[0]["acc_mean"] - 0.05  # converging-ish
+        assert h[-1]["semantics"] == "async"
+        assert h[-1]["staleness_mean"] >= 0.0
+        assert np.isfinite(_w(e)).all()
+
+    def test_down_nodes_rejoin_with_stale_model(self):
+        """A node that never fires an active event keeps its initial
+        params bit-for-bit — churn freezes, never reweights away."""
+        e = _engine(semantics="async", topology="regular", degree=4,
+                    n_nodes=8, rounds=6, eval_every=5, seed=0,
+                    participation=0.5, compute_time_s=0.1)
+        p0 = _w(e).copy()
+        masks = e._participation_mask(0, 6)
+        e.run(log=False)
+        never = np.nonzero(~masks.any(0).astype(bool))[0]
+        p1 = _w(e)
+        for i in never:
+            np.testing.assert_array_equal(p1[i], p0[i])
+
+    def test_dynamic_topology_async(self):
+        e = _engine(semantics="async", topology="dynamic", degree=4,
+                    rounds=8, seed=1, compute_time_s=0.05,
+                    straggler_factor=3.0, straggler_frac=0.25)
+        h = e.run(log=False)
+        assert np.isfinite(_w(e)).all()
+        assert h[-1]["events_total"] > 0
+
+
+# ---------------------------------------------------------------------------
+# machine-correlated churn
+# ---------------------------------------------------------------------------
+
+class TestMachineChurn:
+    def test_nodes_on_one_machine_fail_together(self):
+        e = _engine(n_nodes=16, participation=0.6, churn_machines=4, rounds=1)
+        m = e._participation_mask(0, 64)  # (R, 16)
+        # every node on a machine carries the machine's draw (round-robin:
+        # node n -> machine n % 4)
+        for k in range(4):
+            col = m[:, np.arange(16) % 4 == k]
+            np.testing.assert_array_equal(col, np.tile(col[:, :1], (1, 4)))
+        # and distinct machines are NOT correlated with each other
+        assert not np.array_equal(m[:, 0], m[:, 1])
+
+    def test_iid_masks_unchanged_by_default(self):
+        """churn_machines=0 must reproduce the original per-node draw
+        bit-for-bit (chunk-boundary-invariant splitmix)."""
+        e = _engine(n_nodes=8, participation=0.7, rounds=1, seed=9)
+        full = e._participation_mask(0, 12)
+        np.testing.assert_array_equal(full[3:7], e._participation_mask(3, 4))
+        assert 0.4 < full.mean() < 0.95
+
+    def test_machine_churn_runs_end_to_end(self):
+        e = _engine(n_nodes=12, topology="regular", degree=4, rounds=6,
+                    eval_every=5, participation=0.7, churn_machines=3, seed=2)
+        e.run(log=False)
+        assert e.bytes_sent > 0
+        assert np.isfinite(_w(e)).all()
+
+    def test_machine_churn_correlates_across_local_semantics(self):
+        e1 = _engine(n_nodes=12, topology="regular", degree=4, rounds=6,
+                     eval_every=5, participation=0.7, churn_machines=3,
+                     seed=2, semantics="local", network="lan",
+                     compute_time_s=0.01)
+        e1.run(log=False)
+        e2 = _engine(n_nodes=12, topology="regular", degree=4, rounds=6,
+                     eval_every=5, participation=0.7, churn_machines=3, seed=2)
+        e2.run(log=False)
+        np.testing.assert_array_equal(_w(e1), _w(e2))
+
+
+# ---------------------------------------------------------------------------
+# DLConfig.validate: the centralized knob-compatibility matrix
+# ---------------------------------------------------------------------------
+
+class TestValidate:
+    def _bad(self, match, **kw):
+        with pytest.raises(ValueError, match=match):
+            DLConfig(**kw).validate()
+
+    def test_valid_defaults(self):
+        assert DLConfig().validate() is not None
+        DLConfig(semantics="local").validate()
+        DLConfig(semantics="async", compute_time_s=0.1).validate()
+        DLConfig(semantics="async", async_gossip="pairwise").validate()
+        DLConfig(participation=0.5, churn_machines=4).validate()
+        DLConfig(straggler_factor=10.0, straggler_frac=0.1,
+                 compute_time_s=0.05).validate()
+
+    def test_straggler_knobs_without_compute_time_rejected(self):
+        self._bad("no-op", straggler_factor=10.0, straggler_frac=0.1)
+
+    def test_unknown_semantics(self):
+        self._bad("unknown semantics", semantics="eventual")
+
+    def test_async_rejects_secure(self):
+        self._bad("secure", semantics="async", secure=True)
+
+    def test_async_rejects_stateful_sharing(self):
+        self._bad("one-sided stale reads", semantics="async", sharing="topk")
+        self._bad("one-sided stale reads", semantics="async", sharing="choco")
+
+    def test_async_pairwise_rejects_dense(self):
+        self._bad("pairwise", semantics="async", async_gossip="pairwise",
+                  topology="fully")
+        self._bad("pairwise", semantics="async", async_gossip="pairwise",
+                  mixing="dense")
+
+    def test_non_sync_needs_scan_path(self):
+        self._bad("chunk_rounds", semantics="async", chunk_rounds=0)
+        self._bad("chunk_rounds", semantics="local", chunk_rounds=0)
+
+    def test_non_sync_rejects_sharding(self):
+        self._bad("single-host", semantics="local", shard_devices=2)
+        self._bad("single-host", semantics="async", shard_devices=2)
+
+    def test_secure_rejects_churn_axes(self):
+        self._bad("churn", secure=True, participation=0.9)
+        self._bad("churn", secure=True, churn_machines=4, participation=0.9)
+        self._bad("static graph", secure=True, topology="dynamic")
+
+    def test_secure_rejects_payload_knobs(self):
+        self._bad("secure", secure=True, payload="on")
+        self._bad("secure", secure=True, payload_quant=True)
+        self._bad("secure", secure=True, randk_sampler="strided")
+
+    def test_payload_knob_compat(self):
+        self._bad("sparsified", payload="on", sharing="full")
+        self._bad("payload_quant", payload_quant=True, sharing="quant")
+        self._bad("randk_sampler", randk_sampler="strided", sharing="topk")
+        self._bad("unknown payload", payload="maybe")
+        self._bad("unknown randk_sampler", randk_sampler="fourier")
+
+    def test_scalar_domains(self):
+        self._bad("participation", participation=0.0)
+        self._bad("participation", participation=1.5)
+        self._bad("churn_machines", churn_machines=-1)
+        self._bad("straggler_frac", straggler_frac=1.5)
+        self._bad("straggler_factor", straggler_factor=0.0)
+        self._bad("compute_time_s", compute_time_s=-1.0)
+        self._bad("unknown mixing", mixing="banana")
+        self._bad("unknown shard_backend", shard_backend="teleport")
+
+    def test_engine_calls_validate(self):
+        with pytest.raises(ValueError, match="secure"):
+            _engine(semantics="async", secure=True, rounds=1)

@@ -213,6 +213,22 @@ class TestShardedEngine:
                            randk_sampler="strided", payload="on",
                            participation=0.6)
 
+    def test_heterogeneous_compute_time(self):
+        """Per-node (N,) compute times slice correctly into device row
+        blocks inside the traced round-time formula."""
+        _assert_equivalent(topology="regular", degree=5, network="lan",
+                           compute_time_s=0.01, straggler_factor=10.0,
+                           straggler_frac=0.25)
+
+    def test_machine_correlated_churn(self):
+        _assert_equivalent(topology="regular", degree=5, participation=0.6,
+                           churn_machines=4)
+
+    def test_non_sync_semantics_rejected(self):
+        with pytest.raises(ValueError, match="single-host"):
+            _engine(topology="regular", degree=5, shard_devices=8,
+                    semantics="async")
+
     def test_uneven_nodes_rejected(self):
         with pytest.raises(ValueError, match="divide evenly"):
             _engine(n_nodes=12, topology="regular", degree=5, shard_devices=8)
