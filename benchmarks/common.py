@@ -95,9 +95,50 @@ def dl_experiment(
     return out
 
 
+def memory_snapshot() -> Dict:
+    """Process memory at the time of the call: live device-buffer bytes
+    (sum over ``jax.live_arrays()`` — on CPU backends this is host memory
+    too, but it is exactly the engine's device-resident working set) plus
+    host RSS current/peak from /proc (``resource.getrusage`` fallback).
+    -1 marks an unavailable reading."""
+    snap = {"device_live_bytes": -1, "host_rss_bytes": -1,
+            "host_peak_rss_bytes": -1}
+    try:
+        import jax
+
+        snap["device_live_bytes"] = int(
+            sum(int(a.nbytes) for a in jax.live_arrays())
+        )
+    except Exception:
+        pass
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    snap["host_rss_bytes"] = int(line.split()[1]) * 1024
+                elif line.startswith("VmHWM:"):
+                    snap["host_peak_rss_bytes"] = int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    if snap["host_peak_rss_bytes"] < 0:
+        try:
+            import resource
+
+            snap["host_peak_rss_bytes"] = (
+                resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+            )
+        except Exception:
+            pass
+    return snap
+
+
 def save_results(bench: str, records: List[Dict]):
+    """Write one bench's records plus a trailing ``_memory`` record — every
+    bench script inherits peak/live memory capture in its saved JSON, which
+    is what makes bounded-memory gates recorded, inspectable quantities."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{bench}.json")
+    records = list(records) + [{"name": "_memory", **memory_snapshot()}]
     with open(path, "w") as f:
         json.dump(records, f, indent=1)
     return path

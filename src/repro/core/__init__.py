@@ -6,8 +6,10 @@ from repro.core.topology import (
     PeerSampler,
     SparseTopology,
     build_permute_schedule,
+    circulant_neighbor_table,
     circulant_offsets,
     decompose_slot_permutations,
+    gather_rows,
     mh_weight_table,
     neighbor_table,
     random_regular_neighbors,
@@ -38,7 +40,9 @@ from repro.core.sharing import (
     ChocoSGD,
     QuantizedSharing,
     make_sharing,
+    participation_deg_eff,
     participation_reweight,
+    participation_reweight_rows,
     participation_reweight_sparse,
     sparse_aggregate,
 )
@@ -46,6 +50,7 @@ from repro.core.network import (
     LinkSpec,
     Mapping,
     NetworkModel,
+    gathered_round_times,
     node_round_times,
     paper_testbed,
     straggler_compute_times,

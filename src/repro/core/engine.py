@@ -86,6 +86,13 @@ from repro.utils.pytree import tree_vector
 # sparse path stages O(N·d) tables per round and is exempt.
 _W_STACK_BYTES_CAP = 64 * 1024 * 1024
 
+# above this node count, circulant topologies (ring / regular) skip the
+# dense (N, N) Graph object entirely and build the sparse neighbor table
+# directly (topology.circulant_neighbor_table, O(N·d)) — the adjacency of
+# a 100k-node overlay alone would be 10 GB.  Tables are bitwise-identical
+# either way (property-tested), so the threshold only moves memory.
+_DENSE_GRAPH_MAX_N = 4096
+
 
 @dataclasses.dataclass
 class DLConfig:
@@ -122,6 +129,18 @@ class DLConfig:
     semantics: str = "sync"
     async_gossip: str = "neighborhood"  # neighborhood | pairwise (AD-PSGD)
     async_slice_s: float = 0.0  # event-cohort window on the virtual clock
+    # population-scale cohort activation (async only): >0 bounds each event
+    # step to a gathered hot set of C rows — O(C·(d+1)·P) per step instead
+    # of O(N·P) — with overflow-carry for in-slice nodes beyond capacity.
+    # 0 = the dense oracle (every step computes over all N rows).
+    cohort_capacity: int = 0
+    # batch-index derivation: 'stream' = per-round numpy PCG64 host staging
+    # (the original path); 'node' = per-(round, node) jax PRNG keying,
+    # derived on device for exactly the rows a step touches — required by
+    # cohort_capacity (staging (R, L, N, B) host indices would reintroduce
+    # the O(N) per-step cost the cohort path removes).  The two keyings
+    # draw different (equally valid) sample streams.
+    batch_keying: str = "stream"  # stream | node
     # --- multi-device execution -------------------------------------------
     shard_devices: int = 0     # shard the node axis over this many devices
     shard_backend: str = "auto"  # auto | ppermute (slot collective_permutes) | gather
@@ -239,6 +258,35 @@ class DLConfig:
                 bad("async_gossip='pairwise' samples partners from sparse "
                     "neighbor tables; use async_gossip='neighborhood' for "
                     "dense mixing / fully|star topologies")
+        # -- population-scale cohort activation -----------------------------
+        if self.batch_keying not in ("stream", "node"):
+            bad(f"unknown batch_keying {self.batch_keying!r} (stream|node)")
+        if self.batch_keying == "node":
+            if self.chunk_rounds <= 0:
+                bad("batch_keying='node' derives indices inside the scanned "
+                    "chunk (chunk_rounds > 0); the legacy per-round dispatch "
+                    "stages host batches")
+            if self.shard_devices > 0:
+                bad("batch_keying='node' is single-host for now; the "
+                    "shard_map chunk stages 'stream' batches per shard")
+        if self.cohort_capacity < 0:
+            bad(f"cohort_capacity must be >= 0, got {self.cohort_capacity}")
+        if self.cohort_capacity > 0:
+            if self.semantics != "async":
+                bad("cohort_capacity is the async cohort gather/scatter "
+                    f"path; set semantics='async' (got {self.semantics!r})")
+            if self.cohort_capacity > self.n_nodes:
+                bad(f"cohort_capacity={self.cohort_capacity} exceeds "
+                    f"n_nodes={self.n_nodes}")
+            if self.mixing == "dense" or self.topology in ("fully", "star"):
+                bad("cohort_capacity gathers neighbor rows from sparse "
+                    "(N, D) tables; dense mixing / fully|star topologies "
+                    "have no bounded neighbor set to gather")
+            if self.batch_keying != "node":
+                bad("cohort_capacity requires batch_keying='node': host "
+                    "staging of (R, L, N, B) sample indices is O(N·B) per "
+                    "step — the population-scale cost the cohort path "
+                    "exists to remove")
         return self
 
 
@@ -324,7 +372,15 @@ class RoundEngine:
         self.params = jax.vmap(init_params_fn)(keys)
         self.opt_state = jax.vmap(self.opt.init)(self.params)
         self.template = jax.tree_util.tree_map(lambda a: a[0], self.params)
-        self.graph = build_graph(dl)
+        # population scale: circulant overlays above the dense-graph cap go
+        # straight to (N, d) tables — no (N, N) adjacency is ever built
+        self._circulant_direct = (
+            dl.topology in ("ring", "regular")
+            and dl.n_nodes > _DENSE_GRAPH_MAX_N
+            and not dl.secure
+            and dl.mixing != "dense"
+        )
+        self.graph = None if self._circulant_direct else build_graph(dl)
         self.sampler = PeerSampler(dl.n_nodes, dl.degree, dl.seed) if dl.topology == "dynamic" else None
         if dl.secure:
             assert self.graph is not None, "secure aggregation needs a static graph"
@@ -360,6 +416,12 @@ class RoundEngine:
                 "async_gossip='pairwise' needs sparse neighbor tables; this "
                 "topology resolved to dense mixing — use "
                 "async_gossip='neighborhood'"
+            )
+        if dl.cohort_capacity > 0 and self.mix_mode != "sparse":
+            raise ValueError(
+                "cohort_capacity gathers neighbor rows from sparse (N, D) "
+                "tables; this topology resolved to dense mixing — drop "
+                "cohort_capacity or use a sparse overlay"
             )
         # --- node-axis sharding (multi-device execution) -------------------
         self.sharded = dl.shard_devices > 0
@@ -405,6 +467,20 @@ class RoundEngine:
                 W_np = self.graph.metropolis_hastings().astype(np.float32)
                 self._mix_static = jnp.asarray(W_np)
                 self.topo_stage_bytes_peak = int(W_np.nbytes)
+        elif self._circulant_direct:
+            if self.sharded and self._shard_backend == "ppermute":
+                raise ValueError(
+                    "shard_backend='ppermute' builds its slot schedule from "
+                    f"the dense graph, capped at n_nodes={_DENSE_GRAPH_MAX_N}; "
+                    "use shard_backend='gather' at population scale"
+                )
+            deg = 2 if dl.topology == "ring" else dl.degree
+            st = SparseTopology.regular_circulant(dl.n_nodes, deg)
+            self._mean_degree = float(st.dmax)  # circulants are regular
+            self._mix_static = SparseTopology(
+                jnp.asarray(st.nbr), jnp.asarray(st.w), jnp.asarray(st.w_self)
+            )
+            self.topo_stage_bytes_peak = st.stage_bytes()
         else:
             self._mix_static = None
             self._mean_degree = float(dl.degree)  # PeerSampler is d-regular
@@ -428,6 +504,14 @@ class RoundEngine:
         self._dev_x = jnp.asarray(batcher.x)
         self._dev_y = jnp.asarray(batcher.y)
         self._base_key = jax.random.key(dl.seed + 17)
+        if dl.batch_keying == "node":
+            # per-(round, node) keyed sampling: partition tables live on
+            # device; the batch key is folded off the engine stream so
+            # batch draws never collide with sharing/gossip draws
+            self._dev_lens, self._dev_parts_pad = batcher.device_tables()
+            self._batch_key = jax.random.fold_in(self._base_key, 0x0BA7)
+        else:
+            self._dev_lens = self._dev_parts_pad = self._batch_key = None
         n = dl.n_nodes
         if dl.chunk_rounds <= 0:
             self.chunk = 0

@@ -48,6 +48,25 @@ def node_round_times(A, lat, goodput, per_edge_bytes, compute_time,
     return compute_time + comm
 
 
+def gathered_round_times(lat, goodput, rows, nbr, A, per_edge_bytes,
+                         compute_time, parallel_sends: bool = False):
+    """:func:`node_round_times` for a *gathered row subset* — the cohort
+    form of the per-node time draw.  ``rows`` are (C,) global node ids,
+    ``nbr`` their (C, D) global neighbor ids: the (C, D) link submatrices
+    are gathered as ``lat[rows[:, None], nbr]`` — elementwise-identical to
+    indexing the full (N, D) gather at those rows, so the result is the
+    bitwise (C,)-row slice of the dense formula (equivalence-tested).
+
+    A: (C, D) {0,1} live-edge mask over the gathered slots; compute_time:
+    (C,) gathered per-node compute seconds.
+    """
+    r = rows[:, None]
+    return node_round_times(
+        A, lat[r, nbr], goodput[r, nbr], per_edge_bytes, compute_time,
+        parallel_sends,
+    )
+
+
 def straggler_compute_times(
     n: int,
     base_s: float,

@@ -48,15 +48,32 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.mixing import ShardedDense, ShardedTopology, gossip_pair_avg
-from repro.core.sharing import participation_reweight, participation_reweight_sparse
+from repro.data.loader import node_batch_indices
+from repro.core.sharing import (
+    participation_deg_eff,
+    participation_reweight,
+    participation_reweight_rows,
+    participation_reweight_sparse,
+)
 from repro.core.steps import node_where
-from repro.core.topology import SparseTopology
+from repro.core.topology import SparseTopology, gather_rows, sample_neighbor_slots
 from repro.utils.compat import shard_map
 from repro.utils.pytree import tree_unvector, tree_vector
 
 # cap on the pre-gathered (R, L, N, B, ...) batch stack; above it the scan
 # falls back to gathering each round's batch inside the loop body.
 _BATCH_STACK_BYTES_CAP = 256 * 1024 * 1024
+
+# virtual-clock rebase threshold (cohort-path fp32 hygiene): once every
+# pending event time exceeds this, the async scheduler subtracts a common
+# fp32 shift from t_next/vclock on device and carries it in a float64 host
+# offset.  fp32 *running maxima* over the clock are exact (max never
+# rounds), but the clock itself advances by running sums — at t ~ 2^16 s
+# the fp32 ulp is ~2^-7 s, so millisecond-scale event durations start to
+# be absorbed; rebasing keeps the accumulating magnitudes small.  The
+# threshold is far above any existing test horizon, so trajectories below
+# it are untouched bitwise.
+_REBASE_T_S = 65536.0
 
 
 def _live_edges(W, act):
@@ -90,6 +107,9 @@ class Scheduler:
 
     def __init__(self, eng):
         self.eng = eng
+        # 'node' batch keying: indices are a device-side pure function of
+        # (seed, round, global id) — no host staging, no (R, L, N, B) stack
+        self._node_keying = eng.dl.batch_keying == "node"
 
     # ------------------------------------------------------------------
     # activation masks (churn)
@@ -148,17 +168,20 @@ class Scheduler:
         churn."""
         eng = self.eng
         dl = eng.dl
-        idx = eng.batcher.chunk_indices(start, n_rounds, dl.local_steps)
         xs = {"rnd": jnp.asarray(np.arange(start, start + n_rounds, dtype=np.int32))}
-        item_bytes = eng._dev_x.nbytes // max(eng._dev_x.shape[0], 1)
-        if idx.size * item_bytes <= _BATCH_STACK_BYTES_CAP:
-            # pre-stack the whole chunk's batches on device: one gather per
-            # chunk instead of one per scanned round
-            idx_dev = jnp.asarray(idx)
-            xs["bx"] = jnp.take(eng._dev_x, idx_dev, axis=0)  # (R, L, N, B, ...)
-            xs["by"] = jnp.take(eng._dev_y, idx_dev, axis=0)
-        else:
-            xs["idx"] = jnp.asarray(idx)
+        if not self._node_keying:
+            idx = eng.batcher.chunk_indices(start, n_rounds, dl.local_steps)
+            item_bytes = eng._dev_x.nbytes // max(eng._dev_x.shape[0], 1)
+            if idx.size * item_bytes <= _BATCH_STACK_BYTES_CAP:
+                # pre-stack the whole chunk's batches on device: one gather
+                # per chunk instead of one per scanned round
+                idx_dev = jnp.asarray(idx)
+                xs["bx"] = jnp.take(eng._dev_x, idx_dev, axis=0)  # (R, L, N, B, ...)
+                xs["by"] = jnp.take(eng._dev_y, idx_dev, axis=0)
+            else:
+                xs["idx"] = jnp.asarray(idx)
+        # ('node' keying stages nothing: each scan step derives its rows'
+        # indices from (rnd, id) in-body — see _node_indices)
         if eng.sampler is not None:
             if eng.mix_mode == "sparse":
                 st = eng.sampler.sparse_stack(start, n_rounds)  # (R, N, D)
@@ -175,13 +198,30 @@ class Scheduler:
             xs["act"] = jnp.asarray(self.participation_mask(start, n_rounds))
         return xs
 
+    def _node_indices(self, rnd, ids):
+        """(L, |ids|, B) sample indices for the given global node ids under
+        'node' keying — a traced pure function of (round, id), so a
+        gathered cohort samples bitwise what the dense oracle samples."""
+        eng = self.eng
+        return node_batch_indices(
+            eng._batch_key, rnd, ids, eng._dev_lens, eng._dev_parts_pad,
+            eng.dl.local_steps, eng.dl.batch_size,
+        )
+
     def _round_batch(self, xs_r):
         """One round's (L, N, B, ...) batches inside a scan body: the
-        pre-gathered slice, or an in-loop gather for oversized chunks."""
+        pre-gathered slice, an in-loop gather for oversized chunks, or an
+        in-body derivation under 'node' keying."""
         if "bx" in xs_r:
             return xs_r["bx"], xs_r["by"]
-        bx = jnp.take(self.eng._dev_x, xs_r["idx"], axis=0)
-        by = jnp.take(self.eng._dev_y, xs_r["idx"], axis=0)
+        if self._node_keying:
+            idx = self._node_indices(
+                xs_r["rnd"], jnp.arange(self.eng.dl.n_nodes)
+            )
+        else:
+            idx = xs_r["idx"]
+        bx = jnp.take(self.eng._dev_x, idx, axis=0)
+        by = jnp.take(self.eng._dev_y, idx, axis=0)
         return bx, by
 
     # ------------------------------------------------------------------
@@ -484,6 +524,28 @@ class AsyncScheduler(Scheduler):
     completion among fired events), fired-event count, and the staleness
     (event-count gap receiver-minus-sender over the rows read) sum/max —
     aggregated into :meth:`extra_metrics` for ``history``/results.
+
+    **Population-scale cohort activation** (``DLConfig.cohort_capacity=C``
+    > 0): each scanned step selects the top-C earliest-``t_next`` nodes
+    inside the time slice (ties by lowest id), **gathers** only those C
+    rows of params/opt state plus their neighbor rows from the padded
+    ``SparseTopology`` table, runs the identical local-step + one-sided
+    gossip on the (C, ...) slice, and **scatters** the results back into
+    the cold device-resident (N, ...) population state — O(C·(d+1)·P) per
+    event step instead of O(N·P).  In-slice nodes beyond capacity are
+    *overflow-carried*: their ``t_next`` is untouched, so they stay inside
+    the (monotone) next slice and fire in earliest-deadline order — no
+    event is dropped, only deferred (which is when timing semantics can
+    differ from the dense oracle; with C >= every fire-count the
+    trajectory is the dense one, property-tested).  Per-step cohort
+    occupancy and overflow counts are traced outputs.
+
+    Accumulator hygiene at population scale: host-side event totals
+    accumulate as Python ints / int64 (int32 wraps at ~2.1e9 events —
+    hours of a 100k-node run); ``sim_time_s`` and the vclock metrics are
+    fp32 running *maxima* of the device clock, which are exact (max
+    selects, never rounds — unlike sums, which lose ulps at every add),
+    plus the float64 ``_t_offset`` rebase carry (see ``_REBASE_T_S``).
     """
 
     semantics = "async"
@@ -499,17 +561,24 @@ class AsyncScheduler(Scheduler):
         self._stale_sum = 0.0
         self._stale_n = 0.0
         self._stale_max = 0.0
-        self._fired_total = 0.0
+        self._fired_total = 0          # int: exact at any population scale
+        self._t_offset = 0.0           # float64 rebase carry (virtual secs)
+        self._cohort_c = int(eng.dl.cohort_capacity)
+        self._occ_sum = 0.0
+        self._occ_steps = 0
+        self._overflow_total = 0
         self._chunk_jit = jax.jit(self._chunk_fn)
 
     # -- traced cohort helpers -------------------------------------------
-    def _pair_comm(self, partner, ok):
+    def _pair_comm(self, partner, ok, rows=None):
         """Per-event comm seconds of a pairwise exchange (one message of
-        the full parameter vector from the sampled partner)."""
+        the full parameter vector from the sampled partner).  ``rows``
+        overrides the receiver ids for a gathered cohort (defaults to
+        arange — the full node axis)."""
         eng = self.eng
         if eng.steps.lat is None:
             return jnp.zeros_like(ok)
-        rows = jnp.arange(partner.shape[0])
+        rows = jnp.arange(partner.shape[0]) if rows is None else rows
         nbytes = eng.n_params * jnp.dtype(jnp.float32).itemsize
         t = (
             eng.steps.lat[rows, partner]
@@ -595,7 +664,197 @@ class AsyncScheduler(Scheduler):
         )
         return (params, opt_state, share_state, t_next, vclock, events), out
 
+    def _cohort_gs(self, carry, xs_r):
+        """Population-scale cohort body: the semantics of :meth:`_cohort`
+        executed on a gathered (C, ...) hot set.  Selection is top-C
+        earliest ``t_next`` inside the slice (ties by lowest id — the
+        ``lax.top_k`` tie-break), unselected in-slice nodes keep their
+        ``t_next`` untouched (overflow-carry: the slice window is
+        monotone, so they remain inside the next one and fire in
+        earliest-deadline order).  Capacity padding slots carry
+        ``cmask=0``: their gathered rows run through the same masked ops
+        as churn-down nodes and scatter back bit-unchanged.  The dense
+        oracle reads post-local-step rows of same-step peers, so neighbor
+        reads resolve through a slot map — rows inside this cohort read
+        the fresh (C, P) slice, rows outside read the cold population —
+        which keeps the trajectory bitwise without a second (C, P)
+        scatter on the hot path.  Cohort ids are re-sorted ascending
+        after selection (membership, per-row math and the scattered
+        state are order-invariant) so every gather/scatter below runs
+        with sorted unique indices."""
+        eng = self.eng
+        dl = eng.dl
+        C = self._cohort_c
+        params, opt_state, share_state, t_next, vclock, events, vmax = carry
+        W = xs_r["mix"] if "mix" in xs_r else eng._mix_static
+        act = xs_r.get("act")
+        rnd = xs_r["rnd"]
+        # --- cohort selection on the virtual clock ------------------------
+        t_min = jnp.min(t_next)
+        in_slice = t_next <= t_min + dl.async_slice_s
+        neg, cand = jax.lax.top_k(jnp.where(in_slice, -t_next, -jnp.inf), C)
+        pad = jnp.isfinite(neg).astype(jnp.float32)     # (C,) real-vs-pad
+        occupancy = jnp.sum(pad)
+        overflow = (
+            jnp.sum(in_slice.astype(jnp.int32)) - occupancy.astype(jnp.int32)
+        )
+        cids, cmask = jax.lax.sort_key_val(cand, pad)   # ascending ids
+
+        def take_rows(tree):
+            return jax.tree_util.tree_map(
+                lambda a: jnp.take(a, cids, axis=0), tree
+            )
+
+        def put_rows(tree, sub):
+            return jax.tree_util.tree_map(
+                lambda a, s: a.at[cids].set(
+                    s, indices_are_sorted=True, unique_indices=True
+                ),
+                tree, sub,
+            )
+
+        # global id -> cohort slot (-1 outside): how neighbor/partner
+        # reads find this step's fresh rows without scattering them first
+        slot_of = (
+            jnp.full((dl.n_nodes,), -1, jnp.int32)
+            .at[cids].set(jnp.arange(C, dtype=jnp.int32),
+                          indices_are_sorted=True, unique_indices=True)
+        )
+
+        act_c = jnp.take(act, cids) if act is not None else None
+        actv_c = cmask * act_c if act is not None else cmask  # fired AND up
+        # --- local step on the hot slice ----------------------------------
+        p_c, o_c = take_rows(params), take_rows(opt_state)
+        idx_c = self._node_indices(rnd, cids)                 # (L, C, B)
+        bx = jnp.take(eng._dev_x, idx_c, axis=0)
+        by = jnp.take(eng._dev_y, idx_c, axis=0)
+        p_c, o_c = eng.steps.local_train(p_c, o_c, bx, by, actv_c, rows=cids)
+        X_c = jax.vmap(tree_vector)(p_c)                      # (C, P)
+
+        def fresh_rows(ids, X_cold):
+            """Post-local-step values for global ``ids``: the fresh hot
+            slice where ``ids`` is in this cohort, ``X_cold`` otherwise."""
+            s = jnp.take(slot_of, ids)
+            X_f = jnp.take(X_c, jnp.clip(s, 0), axis=0)
+            return jnp.where((s >= 0)[..., None], X_f, X_cold)
+
+        key = jax.random.fold_in(eng.steps.base_key, rnd)
+        # event counters are gathered as int32 and widened after the
+        # gather — an O(N) astype per step would rival the gossip itself
+        ev_c = jnp.take(events, cids).astype(jnp.float32)
+        topo_c = gather_rows(W, cids)                         # (C, D) view
+        if dl.async_gossip == "pairwise":
+            slot = sample_neighbor_slots(key, topo_c, rows=cids)
+            partner = jnp.take_along_axis(topo_c.nbr, slot[:, None], axis=1)[:, 0]
+            ok = actv_c
+            if act is not None:
+                ok = ok * jnp.take(act, partner)
+            p_partner = jax.tree_util.tree_map(
+                lambda a: jnp.take(a, partner, axis=0), params
+            )
+            X_p = fresh_rows(partner, jax.vmap(tree_vector)(p_partner))
+            X2_c = jnp.where(ok[:, None] > 0, 0.5 * (X_c + X_p), X_c)
+            stale_c = ok * jnp.maximum(
+                ev_c - jnp.take(events, partner).astype(jnp.float32), 0.0
+            )
+            n_reads_c = ok
+            msg = jnp.float32(eng.n_params * np.dtype(np.float32).itemsize)
+            nbytes = jnp.sum(ok) * msg / dl.n_nodes
+            comm = self._pair_comm(partner, ok, rows=cids)
+        else:  # neighborhood: the gathered (churn-pruned) W rows
+            if act is not None:
+                Wm_c = participation_reweight_rows(topo_c, act, cids)
+                deg_eff = participation_deg_eff(W, act)
+            else:
+                Wm_c, deg_eff = topo_c, eng.steps.mean_degree
+            nbr_flat = Wm_c.nbr.reshape(-1)                   # (C·D,)
+            p_n = jax.tree_util.tree_map(
+                lambda a: jnp.take(a, nbr_flat, axis=0), params
+            )
+            Xn = fresh_rows(nbr_flat, jax.vmap(tree_vector)(p_n)).reshape(
+                X_c.shape[0], -1, X_c.shape[1]
+            )                                                  # (C, D, P)
+            mixed = jnp.einsum("cd,cdp->cp", Wm_c.w.astype(jnp.float32), Xn)
+            X2_all = Wm_c.w_self.astype(jnp.float32)[:, None] * X_c + mixed
+            X2_c = jnp.where(actv_c[:, None] > 0, X2_all, X_c)
+            live_c = topo_c.w > 0
+            if act is not None:
+                live_c = live_c & (act_c[:, None] > 0) & (
+                    jnp.take(act, topo_c.nbr, axis=0) > 0
+                )
+            live = live_c.astype(jnp.float32)
+            gap = jnp.maximum(
+                ev_c[:, None]
+                - jnp.take(events, topo_c.nbr, axis=0).astype(jnp.float32),
+                0.0,
+            )
+            cnt = jnp.maximum(live.sum(1), 1.0)
+            stale_c = actv_c * (live * gap).sum(1) / cnt
+            n_reads_c = actv_c
+            nbytes_rate = jnp.asarray(
+                deg_eff * X_c.shape[1] * jnp.dtype(X_c.dtype).itemsize,
+                jnp.float32,
+            )
+            nbytes = nbytes_rate * jnp.sum(actv_c) / dl.n_nodes
+            if eng.steps.lat is not None:
+                comm = eng.steps.cohort_comm_time(
+                    cids, Wm_c.nbr, (Wm_c.w > 0).astype(jnp.float32),
+                    nbytes_rate, deg_eff,
+                )
+            else:
+                comm = jnp.zeros((C,), jnp.float32)
+        # (share_state is untouched: semantics='async' is validated to
+        # full sharing, whose state is the empty pytree)
+        p2_c = jax.vmap(lambda v: tree_unvector(v, eng.template))(
+            X2_c.astype(X_c.dtype)
+        )
+        p2_c = node_where(actv_c, p2_c, p_c)
+        # the one (C, P)-scale scatter of the step: post-mix params (which
+        # are the post-local params on masked rows) and opt state together
+        params = put_rows(params, p2_c)
+        opt_state = put_rows(opt_state, o_c)
+        # --- clock advance on the gathered rows ---------------------------
+        dur_c = jnp.take(eng.steps.compute_node, cids) + comm
+        t_c = jnp.take(t_next, cids)
+        vclock = vclock.at[cids].set(
+            jnp.where(cmask > 0, t_c, jnp.take(vclock, cids)),
+            indices_are_sorted=True, unique_indices=True,
+        )
+        t_next = t_next.at[cids].add(
+            cmask * dur_c, indices_are_sorted=True, unique_indices=True
+        )
+        events = events.at[cids].add(
+            actv_c.astype(jnp.int32),
+            indices_are_sorted=True, unique_indices=True,
+        )
+        # running vclock max carried as a scalar: identical to
+        # jnp.max(vclock) (max is exact) without the O(N) reduce per step
+        vmax = jnp.maximum(
+            vmax, jnp.max(jnp.where(cmask > 0, t_c, -jnp.inf))
+        )
+        out = (
+            nbytes,
+            vmax,
+            jnp.sum(actv_c),
+            jnp.sum(stale_c),
+            jnp.sum(n_reads_c),
+            jnp.max(stale_c),
+            occupancy,
+            overflow,
+        )
+        return (
+            params, opt_state, share_state, t_next, vclock, events, vmax
+        ), out
+
     def _chunk_fn(self, params, opt_state, share_state, t_next, vclock, events, xs):
+        if self._cohort_c > 0:
+            carry, outs = jax.lax.scan(
+                self._cohort_gs,
+                (params, opt_state, share_state, t_next, vclock, events,
+                 jnp.max(vclock)),
+                xs,
+            )
+            return carry[:6] + outs
         carry, outs = jax.lax.scan(
             self._cohort, (params, opt_state, share_state, t_next, vclock, events), xs
         )
@@ -610,20 +869,98 @@ class AsyncScheduler(Scheduler):
             self._t_next, self._vclock, self._events, xs,
         )
         (eng.params, eng.opt_state, eng.share_state,
-         self._t_next, self._vclock, self._events,
-         nbytes, t_virt, fired, stale_sum, stale_n, stale_max) = out
+         self._t_next, self._vclock, self._events) = out[:6]
+        nbytes, t_virt, fired, stale_sum, stale_n, stale_max = out[6:12]
         eng.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
-        # the virtual clock is a running maximum, not a per-cohort sum
-        eng.sim_time_s = float(np.asarray(t_virt)[-1])
-        self._fired_total += float(np.asarray(fired, np.float64).sum())
+        # the virtual clock is a running maximum, not a per-cohort sum —
+        # fp32-exact (max selects, never rounds) — plus the rebase offset
+        eng.sim_time_s = float(np.asarray(t_virt)[-1]) + self._t_offset
+        self._fired_total += int(np.asarray(fired, np.float64).sum())
         self._stale_sum += float(np.asarray(stale_sum, np.float64).sum())
         self._stale_n += float(np.asarray(stale_n, np.float64).sum())
         self._stale_max = max(self._stale_max, float(np.asarray(stale_max).max()))
+        if self._cohort_c > 0:
+            occ = np.asarray(out[12], np.float64)
+            self._occ_sum += float(occ.sum())
+            self._occ_steps += int(occ.shape[0])
+            self._overflow_total += int(np.asarray(out[13], np.int64).sum())
+        self._maybe_rebase()
+
+    def _maybe_rebase(self) -> None:
+        """fp32 virtual-clock magnitude hygiene.  ``t_next`` advances by
+        running *sums* (``+= dur``), which — unlike the running maxima the
+        metrics take — lose precision as the clock grows: at t ~ 2^16 s
+        the fp32 ulp is ~2^-7 s and sub-ms event durations are absorbed.
+        Once every pending event is past ``_REBASE_T_S``, subtract one
+        fp32-representable shift from ``t_next``/``vclock`` on device and
+        carry it in the float64 ``_t_offset`` (added back in
+        ``sim_time_s``/metrics).  Below the threshold nothing changes —
+        trajectories there are bitwise identical to the unrebased code."""
+        t_min = float(np.asarray(self._t_next).min())
+        if t_min < _REBASE_T_S:
+            return
+        shift = float(np.float32(t_min))
+        self._t_offset += shift
+        s = jnp.float32(shift)
+        self._t_next = self._t_next - s
+        self._vclock = self._vclock - s
+
+    # -- population-scale memory accounting --------------------------------
+    def memory_model(self) -> Dict:
+        """Analytic bytes of the async hot/cold memory split — the
+        recorded, N-independence-checkable quantity behind the
+        ``bench_population`` gate.  Hot = the per-step working set the
+        cohort path touches (O(C·(d+1)·P) gossip operands + the (L, C, B)
+        batch slice); cold = the device-resident population state
+        (O(N·P) params + O(N) clocks) that is only gathered/scattered."""
+        eng = self.eng
+        dl = eng.dl
+        n, p = dl.n_nodes, eng.n_params
+        c = self._cohort_c if self._cohort_c > 0 else n
+        topo = eng._mix_static
+        if isinstance(topo, SparseTopology):
+            d = int(topo.dmax)
+            topo_bytes = int(
+                topo.nbr.nbytes + topo.w.nbytes + topo.w_self.nbytes
+            )
+        elif topo is None:  # dynamic: (N, degree) tables staged per round
+            d = int(dl.degree)
+            topo_bytes = n * d * 8 + n * 4
+        else:  # dense (N, N) W — the cohort path rejects this at validate
+            d = n
+            topo_bytes = 4 * n * n
+        feat_bytes = int(eng._dev_x.nbytes // max(eng._dev_x.shape[0], 1)) + int(
+            eng._dev_y.nbytes // max(eng._dev_y.shape[0], 1)
+        )
+        hot = {
+            "gossip_gather_bytes": c * (1 + d) * p * 4,  # X_c + neighbor rows
+            "work_vectors_bytes": 2 * c * p * 4,         # X2 + scatter temp
+            "batch_bytes": dl.local_steps * c * dl.batch_size * feat_bytes,
+            "topology_rows_bytes": c * (d * 8 + 4),      # nbr+w rows, w_self
+        }
+        hot["total"] = int(sum(hot.values()))
+        cold = {
+            "population_params_bytes": n * p * 4,
+            "clock_bytes": n * (4 + 4 + 4),  # t_next / vclock / events
+            "topology_bytes": topo_bytes,
+        }
+        cold["total"] = int(sum(cold.values()))
+        return {
+            "cohort_capacity": c,
+            "n_nodes": n,
+            "n_params": p,
+            "dmax": d,
+            "hot": hot,
+            "cold": cold,
+        }
 
     def extra_metrics(self) -> Dict:
-        events = np.asarray(self._events, np.float64)
-        vclock = np.asarray(self._vclock, np.float64)
-        return {
+        # int64 host totals: the int32 per-node counters are safe (no node
+        # fires 2^31 events) but their *population sum* overflows int32 at
+        # N >= 100k over long horizons
+        events = np.asarray(self._events, np.int64)
+        vclock = np.asarray(self._vclock, np.float64) + self._t_offset
+        m = {
             "semantics": "async",
             "events_total": int(events.sum()),
             "events_min": int(events.min()),
@@ -634,6 +971,11 @@ class AsyncScheduler(Scheduler):
             "staleness_mean": self._stale_sum / max(self._stale_n, 1.0),
             "staleness_max": self._stale_max,
         }
+        if self._cohort_c > 0:
+            m["cohort_capacity"] = self._cohort_c
+            m["cohort_occupancy_mean"] = self._occ_sum / max(self._occ_steps, 1)
+            m["cohort_overflow_total"] = self._overflow_total
+        return m
 
 
 def make_scheduler(eng) -> Scheduler:

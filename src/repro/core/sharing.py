@@ -228,6 +228,38 @@ def participation_reweight_sparse(topo: SparseTopology, active, *,
     return SparseTopology(topo.nbr, w, w_self), deg_eff
 
 
+def participation_deg_eff(topo: SparseTopology, active):
+    """The ``deg_eff`` scalar of :func:`participation_reweight_sparse`
+    alone — same counting expressions, no reweighted table built.  The
+    cohort gather/scatter path reweights only its gathered rows
+    (:func:`participation_reweight_rows`) but byte accounting needs the
+    same *global* live-edges-per-active-node scalar as the dense oracle;
+    O(N·D), no P factor."""
+    m = active.astype(jnp.float32)
+    pair = m[:, None] * jnp.take(m, topo.nbr, axis=0)
+    w = topo.w.astype(jnp.float32) * pair
+    edges = jnp.sum((w > 0).astype(jnp.float32))
+    alive = m.sum()
+    return edges / jnp.maximum(alive, 1.0)
+
+
+def participation_reweight_rows(topo_rows: SparseTopology, active, rows):
+    """Row-subset :func:`participation_reweight_sparse`: churn-reweight a
+    gathered (C, D) cohort view (``topology.gather_rows``) whose ``nbr``
+    entries are global ids into the full (N,) ``active`` mask.  Each row's
+    arithmetic is the expression-for-expression gather of the dense
+    reweight's row, so the result is its bitwise (C,)-row slice.  Returns
+    the reweighted view only — for the global ``deg_eff`` scalar use
+    :func:`participation_deg_eff` (it must count *all* live edges, not the
+    cohort's)."""
+    m = active.astype(jnp.float32)
+    m_r = jnp.take(m, rows)
+    pair = m_r[:, None] * jnp.take(m, topo_rows.nbr, axis=0)   # (C, D)
+    w = topo_rows.w.astype(jnp.float32) * pair
+    w_self = 1.0 - w.sum(-1)                                   # down row -> 1.0
+    return SparseTopology(topo_rows.nbr, w, w_self)
+
+
 # ---------------------------------------------------------------------------
 # strategies
 # ---------------------------------------------------------------------------

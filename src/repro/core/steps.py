@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mixing import ShardedDense, ShardedTopology
-from repro.core.network import node_round_times
+from repro.core.network import gathered_round_times, node_round_times
 from repro.core.sharing import participation_reweight, participation_reweight_sparse
 from repro.core.topology import SparseTopology
 from repro.optim.optimizers import apply_updates
@@ -75,13 +75,23 @@ class RoundSteps:
     goodput: Optional[jnp.ndarray] = None
 
     # ------------------------------------------------------------------
-    def local_train(self, params, opt_state, bx, by, active, shard=None):
+    def local_train(self, params, opt_state, bx, by, active, shard=None,
+                    rows=None):
+        """``rows`` (traced global node ids) marks a gathered row subset —
+        the cohort path's (C, ...) hot set — and redirects the per-node
+        static vectors (lr_scales) through the same gather; every other
+        operand is already row-stacked by the caller."""
         def node_grad(p, x, y):
             return jax.grad(self.loss_fn)(p, x, y)
 
         if self.lr_scales is not None:
-            # sharded: slice this device's block of the per-node multipliers
-            lrs = shard.local(self.lr_scales) if shard is not None else self.lr_scales
+            if rows is not None:
+                lrs = jnp.take(self.lr_scales, rows)
+            elif shard is not None:
+                # sharded: this device's block of the per-node multipliers
+                lrs = shard.local(self.lr_scales)
+            else:
+                lrs = self.lr_scales
         # local_steps is small and static: unroll instead of nesting a scan
         for s in range(bx.shape[0]):
             grads = jax.vmap(node_grad)(params, bx[s], by[s])
@@ -143,6 +153,25 @@ class RoundSteps:
             return node_t
         t = jnp.max(node_t)
         return shard.pmax(t) if shard is not None else t
+
+    # ------------------------------------------------------------------
+    def cohort_comm_time(self, rows, nbr, live, nbytes, deg_eff):
+        """Per-event comm seconds for a *gathered cohort* — the (C,)-row
+        slice of ``round_time(..., reduce='none') - compute_node`` that the
+        dense async path computes over all N rows, replicated expression
+        for expression (per-edge bytes, the (ct + comm) - ct roundtrip) so
+        the cohort trajectory matches the dense oracle bitwise.
+
+        rows: (C,) global node ids; nbr: their (C, D) global neighbor ids;
+        live: (C, D) {0,1} live-edge mask (post churn reweight).
+        """
+        per_edge = jnp.where(deg_eff > 0, nbytes / jnp.maximum(deg_eff, 1e-9), 0.0)
+        ct = jnp.take(self.compute_node, rows)
+        node_t = gathered_round_times(
+            self.lat, self.goodput, rows, nbr, live, per_edge, ct,
+            self.parallel_sends,
+        )
+        return node_t - ct  # caller adds compute back, like the dense path
 
     # ------------------------------------------------------------------
     def train_and_mix(self, params, opt_state, share_state, bx, by, W, active,

@@ -200,6 +200,26 @@ def circulant_offsets(n: int, degree: int) -> List[int]:
     return offs
 
 
+def circulant_neighbor_table(n: int, degree: int) -> np.ndarray:
+    """(N, degree) int32 neighbor table of the d-regular circulant graph,
+    built directly from the offsets — O(N·d) work and memory, never the
+    (N, N) adjacency.  Rows are sorted ascending, exactly the order
+    :func:`neighbor_table` produces from ``Graph.regular_circulant(n, d)``
+    (bitwise-equal tables; property-tested), which is what lets the
+    population-scale engine instantiate 100k+-node overlays that the dense
+    ``Graph`` constructor cannot hold."""
+    assert 0 < degree < n
+    idx = np.arange(n, dtype=np.int64)[:, None]
+    cols = []
+    for o in circulant_offsets(n, degree):
+        cols.append((idx + o) % n)
+        if (2 * o) % n != 0:  # the antipodal offset is its own inverse
+            cols.append((idx - o) % n)
+    nbr = np.concatenate(cols, axis=1)
+    nbr.sort(axis=1)
+    return nbr.astype(np.int32)
+
+
 def random_regular_neighbors(n: int, degree: int, seed: int) -> np.ndarray:
     """(N, degree) int32 neighbor table of a random simple d-regular graph.
 
@@ -321,6 +341,15 @@ class SparseTopology:
         return SparseTopology(nbr, w, w_self)
 
     @staticmethod
+    def regular_circulant(n: int, degree: int) -> "SparseTopology":
+        """MH-weighted d-regular circulant overlay built without the (N, N)
+        adjacency — bitwise-equal to ``from_graph(Graph.regular_circulant)``
+        but O(N·d), the population-scale (100k+ node) constructor."""
+        nbr = circulant_neighbor_table(n, degree)
+        w, w_self = mh_weight_table(nbr, np.ones(nbr.shape, bool))
+        return SparseTopology(nbr, w, w_self)
+
+    @staticmethod
     def from_neighbors(nbr: np.ndarray, valid: Optional[np.ndarray] = None) -> "SparseTopology":
         """MH-weighted sparse form from a padded neighbor table alone."""
         if valid is None:
@@ -408,6 +437,21 @@ def decompose_slot_permutations(topo: "SparseTopology") -> Optional["SparseTopol
         return SparseTopology(new_nbr, new_w, np.asarray(topo.w_self).copy())
     finally:
         sys.setrecursionlimit(limit)
+
+
+def gather_rows(topo: "SparseTopology", rows) -> "SparseTopology":
+    """Cohort row view of a padded topology: gather the (C, D) nbr/w and
+    (C,) w_self rows of ``rows`` (traced global node ids).  ``nbr`` entries
+    stay *global* ids — the cohort path resolves them against the full
+    population state — so this is a view change, not a re-indexing.
+    Traced/jittable (the population-scale hot-set gather)."""
+    import jax.numpy as jnp
+
+    return SparseTopology(
+        jnp.take(topo.nbr, rows, axis=0),
+        jnp.take(topo.w, rows, axis=0),
+        jnp.take(topo.w_self, rows, axis=0),
+    )
 
 
 def sample_neighbor_slots(key, topo: "SparseTopology", rows=None):

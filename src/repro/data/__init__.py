@@ -1,3 +1,3 @@
 from repro.data.datasets import SyntheticImages, SyntheticLM, make_dataset
 from repro.data.partition import iid_partition, sharding_partition
-from repro.data.loader import NodeBatcher
+from repro.data.loader import NodeBatcher, node_batch_indices

@@ -1,6 +1,19 @@
 """Per-node batching: produces node-stacked batches (N, B, ...) for the
 vmapped local-training step.  Seeded, stateless (round index -> batch), so
 runs are reproducible and resumable from a checkpoint round.
+
+Two index derivations coexist (``DLConfig.batch_keying``):
+
+* ``"stream"`` — the original host path: one numpy PCG64 stream per round
+  fills a (steps, N, B) uniform block that is gathered/stacked on host and
+  shipped to the device each chunk.  O(N·B) host work + transfer per round.
+* ``"node"`` — :func:`node_batch_indices`: each (round, node) pair owns an
+  independent ``jax.random`` stream (``fold_in`` by round then by global
+  node id), so indices are derived **on device** for any subset of rows.
+  A gathered cohort of C rows draws bitwise the same samples it would as
+  part of the full population — the property the population-scale async
+  path needs — and the host stages nothing.  The two keyings draw
+  *different* (equally valid) sample streams; a given run must pick one.
 """
 from __future__ import annotations
 
@@ -69,3 +82,38 @@ class NodeBatcher:
 
     def test_batch(self, max_n: int = 512):
         return self.x[:max_n], self.y[:max_n]
+
+    def device_tables(self):
+        """(lens (N,) float32, parts_pad (N, maxlen) int32) as jax arrays —
+        the device-resident partition tables ``node_batch_indices`` samples
+        from under ``batch_keying='node'``."""
+        import jax.numpy as jnp
+
+        return (
+            jnp.asarray(self._lens.astype(np.float32)),
+            jnp.asarray(self._parts_pad.astype(np.int32)),
+        )
+
+
+def node_batch_indices(base_key, round_idx, ids, lens, parts_pad,
+                       local_steps: int, batch_size: int):
+    """(L, n, B) int32 global sample indices for the given global node
+    ids, derived entirely on device.  Each (round, node) pair owns an
+    independent PRNG stream — ``fold_in(fold_in(base_key, round), id)`` —
+    so any row subset (a gathered cohort, a shard, the full arange(N))
+    draws bitwise the same samples: sampling is a pure function of
+    (seed, round, global id, slot), never of which rows happen to be
+    materialized.  Uniform draws are float32 in [0, 1); truncation toward
+    zero maps them onto each node's padded partition row."""
+    import jax
+    import jax.numpy as jnp
+
+    rk = jax.random.fold_in(base_key, round_idx)
+    keys = jax.vmap(lambda i: jax.random.fold_in(rk, i))(ids)
+    u = jax.vmap(
+        lambda k: jax.random.uniform(k, (local_steps, batch_size))
+    )(keys)                                            # (n, L, B)
+    lens_r = jnp.take(lens, ids)
+    loc = (u * lens_r[:, None, None]).astype(jnp.int32)
+    idx = parts_pad[ids[:, None, None], loc]           # (n, L, B)
+    return jnp.moveaxis(idx, 0, 1)

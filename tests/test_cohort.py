@@ -1,0 +1,281 @@
+"""Population-scale cohort activation (``DLConfig.cohort_capacity``):
+the async scheduler's gather/scatter path must be *bitwise* equivalent to
+the dense async oracle whenever the capacity covers every firing node
+(C = N), across the scenario axes (stragglers, churn, network model,
+pairwise gossip, dynamic topology); overflow-carry must defer — never
+drop — excess firings so homogeneous nodes stay fair; the graph-free
+circulant neighbor table must match the dense ``Graph`` constructor
+bit-for-bit; the fp64 virtual-clock rebase must not perturb
+trajectories; and the device-side per-node batch keying must draw the
+same samples for any gathered row subset.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DLConfig, RoundEngine
+from repro.core.topology import (
+    Graph,
+    SparseTopology,
+    circulant_neighbor_table,
+)
+from repro.data import NodeBatcher, make_dataset, sharding_partition
+from repro.data.loader import node_batch_indices
+from repro.optim import make_optimizer
+
+SHAPE = (2, 2, 1)
+
+
+def _loss(p, x, y):
+    t = x.reshape(x.shape[0], -1).mean(0)
+    return jnp.mean((p["w"].reshape(-1, t.shape[0]) - t) ** 2)
+
+
+def _acc(p, x, y):
+    return -_loss(p, x, y)
+
+
+def _engine(p_dim: int = 8, **kw) -> RoundEngine:
+    n = kw.setdefault("n_nodes", 12)
+    ds = make_dataset("cifar10", n_train=256, n_test=32, shape=SHAPE, sigma=2.0)
+    parts = sharding_partition(ds.train_y, n, 2, seed=0)
+    batcher = NodeBatcher(ds.train_x, ds.train_y, parts, batch_size=4, seed=0)
+    kw.setdefault("chunk_rounds", 4)
+    kw.setdefault("eval_every", 6)
+    kw.setdefault("semantics", "async")
+    kw.setdefault("compute_time_s", 1e-3)
+    kw.setdefault("batch_keying", "node")
+    dl = DLConfig(local_steps=1, batch_size=4, **kw)
+    init = lambda key: {"w": jax.random.normal(key, (p_dim,))}
+    return RoundEngine(dl, init, _loss, _acc, make_optimizer("sgd", 0.05), batcher)
+
+
+def _w(e):
+    return np.asarray(jax.vmap(lambda p: p["w"])(e.params))
+
+
+# ---------------------------------------------------------------------------
+# cohort == dense async oracle (bitwise) whenever C covers every firing node
+# ---------------------------------------------------------------------------
+
+SCENARIOS = {
+    "base": dict(topology="regular", degree=4),
+    "stragglers": dict(topology="regular", degree=4, straggler_frac=0.5,
+                       straggler_factor=3.0),
+    "churn": dict(topology="regular", degree=4, participation=0.7),
+    "churn_lan": dict(topology="regular", degree=4, participation=0.7,
+                      network="lan"),
+    "pairwise_churn": dict(topology="regular", degree=4,
+                           async_gossip="pairwise", participation=0.8),
+    "dynamic": dict(topology="dynamic", degree=4),
+}
+
+
+class TestCohortEquivalence:
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS), ids=sorted(SCENARIOS))
+    def test_full_capacity_cohort_matches_dense_oracle(self, scenario):
+        """C = N: every step's firing set fits the cohort, so the
+        gather -> step -> scatter round trip must reproduce the dense
+        (N, ...) path bit-for-bit — params, event counts, staleness,
+        virtual clocks, bytes."""
+        kw = SCENARIOS[scenario]
+        dense = _engine(rounds=12, seed=3, **kw)
+        coh = _engine(rounds=12, seed=3, cohort_capacity=12, **kw)
+        dense.run(log=False)
+        coh.run(log=False)
+        np.testing.assert_array_equal(_w(dense), _w(coh))
+        np.testing.assert_array_equal(np.asarray(dense.scheduler._events),
+                                      np.asarray(coh.scheduler._events))
+        assert coh.bytes_sent == dense.bytes_sent
+        assert coh.sim_time_s == pytest.approx(dense.sim_time_s, rel=1e-9)
+        md, mc = dense.history[-1], coh.history[-1]
+        for k in ("events_total", "staleness_mean", "vclock_max_s",
+                  "vclock_median_s"):
+            assert mc[k] == pytest.approx(md[k], rel=1e-6), k
+
+    def test_cohort_uses_node_batch_keying_samples(self):
+        """Guard: the equivalence above is only meaningful because BOTH
+        sides run batch_keying='node' — the dense oracle under 'stream'
+        keying draws a different (equally valid) sample stream."""
+        a = _engine(rounds=8, seed=0, topology="regular", degree=4)
+        b = _engine(rounds=8, seed=0, topology="regular", degree=4,
+                    batch_keying="stream")
+        a.run(log=False)
+        b.run(log=False)
+        assert not np.array_equal(_w(a), _w(b))
+
+
+# ---------------------------------------------------------------------------
+# overflow-carry: capacity pressure defers firings, never drops them
+# ---------------------------------------------------------------------------
+
+class TestOverflowCarry:
+    def test_homogeneous_nodes_stay_fair_under_capacity_pressure(self):
+        """N=12 homogeneous nodes at C=4: every step 12 nodes tie on the
+        virtual clock but only the 4 earliest fire; the other 8 keep
+        their t_next and fire in later steps.  Over 12 steps each node
+        must fire exactly 12*4/12 = 4 events — overflow carries, it does
+        not starve."""
+        e = _engine(rounds=12, seed=1, topology="regular", degree=4,
+                    cohort_capacity=4)
+        e.run(log=False)
+        events = np.asarray(e.scheduler._events)
+        np.testing.assert_array_equal(events, np.full(12, 4))
+        m = e.scheduler.extra_metrics()
+        assert m["cohort_occupancy_mean"] == pytest.approx(4.0)
+        assert m["cohort_overflow_total"] > 0
+
+    def test_overflow_preserves_event_conservation(self):
+        """Total fired events under capacity pressure equals occupancy
+        summed over steps (nothing double-fires, nothing is lost)."""
+        e = _engine(rounds=12, seed=2, topology="regular", degree=4,
+                    cohort_capacity=5, straggler_frac=0.25,
+                    straggler_factor=4.0)
+        e.run(log=False)
+        m = e.scheduler.extra_metrics()
+        assert m["events_total"] == int(np.asarray(e.scheduler._events).sum())
+        assert m["events_total"] + m["cohort_overflow_total"] >= 12
+
+
+# ---------------------------------------------------------------------------
+# graph-free circulant table == dense Graph constructor, and 100k+ init
+# ---------------------------------------------------------------------------
+
+class TestPopulationTopology:
+    @pytest.mark.parametrize("n,deg", [(12, 4), (13, 4), (16, 6), (9, 2),
+                                       (8, 7)])
+    def test_circulant_table_matches_dense_graph(self, n, deg):
+        direct = circulant_neighbor_table(n, deg)
+        via_graph = SparseTopology.from_graph(Graph.regular_circulant(n, deg))
+        np.testing.assert_array_equal(direct, via_graph.nbr)
+
+    @pytest.mark.parametrize("n,deg", [(12, 4), (13, 4), (16, 6)])
+    def test_sparse_topology_direct_constructor_bitwise(self, n, deg):
+        a = SparseTopology.regular_circulant(n, deg)
+        b = SparseTopology.from_graph(Graph.regular_circulant(n, deg))
+        np.testing.assert_array_equal(a.nbr, b.nbr)
+        np.testing.assert_array_equal(a.w, b.w)
+        np.testing.assert_array_equal(a.w_self, b.w_self)
+
+    def test_population_engine_initializes_graph_free(self):
+        """n_nodes above the dense-graph ceiling must construct via the
+        O(N·d) circulant table and run a chunk to finite params."""
+        n = 5000
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(n, *SHAPE)).astype(np.float32)
+        y = rng.integers(0, 2, size=(n,)).astype(np.int32)
+        parts = np.array_split(np.arange(n), n)
+        dl = DLConfig(n_nodes=n, topology="regular", degree=4,
+                      semantics="async", compute_time_s=1e-3,
+                      cohort_capacity=64, batch_keying="node",
+                      chunk_rounds=4, eval_every=10_000, batch_size=4,
+                      local_steps=1, rounds=4)
+        batcher = NodeBatcher(x, y, parts, dl.batch_size, seed=0)
+        init = lambda key: {"w": jax.random.normal(key, (8,))}
+        e = RoundEngine(dl, init, _loss, _acc, make_optimizer("sgd", 0.05),
+                        batcher)
+        e.scheduler.run_span(0, 4)
+        jax.block_until_ready(e.params)
+        assert np.isfinite(_w(e)).all()
+        mm = e.scheduler.memory_model()
+        assert mm["hot"]["total"] < mm["cold"]["total"]
+
+
+# ---------------------------------------------------------------------------
+# fp64 virtual-clock rebase: long-horizon time must not perturb anything
+# ---------------------------------------------------------------------------
+
+class TestClockRebase:
+    def test_rebase_crossing_keeps_cohort_equal_to_dense(self):
+        """compute_time_s large enough that the virtual clock crosses the
+        rebase threshold mid-run: trajectories and the (rebased) clock
+        metrics must stay identical between cohort and dense paths."""
+        kw = dict(topology="regular", degree=4, compute_time_s=30_000.0,
+                  straggler_frac=0.25, straggler_factor=2.0)
+        dense = _engine(rounds=12, seed=5, **kw)
+        coh = _engine(rounds=12, seed=5, cohort_capacity=12, **kw)
+        dense.run(log=False)
+        coh.run(log=False)
+        np.testing.assert_array_equal(_w(dense), _w(coh))
+        assert coh.sim_time_s == pytest.approx(dense.sim_time_s, rel=1e-12)
+        assert dense.sim_time_s > 65536.0  # actually crossed the threshold
+
+
+# ---------------------------------------------------------------------------
+# device-side batch keying: subset-consistent, partition-respecting
+# ---------------------------------------------------------------------------
+
+class TestNodeBatchKeying:
+    def _tables(self, n=12):
+        ds = make_dataset("cifar10", n_train=256, n_test=32, shape=SHAPE,
+                          sigma=2.0)
+        parts = sharding_partition(ds.train_y, n, 2, seed=0)
+        b = NodeBatcher(ds.train_x, ds.train_y, parts, batch_size=4, seed=0)
+        return b, b.device_tables()
+
+    def test_gathered_subset_draws_bitwise_same_samples(self):
+        """The cohort-equivalence keystone: indices are a pure function of
+        (key, round, global id, slot), so a gathered subset of rows draws
+        exactly what those rows draw inside the full population."""
+        _, (lens, pad) = self._tables()
+        key = jax.random.key(7)
+        full = np.asarray(node_batch_indices(key, 5, jnp.arange(12), lens,
+                                             pad, 2, 4))
+        ids = jnp.asarray([1, 3, 4, 9, 11])
+        sub = np.asarray(node_batch_indices(key, 5, ids, lens, pad, 2, 4))
+        np.testing.assert_array_equal(full[:, np.asarray(ids)], sub)
+
+    def test_indices_stay_inside_each_nodes_partition(self):
+        b, (lens, pad) = self._tables()
+        key = jax.random.key(0)
+        idx = np.asarray(node_batch_indices(key, 0, jnp.arange(12), lens,
+                                            pad, 3, 4))
+        for i, part in enumerate(b.parts):
+            assert np.isin(idx[:, i], part).all()
+
+    def test_rounds_draw_distinct_streams(self):
+        _, (lens, pad) = self._tables()
+        key = jax.random.key(0)
+        a = np.asarray(node_batch_indices(key, 0, jnp.arange(12), lens, pad, 2, 4))
+        c = np.asarray(node_batch_indices(key, 1, jnp.arange(12), lens, pad, 2, 4))
+        assert not np.array_equal(a, c)
+
+
+# ---------------------------------------------------------------------------
+# DLConfig.validate: the cohort/batch-keying knob matrix
+# ---------------------------------------------------------------------------
+
+class TestCohortValidate:
+    def _bad(self, match, **kw):
+        with pytest.raises(ValueError, match=match):
+            DLConfig(**kw).validate()
+
+    def test_valid_cohort_config(self):
+        DLConfig(semantics="async", topology="regular", cohort_capacity=4,
+                 batch_keying="node", compute_time_s=0.1).validate()
+        DLConfig(batch_keying="node").validate()
+
+    def test_cohort_requires_async(self):
+        self._bad("async", cohort_capacity=4, batch_keying="node")
+        self._bad("async", semantics="local", cohort_capacity=4,
+                  batch_keying="node")
+
+    def test_cohort_capacity_domain(self):
+        self._bad(">= 0", semantics="async", cohort_capacity=-1)
+        self._bad("exceeds", semantics="async", n_nodes=8, cohort_capacity=9,
+                  batch_keying="node")
+
+    def test_cohort_needs_sparse_overlay(self):
+        self._bad("sparse", semantics="async", topology="fully",
+                  cohort_capacity=4, batch_keying="node")
+        self._bad("sparse", semantics="async", topology="regular",
+                  mixing="dense", cohort_capacity=4, batch_keying="node")
+
+    def test_cohort_requires_node_batch_keying(self):
+        self._bad("batch_keying='node'", semantics="async", cohort_capacity=4)
+
+    def test_batch_keying_domain(self):
+        self._bad("unknown batch_keying", batch_keying="host")
+        self._bad("chunk", batch_keying="node", chunk_rounds=0)
+        self._bad("single-host", batch_keying="node", shard_devices=2)
