@@ -92,6 +92,14 @@ def dl_experiment(
         "history": runs[0]["history"],
         "runs": len(runs),
     }
+    # fault/retry/recovery counters (core.faults.STAT_KEYS, merged into
+    # history records whenever a fault axis is active) are part of the
+    # results schema: promote the final record's running totals
+    final = runs[0]["history"][-1]
+    out.update({k: final[k] for k in (
+        "faults_injected", "faults_detected", "faults_survived",
+        "faults_recovered", "retry_total", "recovery_bytes",
+    ) if k in final})
     return out
 
 

@@ -39,6 +39,8 @@ from repro.core.sharing import (
     TopKSharing,
     ChocoSGD,
     QuantizedSharing,
+    edge_reweight,
+    edge_reweight_sparse,
     make_sharing,
     participation_deg_eff,
     participation_reweight,
@@ -46,6 +48,7 @@ from repro.core.sharing import (
     participation_reweight_sparse,
     sparse_aggregate,
 )
+from repro.core.faults import FaultPlan
 from repro.core.network import (
     LinkSpec,
     Mapping,

@@ -61,7 +61,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_lib
 from repro.core import sharing as sharing_lib
+from repro.core.faults import FaultPlan
 from repro.core.mixing import NodeShard, PermuteSchedule
 from repro.core.network import (
     NetworkModel,
@@ -147,6 +149,15 @@ class DLConfig:
     # --- scenario axes -----------------------------------------------------
     participation: float = 1.0  # P(node active in a round); <1 models churn
     churn_machines: int = 0    # >0: correlated churn — machines fail, not nodes
+    # message-level fault injection (core.faults.FaultPlan): per-edge loss,
+    # crash/restart schedules, latency spikes, payload corruption — None
+    # disables the fault axis entirely (zero overhead in the scanned body)
+    faults: Optional[FaultPlan] = None
+    # Bonawitz seed recovery: lets secure=True run under churn — surviving
+    # co-neighbors reveal dropped pairs' seed material so the receiver can
+    # subtract the uncancelled PRF masks (costs a second mask pass plus
+    # SEED_SHARE_BYTES per dropped-pair triple)
+    secure_recovery: bool = False
     network: str = "none"       # simulated network: none | lan | wan
     compute_time_s: float = 0.0  # base per-node local compute in the time model
     straggler_factor: float = 1.0  # stragglers run at factor x compute_time_s
@@ -202,10 +213,15 @@ class DLConfig:
             if self.topology == "dynamic":
                 bad("secure=True needs a static graph (the pairwise-mask "
                     "PRF schedule is per-edge); topology='dynamic' has none")
-            if self.participation < 1.0 or self.churn_machines > 0:
-                bad("secure=True is incompatible with churn (participation "
-                    "< 1 or churn_machines > 0): a dropped node's pairwise "
-                    "masks would not cancel (seed recovery is not modeled)")
+            crashes = self.faults is not None and bool(self.faults.crashes)
+            if (
+                self.participation < 1.0 or self.churn_machines > 0 or crashes
+            ) and not self.secure_recovery:
+                bad("secure=True under churn (participation < 1, "
+                    "churn_machines > 0, or FaultPlan crash schedules) "
+                    "needs secure_recovery=True: without the Bonawitz "
+                    "seed-recovery pass a dropped node's pairwise masks "
+                    "would not cancel")
             if self.payload == "on" or self.payload_quant or self.randk_sampler != "uniform":
                 bad("payload/payload_quant/randk_sampler do not compose "
                     "with secure=True (masked messages are full fp32 "
@@ -223,6 +239,33 @@ class DLConfig:
                 "randomk", "random"
             ):
                 bad("randk_sampler applies to sharing='randomk' only")
+        # -- fault injection -------------------------------------------------
+        if self.secure_recovery and not self.secure:
+            bad("secure_recovery=True is the seed-recovery pass of secure "
+                "aggregation; it needs secure=True")
+        if self.faults is not None:
+            self.faults.validate()
+            for node, _, _ in self.faults.crashes:
+                if node >= self.n_nodes:
+                    bad(f"FaultPlan crash node {node} out of range for "
+                        f"n_nodes={self.n_nodes}")
+            if self.chunk_rounds <= 0:
+                bad("faults run on the scanned chunk path only "
+                    "(chunk_rounds > 0); the legacy per-round dispatch "
+                    "predates the fault axis")
+            if self.shard_devices > 0:
+                bad("faults are single-host for now (per-edge draws and "
+                    "the rollback guard are not distributed); drop "
+                    "shard_devices or the FaultPlan")
+            if self.cohort_capacity > 0:
+                bad("faults do not compose with cohort_capacity yet (the "
+                    "gather/scatter cohort body has no fault hooks); use "
+                    "the dense async path")
+            if self.secure and self.faults.msg_loss > 0:
+                bad("secure=True with FaultPlan.msg_loss > 0 is not "
+                    "modeled: per-edge loss would need per-edge mask "
+                    "recovery (secure_recovery covers node-level churn "
+                    "and crashes; latency spikes and corruption compose)")
         # -- multi-device constraints --------------------------------------
         if self.shard_devices > 0:
             if self.chunk_rounds <= 0:
@@ -384,7 +427,9 @@ class RoundEngine:
         self.sampler = PeerSampler(dl.n_nodes, dl.degree, dl.seed) if dl.topology == "dynamic" else None
         if dl.secure:
             assert self.graph is not None, "secure aggregation needs a static graph"
-            self.sharing = SecureAggregation(self.graph.adj)
+            self.sharing = SecureAggregation(
+                self.graph.adj, recovery=dl.secure_recovery
+            )
         else:
             sparsified = sharing_lib.strategy_takes_budget(dl.sharing)
             kw = {"gamma": dl.choco_gamma} if dl.sharing.startswith("choco") else {}
@@ -523,6 +568,10 @@ class RoundEngine:
         else:
             self.chunk = dl.chunk_rounds
         # --- the two execution layers --------------------------------------
+        self._fault_key = (
+            faults_lib.fault_key(dl.faults, dl.seed)
+            if dl.faults is not None else None
+        )
         self.steps = RoundSteps(
             loss_fn=loss_fn,
             opt=optimizer,
@@ -535,6 +584,8 @@ class RoundEngine:
             lr_scales=self.lr_scales,
             lat=self._lat,
             goodput=self._goodput,
+            faults=dl.faults,
+            fault_key=self._fault_key,
         )
         self.scheduler = make_scheduler(self)
         self.history: List[Dict] = []

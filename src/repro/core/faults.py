@@ -1,0 +1,229 @@
+"""Fault injection + recovery — message-level faults for the scanned engine.
+
+The paper's pitch is emulating *practical* network behaviors; before this
+module the fault axis was coarse: node-level participation masks (churn)
+plus a static goodput derating.  ``FaultPlan`` adds a declarative
+message-level fault model that composes with churn inside the compiled
+scan:
+
+* **message loss** (``msg_loss``): each directed message i->j is lost
+  independently with probability p, per round.  Lost edges are removed
+  from the mixing operand and the freed weight renormalizes back to the
+  receiver's diagonal (``sharing.edge_reweight`` /
+  ``edge_reweight_sparse`` — rows stay stochastic, property-tested), so
+  gossip degrades gracefully instead of corrupting the average.  The
+  sender does not know the message was dropped: wire bytes and simulated
+  link time are still spent.
+* **crash/restart schedules** (``crashes``): declarative
+  ``(node, crash_round, restart_round)`` windows compiled to host-side
+  per-round (N,) availability masks that AND into the churn participation
+  mask — a crashed node behaves exactly like a churn-down node (frozen
+  state, rejoin-with-stale-model) but deterministically.
+* **latency spikes** (``latency_spike_prob`` / ``latency_spike_factor``):
+  per-edge, per-round multiplicative latency surges fed into the traced
+  round-time formula (delivered messages just arrive late — survived by
+  design, but the virtual clock pays).
+* **payload corruption** (``corrupt_prob`` / ``corrupt_mode``): a node's
+  post-mix parameter vector is corrupted in flight — ``"nan"`` overwrites
+  with NaN, ``"bitflip"`` saturates the fp32 exponent bits (a burst flip;
+  both are guaranteed non-finite, so the step guard's detection is
+  exact).  The self-healing guard rolls detected rows back to the
+  last-good (start-of-round) snapshot of params/opt/sharing state.
+
+Every random draw is a pure function of ``(fault seed, absolute round,
+global node id)`` through the jax threefry chain (the ``_node_keys``
+idiom), so fault realizations are chunk-boundary invariant, identical
+under any scan length, and — for per-edge masks — bitwise row-gatherable.
+
+**Counters** (traced scan outputs, surfaced into ``history``):
+``faults_injected`` (lost + spiked + corrupted), ``faults_detected``
+(guard detections + failed async exchanges), ``faults_survived``
+(absorbed by renormalization / late delivery), ``faults_recovered``
+(rollbacks + successful retries), ``retry_total``, ``recovery_bytes``
+(Bonawitz seed-recovery traffic, see ``core/secure.py``).  The
+conservation invariant ``injected == detected + survived`` holds in every
+scenario — no fault is silently dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# fold_in tags separating the independent per-(round, node) draw families
+_TAG_EDGE = 0x10      # per-edge message-loss draws
+_TAG_SPIKE = 0x11     # per-edge latency-spike draws
+_TAG_CORRUPT = 0x12   # per-node payload-corruption draws
+
+# the uniform fstats schema every scheduler emits per scanned step — a
+# static pytree structure, so scan bodies and shard_map out_specs can be
+# built without knowing which fault axes are active
+STAT_KEYS = (
+    "faults_injected",
+    "faults_detected",
+    "faults_survived",
+    "faults_recovered",
+    "retry_total",
+    "recovery_bytes",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative fault-injection specification (``DLConfig.faults``).
+
+    crashes: tuple of ``(node, crash_round, restart_round)`` — the node is
+    down for rounds ``[crash_round, restart_round)``; a negative
+    restart_round means it never comes back.
+    """
+
+    msg_loss: float = 0.0
+    crashes: Tuple = ()
+    latency_spike_prob: float = 0.0
+    latency_spike_factor: float = 10.0
+    corrupt_prob: float = 0.0
+    corrupt_mode: str = "nan"   # nan | bitflip
+    retry_backoff_s: float = 1e-3
+    retry_backoff_cap: int = 6
+    seed: int = 0
+
+    # ------------------------------------------------------------------
+    def validate(self) -> "FaultPlan":
+        def bad(msg):
+            raise ValueError(f"invalid FaultPlan: {msg}")
+
+        if not 0.0 <= self.msg_loss < 1.0:
+            bad(f"msg_loss must be in [0, 1), got {self.msg_loss}")
+        if not 0.0 <= self.latency_spike_prob < 1.0:
+            bad("latency_spike_prob must be in [0, 1), got "
+                f"{self.latency_spike_prob}")
+        if self.latency_spike_factor <= 0:
+            bad("latency_spike_factor must be > 0")
+        if not 0.0 <= self.corrupt_prob < 1.0:
+            bad(f"corrupt_prob must be in [0, 1), got {self.corrupt_prob}")
+        if self.corrupt_mode not in ("nan", "bitflip"):
+            bad(f"unknown corrupt_mode {self.corrupt_mode!r} (nan|bitflip)")
+        if self.retry_backoff_s < 0:
+            bad("retry_backoff_s must be >= 0")
+        if self.retry_backoff_cap < 0:
+            bad("retry_backoff_cap must be >= 0")
+        for c in self.crashes:
+            if len(c) != 3:
+                bad(f"crash entries are (node, crash_round, restart_round), "
+                    f"got {c!r}")
+            node, down, up = c
+            if node < 0:
+                bad(f"crash node must be >= 0, got {node}")
+            if down < 0:
+                bad(f"crash_round must be >= 0, got {down}")
+            if 0 <= up <= down:
+                bad(f"restart_round must be > crash_round (or < 0 for "
+                    f"never), got {c!r}")
+        return self
+
+    # ------------------------------------------------------------------
+    @property
+    def edge_faults(self) -> bool:
+        """Any per-edge fault axis active (loss or latency spikes)."""
+        return self.msg_loss > 0 or self.latency_spike_prob > 0
+
+    @property
+    def any_faults(self) -> bool:
+        return (
+            self.edge_faults or self.corrupt_prob > 0 or bool(self.crashes)
+        )
+
+
+# ---------------------------------------------------------------------------
+# key chain
+# ---------------------------------------------------------------------------
+
+def fault_key(plan: FaultPlan, engine_seed: int):
+    """The plan's PRF root key — folded off its own seed plus the engine
+    seed, so fault draws never collide with gossip/batch draws."""
+    return jax.random.fold_in(jax.random.key(plan.seed + 0xFA11), engine_seed)
+
+
+def _row_keys(key, tag: int, rnd, rows):
+    """Per-(round, global node id) keys for one draw family — the pure
+    function of (tag, round, id) that makes fault realizations chunk- and
+    gather-invariant (``rnd`` and ``rows`` may be traced)."""
+    k = jax.random.fold_in(jax.random.fold_in(key, tag), rnd)
+    return jax.vmap(lambda i: jax.random.fold_in(k, i))(rows)
+
+
+# ---------------------------------------------------------------------------
+# crash schedules (host-side, staged like the churn participation mask)
+# ---------------------------------------------------------------------------
+
+def crash_mask(plan: FaultPlan, n: int, start: int, n_rounds: int) -> np.ndarray:
+    """(R, N) {0,1} availability from the declarative crash schedule for
+    absolute rounds [start, start + n_rounds) — a pure function of the
+    absolute round index, so any chunking slices the same schedule."""
+    m = np.ones((n_rounds, n), np.float32)
+    r = np.arange(start, start + n_rounds)
+    for node, down, up in plan.crashes:
+        dead = (r >= down) if up < 0 else (r >= down) & (r < up)
+        m[dead, node] = 0.0
+    return m
+
+
+# ---------------------------------------------------------------------------
+# traced per-round draws
+# ---------------------------------------------------------------------------
+
+def edge_draws(key, rnd, rows, d: int, plan: FaultPlan):
+    """Per-edge fault draws for the given receiver rows: ``(live, spike)``
+    both (len(rows), d) float32 {0,1} — ``live[i, s]`` is 1 when the
+    message on row i's slot s arrives, ``spike[i, s]`` 1 when its latency
+    spikes.  Keyed per (round, receiver id): the realization is a pure
+    function of global coordinates (bitwise row-gatherable)."""
+    ids = jnp.asarray(rows)
+    ul = jax.vmap(lambda k_: jax.random.uniform(k_, (d,)))(
+        _row_keys(key, _TAG_EDGE, rnd, ids)
+    )
+    us = jax.vmap(lambda k_: jax.random.uniform(k_, (d,)))(
+        _row_keys(key, _TAG_SPIKE, rnd, ids)
+    )
+    live = (ul >= plan.msg_loss).astype(jnp.float32)
+    spike = (us < plan.latency_spike_prob).astype(jnp.float32)
+    return live, spike
+
+
+def corruption_mask(key, rnd, rows, plan: FaultPlan):
+    """(len(rows),) float32 {0,1} — 1 marks a node whose post-mix payload
+    is corrupted this round."""
+    ids = jnp.asarray(rows)
+    u = jax.vmap(lambda k_: jax.random.uniform(k_, ()))(
+        _row_keys(key, _TAG_CORRUPT, rnd, ids)
+    )
+    return (u < plan.corrupt_prob).astype(jnp.float32)
+
+
+def corrupt_rows(X2, cmask, mode: str):
+    """Inject payload corruption into the masked rows of the post-mix
+    (N, P) matrix.  Both modes produce non-finite values, so the step
+    guard's non-finite detection is exact (detected == corrupted)."""
+    if mode == "nan":
+        bad = jnp.full_like(X2, jnp.nan)
+    else:  # bitflip: a burst flip saturating the exponent -> inf/nan
+        u = jax.lax.bitcast_convert_type(X2.astype(jnp.float32), jnp.uint32)
+        bad = jax.lax.bitcast_convert_type(
+            u | jnp.uint32(0x7F800000), jnp.float32
+        ).astype(X2.dtype)
+    return jnp.where(cmask[:, None] > 0, bad, X2)
+
+
+def nonfinite_rows(X2):
+    """(N,) float32 {0,1} — 1 marks rows containing any non-finite value
+    (the step guard's detection pass)."""
+    return 1.0 - jnp.all(jnp.isfinite(X2), axis=1).astype(jnp.float32)
+
+
+def zero_stats():
+    """The all-zero fstats record — the static per-step schema every
+    scheduler emits (see ``STAT_KEYS``)."""
+    return {k: jnp.float32(0.0) for k in STAT_KEYS}

@@ -92,9 +92,18 @@ class LinkSpec:
     latency_s: float
     drop_rate: float = 0.0  # fraction; derates goodput ~1/(1-p)
 
+    def __post_init__(self):
+        if not 0.0 <= self.drop_rate < 1.0:
+            raise ValueError(
+                f"LinkSpec.drop_rate must be in [0, 1), got {self.drop_rate}: "
+                "a drop rate of 1 means the link never delivers — model a "
+                "dead link by removing the edge (or a lossy one via "
+                "FaultPlan.msg_loss)"
+            )
+
     def goodput_bps(self) -> float:
         """Payload goodput after drop-rate derating (TCP retransmission)."""
-        return self.bandwidth_bps * max(1.0 - self.drop_rate, 1e-3)
+        return self.bandwidth_bps * (1.0 - self.drop_rate)
 
     def transfer_time(self, nbytes: float) -> float:
         return self.latency_s + nbytes * 8.0 / self.goodput_bps()

@@ -47,9 +47,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import faults as faults_lib
 from repro.core.mixing import ShardedDense, ShardedTopology, gossip_pair_avg
 from repro.data.loader import node_batch_indices
 from repro.core.sharing import (
+    edge_reweight,
+    edge_reweight_sparse,
     participation_deg_eff,
     participation_reweight,
     participation_reweight_rows,
@@ -110,6 +113,12 @@ class Scheduler:
         # 'node' batch keying: indices are a device-side pure function of
         # (seed, round, global id) — no host staging, no (R, L, N, B) stack
         self._node_keying = eng.dl.batch_keying == "node"
+        # host-side float64 fault-counter totals (every scanned step emits
+        # the static fstats schema; zeros when no fault axis is active)
+        self._fault_totals = {k: 0.0 for k in faults_lib.STAT_KEYS}
+        self._track_faults = eng.dl.faults is not None or (
+            eng.dl.secure and eng.dl.secure_recovery
+        )
 
     # ------------------------------------------------------------------
     # activation masks (churn)
@@ -194,8 +203,23 @@ class Scheduler:
                 xs["mix"] = jnp.asarray(Wst)
                 staged = int(Wst.nbytes)
             eng.topo_stage_bytes_peak = max(eng.topo_stage_bytes_peak, staged)
-        if dl.participation < 1.0:
-            xs["act"] = jnp.asarray(self.participation_mask(start, n_rounds))
+        plan = dl.faults
+        crashes = plan is not None and bool(plan.crashes)
+        if dl.participation < 1.0 or crashes:
+            m = self.participation_mask(start, n_rounds)
+            if crashes:
+                # declarative crash/restart windows AND into the churn
+                # draw: a crashed node is exactly a churn-down node, but
+                # deterministic (both masks are pure functions of the
+                # absolute round, so chunking stays invariant)
+                cm = faults_lib.crash_mask(plan, dl.n_nodes, start, n_rounds)
+                m = m * cm
+                # crash downtime counts as injected faults absorbed by the
+                # participation machinery (frozen state, reweighted mixing)
+                down = float((1.0 - cm).sum())
+                self._fault_totals["faults_injected"] += down
+                self._fault_totals["faults_survived"] += down
+            xs["act"] = jnp.asarray(m)
         return xs
 
     def _node_indices(self, rnd, ids):
@@ -234,9 +258,25 @@ class Scheduler:
             f"semantics='sync' only, not {self.semantics!r}"
         )
 
+    def _accum_faults(self, fstats) -> None:
+        """Fold one dispatch's fstats (dict of (R,) stacked arrays, or
+        scalars from the legacy path) into the host float64 totals."""
+        for k in faults_lib.STAT_KEYS:
+            self._fault_totals[k] += float(
+                np.asarray(fstats[k], np.float64).sum()
+            )
+
     def extra_metrics(self) -> Dict:
-        """Semantics-specific metrics merged into each history record."""
-        return {}
+        """Semantics-specific metrics merged into each history record.
+        The base contributes the running fault counters whenever a fault
+        axis (FaultPlan or secure recovery) is active."""
+        if not self._track_faults:
+            return {}
+        t = self._fault_totals
+        m = {k: int(round(t[k])) for k in faults_lib.STAT_KEYS
+             if k != "recovery_bytes"}
+        m["recovery_bytes"] = t["recovery_bytes"]
+        return m
 
 
 class SyncScheduler(Scheduler):
@@ -265,15 +305,17 @@ class SyncScheduler(Scheduler):
             W = xs_r["mix"] if "mix" in xs_r else eng._mix_static
             act = xs_r.get("act")
             bx, by = self._round_batch(xs_r)
-            params, opt_state, share_state, nbytes, sim_t = eng.steps.train_and_mix(
-                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"]
+            params, opt_state, share_state, nbytes, sim_t, fstats = (
+                eng.steps.train_and_mix(
+                    params, opt_state, share_state, bx, by, W, act, xs_r["rnd"]
+                )
             )
-            return (params, opt_state, share_state), (nbytes, sim_t)
+            return (params, opt_state, share_state), (nbytes, sim_t, fstats)
 
-        carry, (nbytes, times) = jax.lax.scan(
+        carry, (nbytes, times, fstats) = jax.lax.scan(
             body, (params, opt_state, share_state), xs
         )
-        return carry + (nbytes, times)
+        return carry + (nbytes, times, fstats)
 
     def _legacy_round(self, params, opt_state, share_state, bx, by, W, active, rnd):
         return self.eng.steps.train_and_mix(
@@ -316,16 +358,18 @@ class SyncScheduler(Scheduler):
             W = self._wrap_mix(xs_r.get("mix"))
             act = xs_r.get("act")
             bx, by = self._round_batch(xs_r)
-            params, opt_state, share_state, nbytes, sim_t = eng.steps.train_and_mix(
-                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"],
-                shard=eng._shard,
+            params, opt_state, share_state, nbytes, sim_t, fstats = (
+                eng.steps.train_and_mix(
+                    params, opt_state, share_state, bx, by, W, act, xs_r["rnd"],
+                    shard=eng._shard,
+                )
             )
-            return (params, opt_state, share_state), (nbytes, sim_t)
+            return (params, opt_state, share_state), (nbytes, sim_t, fstats)
 
-        carry, (nbytes, times) = jax.lax.scan(
+        carry, (nbytes, times, fstats) = jax.lax.scan(
             body, (params, opt_state, share_state), xs
         )
-        return carry + (nbytes, times)
+        return carry + (nbytes, times, fstats)
 
     def _xs_pspec(self, xs):
         """Per-leaf PartitionSpecs for the scan-input dict: the node axis of
@@ -364,12 +408,15 @@ class SyncScheduler(Scheduler):
                 self._node_pspec(eng.opt_state),
                 self._node_pspec(eng.share_state),
             )
+            # fstats scalars are replicated by construction (either zeros
+            # or psum-reduced, like nbytes/times)
+            fstats_specs = {k: P() for k in faults_lib.STAT_KEYS}
             fn = jax.jit(
                 shard_map(
                     self._chunk_fn_sharded,
                     mesh=eng._mesh,
                     in_specs=state_specs + (self._xs_pspec(xs),),
-                    out_specs=state_specs + (P(), P()),
+                    out_specs=state_specs + (P(), P(), fstats_specs),
                     check_vma=False,
                 )
             )
@@ -384,10 +431,11 @@ class SyncScheduler(Scheduler):
             out = self._sharded_chunk_call(xs)
         else:
             out = self._chunk_jit(eng.params, eng.opt_state, eng.share_state, xs)
-        eng.params, eng.opt_state, eng.share_state, nbytes, times = out
+        eng.params, eng.opt_state, eng.share_state, nbytes, times, fstats = out
         # ONE host sync per chunk for all per-round metrics
         eng.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
         eng.sim_time_s += float(np.asarray(times, np.float64).sum())
+        self._accum_faults(fstats)
 
     def _round_mix(self, rnd: int):
         """Device mixing operand for one round (legacy per-round dispatch):
@@ -421,9 +469,10 @@ class SyncScheduler(Scheduler):
             eng.params, eng.opt_state, eng.share_state, bx, by, W, act,
             jnp.int32(rnd),
         )
-        eng.params, eng.opt_state, eng.share_state, nbytes, sim_t = out
+        eng.params, eng.opt_state, eng.share_state, nbytes, sim_t, fstats = out
         eng.bytes_sent += float(nbytes)
         eng.sim_time_s += float(sim_t)
+        self._accum_faults(fstats)
 
 
 class LocalScheduler(Scheduler):
@@ -456,9 +505,11 @@ class LocalScheduler(Scheduler):
             W = xs_r["mix"] if "mix" in xs_r else eng._mix_static
             act = xs_r.get("act")
             bx, by = self._round_batch(xs_r)
-            params, opt_state, share_state, nbytes, node_t = eng.steps.train_and_mix(
-                params, opt_state, share_state, bx, by, W, act, xs_r["rnd"],
-                time_reduce="none",
+            params, opt_state, share_state, nbytes, node_t, fstats = (
+                eng.steps.train_and_mix(
+                    params, opt_state, share_state, bx, by, W, act, xs_r["rnd"],
+                    time_reduce="none",
+                )
             )
             # neighborhood barrier: wait for the live neighbors' previous
             # round, then run this one (node_t is 0 for down nodes, whose
@@ -468,12 +519,14 @@ class LocalScheduler(Scheduler):
                 clock = jnp.where(act > 0, ready + node_t, clock)
             else:
                 clock = ready + node_t
-            return (params, opt_state, share_state, clock), (nbytes, jnp.max(clock))
+            return (params, opt_state, share_state, clock), (
+                nbytes, jnp.max(clock), fstats
+            )
 
-        carry, (nbytes, times) = jax.lax.scan(
+        carry, (nbytes, times, fstats) = jax.lax.scan(
             body, (params, opt_state, share_state, clock), xs
         )
-        return carry + (nbytes, times)
+        return carry + (nbytes, times, fstats)
 
     def run_span(self, start: int, n_rounds: int) -> None:
         eng = self.eng
@@ -481,10 +534,12 @@ class LocalScheduler(Scheduler):
         out = self._chunk_jit(
             eng.params, eng.opt_state, eng.share_state, self._clock, xs
         )
-        eng.params, eng.opt_state, eng.share_state, self._clock, nbytes, times = out
+        (eng.params, eng.opt_state, eng.share_state, self._clock,
+         nbytes, times, fstats) = out
         eng.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
         # the virtual clock is a running maximum, not a per-round sum
         eng.sim_time_s = float(np.asarray(times)[-1])
+        self._accum_faults(fstats)
 
     def extra_metrics(self) -> Dict:
         clock = np.asarray(self._clock, np.float64)
@@ -493,6 +548,7 @@ class LocalScheduler(Scheduler):
             "vclock_min_s": float(clock.min()),
             "vclock_median_s": float(np.median(clock)),
             "vclock_max_s": float(clock.max()),
+            **super().extra_metrics(),
         }
 
 
@@ -558,6 +614,9 @@ class AsyncScheduler(Scheduler):
         self._t_next = jnp.asarray(eng._compute_node, jnp.float32)
         self._vclock = jnp.zeros((n,), jnp.float32)   # last fired completion
         self._events = jnp.zeros((n,), jnp.int32)     # model version counter
+        # consecutive failed pairwise exchanges (drives the exponential
+        # backoff under a FaultPlan; stays all-zero without one)
+        self._retries = jnp.zeros((n,), jnp.int32)
         self._stale_sum = 0.0
         self._stale_n = 0.0
         self._stale_max = 0.0
@@ -589,10 +648,15 @@ class AsyncScheduler(Scheduler):
     def _cohort(self, carry, xs_r):
         eng = self.eng
         dl = eng.dl
-        params, opt_state, share_state, t_next, vclock, events = carry
+        plan = eng.steps.faults
+        params, opt_state, share_state, t_next, vclock, events, retries = carry
         W = xs_r["mix"] if "mix" in xs_r else eng._mix_static
         act = xs_r.get("act")
         rnd = xs_r["rnd"]
+        fstats = faults_lib.zero_stats()
+        guard = plan is not None and plan.corrupt_prob > 0
+        if guard:
+            snap = (params, opt_state)  # last-good snapshot for rollbacks
         # --- cohort membership on the virtual clock ----------------------
         t_min = jnp.min(t_next)
         fire = (t_next <= t_min + dl.async_slice_s).astype(jnp.float32)
@@ -605,14 +669,44 @@ class AsyncScheduler(Scheduler):
         X = jax.vmap(tree_vector)(params)
         key = jax.random.fold_in(eng.steps.base_key, rnd)
         ev_f = events.astype(jnp.float32)
+        backoff = None
         if dl.async_gossip == "pairwise":
             X2, partner, ok = gossip_pair_avg(W, X, key, fire=actv, act=act)
             share_state_new = share_state
-            stale_i = ok * jnp.maximum(ev_f - jnp.take(ev_f, partner), 0.0)
-            n_reads = ok
-            msg = jnp.float32(eng.n_params * np.dtype(np.float32).itemsize)
-            nbytes = jnp.sum(ok) * msg / dl.n_nodes
+            ok_eff = ok
             comm = self._pair_comm(partner, ok)
+            if plan is not None and plan.edge_faults:
+                # one exchange per event: per-(round, node) loss/spike draws
+                lv, sp = faults_lib.edge_draws(
+                    eng.steps.fault_key, rnd, jnp.arange(dl.n_nodes), 1, plan
+                )
+                live, spike = lv[:, 0], sp[:, 0]
+                lost = ok * (1.0 - live)        # exchange hit a dead edge
+                ok_eff = ok * live
+                X2 = jnp.where(lost[:, None] > 0, X, X2)  # keep local step
+                spiked = ok * spike
+                comm = comm * (1.0 + spike * (plan.latency_spike_factor - 1.0))
+                # retry at the next event, after an exponential backoff on
+                # this node's virtual clock (capped)
+                backoff = lost * plan.retry_backoff_s * 2.0 ** jnp.minimum(
+                    retries.astype(jnp.float32),
+                    jnp.float32(plan.retry_backoff_cap),
+                )
+                recovered = ok_eff * (retries > 0).astype(jnp.float32)
+                retries = jnp.where(
+                    lost > 0, retries + 1,
+                    jnp.where(ok_eff > 0, 0, retries),
+                )
+                fstats["faults_injected"] += jnp.sum(lost) + jnp.sum(spiked)
+                fstats["faults_detected"] += jnp.sum(lost)
+                fstats["faults_survived"] += jnp.sum(spiked)
+                fstats["faults_recovered"] += jnp.sum(recovered)
+                fstats["retry_total"] += jnp.sum(lost)
+            stale_i = ok_eff * jnp.maximum(ev_f - jnp.take(ev_f, partner), 0.0)
+            n_reads = ok_eff
+            msg = jnp.float32(eng.n_params * np.dtype(np.float32).itemsize)
+            # bytes at pre-loss ok: the sender transmitted either way
+            nbytes = jnp.sum(ok) * msg / dl.n_nodes
         else:  # neighborhood: the full (churn-pruned) W row, stale reads
             if act is not None:
                 if isinstance(W, SparseTopology):
@@ -621,8 +715,35 @@ class AsyncScheduler(Scheduler):
                     Wm, deg_eff = participation_reweight(W, act)
             else:
                 Wm, deg_eff = W, eng.steps.mean_degree
+            # message-level edge faults: the mixing operand drops lost
+            # edges (renormalized — survived by design) while bytes/time
+            # still run on the churn-level operand, like the sync path
+            Wm_mix, lat_mult = Wm, None
+            if plan is not None and plan.edge_faults:
+                if isinstance(Wm, SparseTopology):
+                    lv, sp = faults_lib.edge_draws(
+                        eng.steps.fault_key, rnd,
+                        jnp.arange(Wm.nbr.shape[0]), Wm.nbr.shape[1], plan,
+                    )
+                    sent = (Wm.w > 0).astype(jnp.float32)
+                    Wm_mix = edge_reweight_sparse(Wm, lv)
+                else:
+                    n = Wm.shape[0]
+                    lv, sp = faults_lib.edge_draws(
+                        eng.steps.fault_key, rnd, jnp.arange(n), n, plan
+                    )
+                    sent = (
+                        Wm * (1.0 - jnp.eye(n, dtype=jnp.float32)) > 0
+                    ).astype(jnp.float32)
+                    Wm_mix = edge_reweight(Wm, lv)
+                dropped = jnp.sum(sent * (1.0 - lv))
+                spiked = jnp.sum(sent * sp)
+                if plan.latency_spike_prob > 0:
+                    lat_mult = 1.0 + sp * (plan.latency_spike_factor - 1.0)
+                fstats["faults_injected"] += dropped + spiked
+                fstats["faults_survived"] += dropped + spiked
             X2_all, share_state_new, nbytes_rate = eng.sharing.round(
-                X, Wm, share_state, key, degree=deg_eff, rnd=rnd
+                X, Wm_mix, share_state, key, degree=deg_eff, rnd=rnd
             )
             X2 = jnp.where(actv[:, None] > 0, X2_all, X)
             # staleness over the rows actually read: the same live-edge
@@ -639,21 +760,41 @@ class AsyncScheduler(Scheduler):
             if eng.steps.lat is not None:
                 comm = eng.steps.round_time(
                     Wm, None, jnp.asarray(nbytes_rate, jnp.float32), deg_eff,
-                    reduce="none",
+                    reduce="none", lat_mult=lat_mult,
                 )
                 comm = comm - eng.steps.compute_node  # compute added below
             else:
                 comm = jnp.zeros((dl.n_nodes,), jnp.float32)
-        share_state = node_where(actv, share_state_new, share_state)
+        # --- payload corruption + rollback guard --------------------------
+        actv_w = actv  # state-write mask (excludes rolled-back rows)
+        if guard:
+            cmask = actv * faults_lib.corruption_mask(
+                eng.steps.fault_key, rnd, jnp.arange(dl.n_nodes), plan
+            )
+            X2 = faults_lib.corrupt_rows(X2, cmask, plan.corrupt_mode)
+            bad = actv * faults_lib.nonfinite_rows(X2)
+            actv_w = actv * (1.0 - bad)
+            fstats["faults_injected"] += jnp.sum(cmask)
+            fstats["faults_detected"] += jnp.sum(bad)
+            fstats["faults_recovered"] += jnp.sum(bad)
+        share_state = node_where(actv_w, share_state_new, share_state)
         new_params = jax.vmap(lambda v: tree_unvector(v, eng.template))(
             X2.astype(X.dtype)
         )
-        params = node_where(actv, new_params, params)
+        params = node_where(actv_w, new_params, params)
+        if guard:
+            # rolled-back rows discard the local step too: back to the
+            # last-good (start-of-event) snapshot
+            p0, o0 = snap
+            params = node_where(1.0 - bad, params, p0)
+            opt_state = node_where(1.0 - bad, opt_state, o0)
         # --- clock advance ------------------------------------------------
         dur = eng.steps.compute_node + comm
+        if backoff is not None:
+            dur = dur + backoff
         vclock = jnp.where(fire > 0, t_next, vclock)
         t_next = t_next + fire * dur  # down-but-scheduled slots burn time too
-        events = events + actv.astype(jnp.int32)
+        events = events + actv_w.astype(jnp.int32)
         out = (
             nbytes,
             jnp.max(vclock),
@@ -661,8 +802,11 @@ class AsyncScheduler(Scheduler):
             jnp.sum(stale_i),
             jnp.sum(n_reads),
             jnp.max(stale_i),
+            fstats,
         )
-        return (params, opt_state, share_state, t_next, vclock, events), out
+        return (
+            params, opt_state, share_state, t_next, vclock, events, retries
+        ), out
 
     def _cohort_gs(self, carry, xs_r):
         """Population-scale cohort body: the semantics of :meth:`_cohort`
@@ -846,17 +990,22 @@ class AsyncScheduler(Scheduler):
             params, opt_state, share_state, t_next, vclock, events, vmax
         ), out
 
-    def _chunk_fn(self, params, opt_state, share_state, t_next, vclock, events, xs):
+    def _chunk_fn(self, params, opt_state, share_state, t_next, vclock, events,
+                  retries, xs):
         if self._cohort_c > 0:
+            # the cohort gather/scatter path runs fault-free (validated):
+            # retries pass through untouched, no fstats emitted
             carry, outs = jax.lax.scan(
                 self._cohort_gs,
                 (params, opt_state, share_state, t_next, vclock, events,
                  jnp.max(vclock)),
                 xs,
             )
-            return carry[:6] + outs
+            return carry[:6] + (retries,) + outs
         carry, outs = jax.lax.scan(
-            self._cohort, (params, opt_state, share_state, t_next, vclock, events), xs
+            self._cohort,
+            (params, opt_state, share_state, t_next, vclock, events, retries),
+            xs,
         )
         return carry + outs
 
@@ -866,11 +1015,11 @@ class AsyncScheduler(Scheduler):
         xs = self._stage_xs(start, n_rounds)
         out = self._chunk_jit(
             eng.params, eng.opt_state, eng.share_state,
-            self._t_next, self._vclock, self._events, xs,
+            self._t_next, self._vclock, self._events, self._retries, xs,
         )
         (eng.params, eng.opt_state, eng.share_state,
-         self._t_next, self._vclock, self._events) = out[:6]
-        nbytes, t_virt, fired, stale_sum, stale_n, stale_max = out[6:12]
+         self._t_next, self._vclock, self._events, self._retries) = out[:7]
+        nbytes, t_virt, fired, stale_sum, stale_n, stale_max = out[7:13]
         eng.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
         # the virtual clock is a running maximum, not a per-cohort sum —
         # fp32-exact (max selects, never rounds) — plus the rebase offset
@@ -880,10 +1029,12 @@ class AsyncScheduler(Scheduler):
         self._stale_n += float(np.asarray(stale_n, np.float64).sum())
         self._stale_max = max(self._stale_max, float(np.asarray(stale_max).max()))
         if self._cohort_c > 0:
-            occ = np.asarray(out[12], np.float64)
+            occ = np.asarray(out[13], np.float64)
             self._occ_sum += float(occ.sum())
             self._occ_steps += int(occ.shape[0])
-            self._overflow_total += int(np.asarray(out[13], np.int64).sum())
+            self._overflow_total += int(np.asarray(out[14], np.int64).sum())
+        else:
+            self._accum_faults(out[13])
         self._maybe_rebase()
 
     def _maybe_rebase(self) -> None:
@@ -975,6 +1126,7 @@ class AsyncScheduler(Scheduler):
             m["cohort_capacity"] = self._cohort_c
             m["cohort_occupancy_mean"] = self._occ_sum / max(self._occ_steps, 1)
             m["cohort_overflow_total"] = self._overflow_total
+        m.update(super().extra_metrics())
         return m
 
 

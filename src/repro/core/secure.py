@@ -59,6 +59,10 @@ from repro.kernels.ref import mask_bits_to_uniform
 
 BYTES_VAL = 4
 METADATA_OVERHEAD = 0.03  # paper: ~3% extra bytes (seeds, framing)
+# one revealed Shamir/seed share on the recovery round: the co-neighbor
+# re-sends the (dropped pair, receiver) key-chain material — a 32-byte
+# record (pair seed + ids + round), after Bonawitz et al. CCS'17 §5
+SEED_SHARE_BYTES = 32
 
 
 def _pair_key_from(kround, i, j, r):
@@ -95,10 +99,25 @@ class SecureAggregation:
     adj: (N, N) bool numpy adjacency (static — the mask schedule, i.e. the
     neighbor table, must be known at trace time; dynamic graphs would
     re-key every round anyway).
+
+    recovery: enable the Bonawitz-style seed-recovery pass so masked
+    aggregation stays correct under churn (``DLConfig.secure_recovery``).
+    Dropped senders leave their pair masks uncancelled in every live
+    co-neighbor's message; surviving co-neighbors re-derive the dropped
+    pairs' PRF masks from the shared key chain (``_pair_key_from`` — the
+    receiver learns only mask material it could already compute) and the
+    receiver subtracts them in a second traced mask pass, then aggregates
+    the *live* neighbor set only.  The corrected aggregate equals the
+    churn-reweighted plain aggregate exactly (masks over live pairs still
+    cancel pairwise; property-tested).  The recovery round's seed-share
+    traffic is accounted per (live receiver, live sender, dropped
+    co-neighbor) triple at ``SEED_SHARE_BYTES`` each — see
+    ``steps.RoundSteps._secure_recovery_bytes``.
     """
 
     adj: np.ndarray
     mask_bound: float = 1.0
+    recovery: bool = False
 
     def __post_init__(self):
         nbr, valid = neighbor_table(np.asarray(self.adj))
@@ -107,6 +126,13 @@ class SecureAggregation:
 
     def init_state(self, X):
         return ()
+
+    @property
+    def needs_act(self) -> bool:
+        """The step layer passes the participation mask into :meth:`round`
+        (``act=``) when recovery is on — the receiver must know which
+        senders dropped to run the seed-recovery pass."""
+        return self.recovery
 
     def messages(self, X, key, rnd):
         """Masked message from i to r for every edge (i, r). Returns a dict
@@ -127,11 +153,14 @@ class SecureAggregation:
                 out[(i, r)] = msg
         return out
 
-    def round(self, X, W, state, key, degree, rnd=0):
+    def round(self, X, W, state, key, degree, rnd=0, act=None):
         """Vectorized, jittable masked aggregation.  W (dense (N, N) or
         SparseTopology) must give equal weight w to all of a receiver's
         neighbors (true for MH on regular graphs); ``degree`` and ``rnd``
-        may be traced scalars.
+        may be traced scalars.  ``act`` is the (N,) participation mask
+        (recovery mode only): dropped senders are excised via the
+        seed-recovery pass and the live neighbor set is aggregated with
+        the churn-reweighted weights W already carries.
 
         Pipeline, per sender slot (lax.map over the D slots): (1) a batched
         vmap pass derives the threefry *pair keys* of every (receiver,
@@ -145,7 +174,7 @@ class SecureAggregation:
         valid masked messages with weight w.
         """
         if isinstance(W, (ShardedTopology, ShardedDense)):
-            return self._round_sharded(X, W, state, key, degree, rnd)
+            return self._round_sharded(X, W, state, key, degree, rnd, act)
         N, P = X.shape
         Xf = X.astype(jnp.float32)
         nbr = jnp.asarray(self._nbr)                      # (N, D)
@@ -156,24 +185,31 @@ class SecureAggregation:
             # w=0 padding (and any zeroed slot), where slot 0 alone would not
             wvec = jnp.max(W.w.astype(jnp.float32), axis=1)
         else:
-            Wf = W.astype(jnp.float32)
-            wvec = jnp.take_along_axis(Wf, nbr[:, :1], axis=1)[:, 0]
+            Wg = jnp.take_along_axis(W.astype(jnp.float32), nbr, axis=1)
+            wvec = jnp.max(Wg * validf, axis=1)
         Xnbr = jnp.take(Xf, nbr, axis=0)                   # (N, D, P)
+        act_nbr = None if act is None else jnp.take(act, nbr, axis=0)
         return self._masked_aggregate(
-            Xf, Xnbr, nbr, validf, wvec, jnp.arange(N), key, rnd, degree, X.dtype, state
+            Xf, Xnbr, nbr, validf, wvec, jnp.arange(N), key, rnd, degree,
+            X.dtype, state, act_nbr,
         )
 
-    def _round_sharded(self, X, W, state, key, degree, rnd):
+    def _round_sharded(self, X, W, state, key, degree, rnd, act=None):
         """Node-sharded masked aggregation (inside a shard_map body): X is
         this device's (B, P) row block, W the sharded mixing operand.  The
         co-neighbor messages arrive through ``W.neighbor_stack`` — the same
         per-slot `collective_permute` permutations (or the all-gather
         fallback) the plain gossip path uses — and the pair-PRF bits are
         keyed by *global* node ids, so every mask pair still cancels
-        exactly as in the single-device schedule."""
+        exactly as in the single-device schedule.  Recovery mode
+        (``act`` given) uses the *canonical* neighbor table gathered at
+        this device's rows: the rebalanced table's churn-zeroed weights
+        can't be told apart from static padding, and recovery must see
+        exactly the schedule the masks were keyed over."""
         B, P = X.shape
         Xf = X.astype(jnp.float32)
-        if isinstance(W, ShardedTopology):
+        act_g = None if act is None else W.shard.gather(act)
+        if isinstance(W, ShardedTopology) and act is None:
             nbr = W.topo.nbr                               # (B, D), rebalanced order
             validf = (W.topo.w > 0).astype(jnp.float32)
             # equal-weight assumption (regular graphs): row max skips the
@@ -184,17 +220,32 @@ class SecureAggregation:
             rows = W.rows
             nbr = jnp.take(jnp.asarray(self._nbr), rows, axis=0)
             validf = jnp.take(jnp.asarray(self._valid, jnp.float32), rows, axis=0)
-            wvec = jnp.take_along_axis(W.W.astype(jnp.float32), nbr[:, :1], axis=1)[:, 0]
+            if isinstance(W, ShardedTopology):
+                wvec = jnp.max(W.topo.w.astype(jnp.float32), axis=1)
+            else:
+                Wg = jnp.take_along_axis(W.W.astype(jnp.float32), nbr, axis=1)
+                wvec = jnp.max(Wg * validf, axis=1)
             Xnbr = jnp.take(W.shard.gather(Xf), nbr, axis=0)
+        act_nbr = None if act_g is None else jnp.take(act_g, nbr, axis=0)
         return self._masked_aggregate(
-            Xf, Xnbr, nbr, validf, wvec, W.rows, key, rnd, degree, X.dtype, state
+            Xf, Xnbr, nbr, validf, wvec, W.rows, key, rnd, degree, X.dtype,
+            state, act_nbr,
         )
 
     def _masked_aggregate(self, Xf, Xnbr, nbr, validf, wvec, rows, key, rnd,
-                          degree, dtype, state):
+                          degree, dtype, state, act_nbr=None):
         """Shared core of the vectorized path: per-slot PRF bits + fused
         mask apply + weighted receiver sum.  ``rows`` are the global node
-        ids of the local receiver rows (arange unsharded)."""
+        ids of the local receiver rows (arange unsharded).
+
+        Recovery (``act_nbr`` — the neighbor slots' participation, (N, D)):
+        pass 1 applies exactly the masks the senders transmitted (senders
+        don't know who dropped, so they mask against *every* valid
+        co-neighbor); pass 2 re-derives the (live sender, dropped
+        co-neighbor) pair masks from the same key chain and subtracts
+        them.  The surviving mask set then cancels pairwise over live
+        pairs, and the receiver aggregates the live slots only — equal to
+        the churn-reweighted plain aggregate."""
         P = Xf.shape[1]
         D = nbr.shape[1]
         kr = jax.random.fold_in(key, rnd)
@@ -206,28 +257,38 @@ class SecureAggregation:
             * (1.0 - jnp.eye(D, dtype=jnp.float32))
         )                                                  # (N, D, D)
 
-        def slot_msgs(ii):
-            def receiver_keys(r, nbr_r):
-                i = nbr_r[ii]
+        def slot_pass(base, signs_all):
+            def slot_msgs(ii):
+                def receiver_keys(r, nbr_r):
+                    i = nbr_r[ii]
 
-                def pair(j):
-                    a, b = jnp.minimum(i, j), jnp.maximum(i, j)
-                    return jax.random.key_data(_pair_key_from(kr, a, b, r))
+                    def pair(j):
+                        a, b = jnp.minimum(i, j), jnp.maximum(i, j)
+                        return jax.random.key_data(_pair_key_from(kr, a, b, r))
 
-                return jax.vmap(pair)(nbr_r)               # (D, 2)
+                    return jax.vmap(pair)(nbr_r)           # (D, 2)
 
-            keys = jax.vmap(receiver_keys)(rows, nbr)      # (N, D, 2) uint32
-            return kernel_ops.secure_mask_apply_nodes_keyed(
-                jnp.take(Xnbr, ii, axis=1),
-                keys,
-                jnp.take(signs, ii, axis=1),
-                self.mask_bound,
-            )                                              # (N, P)
+                keys = jax.vmap(receiver_keys)(rows, nbr)  # (N, D, 2) uint32
+                return kernel_ops.secure_mask_apply_nodes_keyed(
+                    jnp.take(base, ii, axis=1),
+                    keys,
+                    jnp.take(signs_all, ii, axis=1),
+                    self.mask_bound,
+                )                                          # (N, P)
 
-        msgs = jnp.moveaxis(jax.lax.map(slot_msgs, jnp.arange(D)), 0, 1)  # (N, D, P)
-        deg_r = validf.sum(1)
+            return jnp.moveaxis(
+                jax.lax.map(slot_msgs, jnp.arange(D)), 0, 1
+            )                                              # (N, D, P)
+
+        msgs = slot_pass(Xnbr, signs)
+        validf_live = validf
+        if act_nbr is not None:
+            down = validf * (1.0 - act_nbr)                # dropped co-nbrs
+            msgs = slot_pass(msgs, -signs * down[:, None, :])
+            validf_live = validf * act_nbr
+        deg_r = validf_live.sum(1)
         acc = (1.0 - wvec * deg_r)[:, None] * Xf + wvec[:, None] * jnp.sum(
-            msgs * validf[:, :, None], axis=1
+            msgs * validf_live[:, :, None], axis=1
         )
         X2 = jnp.where((deg_r > 0)[:, None], acc, Xf)
         item = jnp.dtype(dtype).itemsize
@@ -238,7 +299,8 @@ class SecureAggregation:
         return np.dtype(x_dtype)
 
     def stage_bytes_per_round(self, n: int, p: int) -> int:
-        return n * p * 4  # the masked fp32 messages
+        # recovery stages a second full mask pass over the neighbor stack
+        return n * p * 4 * (2 if self.recovery else 1)
 
     def round_reference(self, X, W, state, key, degree: float, rnd: int = 0):
         """Python-scheduled reference: aggregate the dict of masked

@@ -228,6 +228,36 @@ def participation_reweight_sparse(topo: SparseTopology, active, *,
     return SparseTopology(topo.nbr, w, w_self), deg_eff
 
 
+def edge_reweight(W, live):
+    """Renormalize a row-stochastic mixing matrix for a per-edge {0,1}
+    live mask (message-level faults): every off-diagonal entry whose
+    directed message was lost is removed and the freed mass returns to the
+    receiver's diagonal — rows stay stochastic (property-tested), so
+    gossip under loss degrades to a weaker average instead of a biased
+    one.  Composes with :func:`participation_reweight` (sequential
+    renormalizations each preserve row-stochasticity).
+
+    live: (N, N) {0,1} — live[i, j] = 0 drops the message j -> i.
+    """
+    Wf = W.astype(jnp.float32)
+    n = Wf.shape[0]
+    diag = jnp.eye(n, dtype=jnp.float32)
+    off = Wf * (1.0 - diag) * live.astype(jnp.float32)
+    return off + diag * (1.0 - off.sum(1, keepdims=True))
+
+
+def edge_reweight_sparse(topo: SparseTopology, live):
+    """Sparse-form :func:`edge_reweight`: mask neighbor *slots* whose
+    message was lost and return the freed mass to the diagonal — O(N·D).
+    ``to_dense`` of the result equals the dense reweight of
+    ``to_dense(topo)`` under the slot-scattered mask (property-tested).
+
+    live: (N, D) {0,1} over the padded neighbor slots.
+    """
+    w = topo.w.astype(jnp.float32) * live.astype(jnp.float32)
+    return SparseTopology(topo.nbr, w, 1.0 - w.sum(-1))
+
+
 def participation_deg_eff(topo: SparseTopology, active):
     """The ``deg_eff`` scalar of :func:`participation_reweight_sparse`
     alone — same counting expressions, no reweighted table built.  The

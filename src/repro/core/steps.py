@@ -26,9 +26,15 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults as faults_lib
 from repro.core.mixing import ShardedDense, ShardedTopology
 from repro.core.network import gathered_round_times, node_round_times
-from repro.core.sharing import participation_reweight, participation_reweight_sparse
+from repro.core.sharing import (
+    edge_reweight,
+    edge_reweight_sparse,
+    participation_reweight,
+    participation_reweight_sparse,
+)
 from repro.core.topology import SparseTopology
 from repro.optim.optimizers import apply_updates
 from repro.utils.pytree import tree_unvector, tree_vector
@@ -73,6 +79,10 @@ class RoundSteps:
     lr_scales: Optional[jnp.ndarray] = None
     lat: Optional[jnp.ndarray] = None
     goodput: Optional[jnp.ndarray] = None
+    # fault injection (core/faults.py): the declarative plan plus its PRF
+    # root key — None disables every fault branch statically
+    faults: Optional[Any] = None
+    fault_key: Optional[jax.Array] = None
 
     # ------------------------------------------------------------------
     def local_train(self, params, opt_state, bx, by, active, shard=None,
@@ -107,7 +117,7 @@ class RoundSteps:
 
     # ------------------------------------------------------------------
     def round_time(self, Wm, active, nbytes, deg_eff, shard=None, *,
-                   reduce: str = "max"):
+                   reduce: str = "max", lat_mult=None):
         """Simulated round wall-clock, traced — the same compute+comm
         formula as ``NetworkModel.round_time`` (both call
         ``network.node_round_times``; an equivalence test pins them
@@ -145,6 +155,10 @@ class RoundSteps:
             offdiag = 1.0 - jnp.eye(n, dtype=jnp.float32)
             A = (Wm * offdiag > 0).astype(jnp.float32)
             lat, gp = self.lat, self.goodput
+        if lat_mult is not None:
+            # per-edge latency surges (fault injection): lat_mult is
+            # aligned with A's edge layout (neighbor slots or dense)
+            lat = lat * lat_mult
         ct = shard.local(self.compute_node) if shard is not None else self.compute_node
         node_t = node_round_times(A, lat, gp, per_edge, ct, self.parallel_sends)
         if active is not None:
@@ -174,6 +188,31 @@ class RoundSteps:
         return node_t - ct  # caller adds compute back, like the dense path
 
     # ------------------------------------------------------------------
+    def _secure_recovery_bytes(self, active, shard=None):
+        """Wire bytes of the Bonawitz seed-recovery pass under churn: one
+        revealed seed share per (live receiver, live sender, dropped
+        co-neighbor) triple of the secure-aggregation neighbor table —
+        the surviving co-neighbors re-send the dropped pair's key-chain
+        material so the receiver can subtract its PRF masks.  Sharded:
+        counted over this device's receiver rows, psum'd to the global
+        scalar every device returns."""
+        from repro.core.secure import SEED_SHARE_BYTES
+
+        nbr = jnp.asarray(self.sharing._nbr)
+        valid = jnp.asarray(self.sharing._valid, jnp.float32)
+        if shard is not None:
+            nbr, valid = shard.local(nbr), shard.local(valid)
+            act_g = shard.gather(active)
+        else:
+            act_g = active
+        a = jnp.take(act_g.astype(jnp.float32), nbr, axis=0)   # (B, D)
+        live, dead = valid * a, valid * (1.0 - a)
+        pairs = jnp.sum(active * live.sum(1) * dead.sum(1))
+        if shard is not None:
+            pairs = shard.psum(pairs)
+        return pairs * SEED_SHARE_BYTES
+
+    # ------------------------------------------------------------------
     def train_and_mix(self, params, opt_state, share_state, bx, by, W, active,
                       rnd, shard=None, *, time_reduce: str = "max"):
         """One round: local step, then the share/mix step through the
@@ -184,7 +223,23 @@ class RoundSteps:
         inside a shard_map body (all node-stacked operands are then this
         device's row blocks).  ``time_reduce`` is forwarded to
         :meth:`round_time` — 'max' for the synchronous barrier scalar,
-        'none' for the per-node vector."""
+        'none' for the per-node vector.
+
+        With ``self.faults`` set (a ``core.faults.FaultPlan``), the round
+        additionally injects message-level faults: per-edge message loss
+        renormalizes the mixing operand (``edge_reweight``) while wire
+        bytes and link time are still spent (the sender does not know);
+        latency spikes multiply the affected edges' latency in the traced
+        round time; payload corruption hits post-mix rows and the
+        self-healing guard rolls detected (non-finite) rows back to the
+        start-of-round snapshot.  Returns a 6-tuple ``(params, opt_state,
+        share_state, nbytes, sim_t, fstats)`` where ``fstats`` is the
+        static-schema fault-counter dict (``faults.STAT_KEYS``)."""
+        plan = self.faults
+        fstats = faults_lib.zero_stats()
+        guard = plan is not None and plan.corrupt_prob > 0
+        if guard:
+            snap = (params, opt_state, share_state)  # last-good snapshot
         key = jax.random.fold_in(self.base_key, rnd)
         params, opt_state = self.local_train(params, opt_state, bx, by, active, shard)
         if active is not None:
@@ -202,10 +257,56 @@ class RoundSteps:
                 Wm, deg_eff = participation_reweight(W, active)
         else:
             Wm, deg_eff = W, self.mean_degree
+        # --- message-level edge faults (single-host; validated) ------------
+        # the *mixing* operand drops lost edges (renormalized), but wire
+        # bytes and simulated link time are charged on the churn-level
+        # operand Wm: the sender transmitted, the network just lost it
+        Wm_mix, lat_mult = Wm, None
+        if plan is not None and plan.edge_faults:
+            if isinstance(Wm, SparseTopology):
+                n_rows, d = Wm.nbr.shape
+                live, spike = faults_lib.edge_draws(
+                    self.fault_key, rnd, jnp.arange(n_rows), d, plan
+                )
+                sent = (Wm.w > 0).astype(jnp.float32)
+                Wm_mix = edge_reweight_sparse(Wm, live)
+            else:
+                n = Wm.shape[0]
+                live, spike = faults_lib.edge_draws(
+                    self.fault_key, rnd, jnp.arange(n), n, plan
+                )
+                sent = (
+                    Wm * (1.0 - jnp.eye(n, dtype=jnp.float32)) > 0
+                ).astype(jnp.float32)
+                Wm_mix = edge_reweight(Wm, live)
+            dropped = jnp.sum(sent * (1.0 - live))
+            spiked = jnp.sum(sent * spike)
+            if plan.latency_spike_prob > 0:
+                lat_mult = 1.0 + spike * (plan.latency_spike_factor - 1.0)
+            # drops are absorbed by renormalization, spikes by late
+            # delivery: survived by design, never silently lost
+            fstats["faults_injected"] += dropped + spiked
+            fstats["faults_survived"] += dropped + spiked
         X = jax.vmap(tree_vector)(params)
+        share_kw = {}
+        if getattr(self.sharing, "needs_act", False) and active is not None:
+            share_kw["act"] = active
         X2, new_share, nbytes = self.sharing.round(
-            X, Wm, share_state, key, degree=deg_eff, rnd=rnd
+            X, Wm_mix, share_state, key, degree=deg_eff, rnd=rnd, **share_kw
         )
+        if share_kw:
+            rec = self._secure_recovery_bytes(active, shard)
+            nbytes = nbytes + rec
+            fstats["recovery_bytes"] += rec
+        # --- payload corruption (post-mix, in flight) ----------------------
+        if guard:
+            cmask = faults_lib.corruption_mask(
+                self.fault_key, rnd, jnp.arange(X2.shape[0]), plan
+            )
+            if active is not None:
+                cmask = cmask * active  # a down node received nothing
+            X2 = faults_lib.corrupt_rows(X2, cmask, plan.corrupt_mode)
+            fstats["faults_injected"] += jnp.sum(cmask)
         if active is not None:
             # a down node transmitted nothing: its sharing bookkeeping
             # (TopK last_shared, CHOCO xhat — node-stacked leaves) must not
@@ -221,10 +322,23 @@ class RoundSteps:
             params = node_where(active, new_params, params)
         else:
             params = new_params
+        # --- self-healing step guard: roll back non-finite rows ------------
+        if guard:
+            bad = faults_lib.nonfinite_rows(X2)
+            if active is not None:
+                bad = bad * active
+            good = 1.0 - bad
+            p0, o0, s0 = snap
+            params = node_where(good, params, p0)
+            opt_state = node_where(good, opt_state, o0)
+            share_state = node_where(good, share_state, s0)
+            nbad = jnp.sum(bad)
+            fstats["faults_detected"] += nbad
+            fstats["faults_recovered"] += nbad
         nbytes = jnp.asarray(nbytes, jnp.float32)
         if self.lat is not None:
             sim_t = self.round_time(Wm, active, nbytes, deg_eff, shard,
-                                    reduce=time_reduce)
+                                    reduce=time_reduce, lat_mult=lat_mult)
         elif time_reduce == "none":
             # no network model: comm is free but per-node compute time still
             # drives the virtual clocks (matching the async scheduler, whose
@@ -235,4 +349,4 @@ class RoundSteps:
             sim_t = node_t
         else:
             sim_t = jnp.float32(0.0)
-        return params, opt_state, share_state, nbytes, sim_t
+        return params, opt_state, share_state, nbytes, sim_t, fstats

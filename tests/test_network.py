@@ -25,6 +25,17 @@ class TestLinkSpec:
         lossy = LinkSpec(1e9, 0.0, drop_rate=0.5)
         assert lossy.transfer_time(1e6) == pytest.approx(2 * clean.transfer_time(1e6))
 
+    @pytest.mark.parametrize("bad", [1.0, 1.5, -0.1, 2.0])
+    def test_drop_rate_domain_rejected(self, bad):
+        """drop_rate >= 1 (or < 0) is a construction error now — the old
+        goodput clamp silently modeled a near-dead link instead."""
+        with pytest.raises(ValueError, match="drop_rate"):
+            LinkSpec(1e9, 1e-3, drop_rate=bad)
+
+    def test_drop_rate_boundary_values_ok(self):
+        assert LinkSpec(1e9, 0.0, drop_rate=0.0).goodput_bps() == 1e9
+        assert LinkSpec(1e9, 0.0, drop_rate=0.999).goodput_bps() == pytest.approx(1e6)
+
 
 class TestMapping:
     def test_round_robin(self):

@@ -349,10 +349,47 @@ class TestValidate:
         self._bad("single-host", semantics="local", shard_devices=2)
         self._bad("single-host", semantics="async", shard_devices=2)
 
-    def test_secure_rejects_churn_axes(self):
-        self._bad("churn", secure=True, participation=0.9)
-        self._bad("churn", secure=True, churn_machines=4, participation=0.9)
+    def test_secure_under_churn_needs_recovery(self):
+        """secure=True under churn is no longer a flat rejection: it needs
+        the Bonawitz seed-recovery pass (secure_recovery=True)."""
+        self._bad("secure_recovery", secure=True, participation=0.9)
+        self._bad("secure_recovery", secure=True, churn_machines=4,
+                  participation=0.9)
         self._bad("static graph", secure=True, topology="dynamic")
+        # the recovery knob unlocks both churn axes
+        DLConfig(secure=True, participation=0.9,
+                 secure_recovery=True).validate()
+        DLConfig(secure=True, participation=0.9, churn_machines=4,
+                 secure_recovery=True).validate()
+
+    def test_secure_recovery_needs_secure(self):
+        self._bad("needs secure=True", secure_recovery=True)
+
+    def test_fault_plan_cross_knobs(self):
+        """FaultPlan composes with churn/secure/async but not with the
+        legacy dispatch, sharding, or the cohort body."""
+        from repro.core import FaultPlan
+
+        plan = FaultPlan(msg_loss=0.1)
+        DLConfig(faults=plan).validate()
+        DLConfig(faults=plan, participation=0.5).validate()
+        DLConfig(faults=plan, semantics="async",
+                 async_gossip="pairwise").validate()
+        # secure composes with corruption/spikes/crashes, not per-edge loss
+        DLConfig(secure=True, faults=FaultPlan(corrupt_prob=0.1,
+                                               crashes=((0, 1, 2),),
+                                               latency_spike_prob=0.1),
+                 secure_recovery=True, participation=0.9).validate()
+        self._bad("per-edge", secure=True, faults=plan)
+        # crash schedules are churn: secure needs the recovery pass
+        self._bad("secure_recovery", secure=True,
+                  faults=FaultPlan(crashes=((0, 1, 2),)))
+        self._bad("chunk_rounds", faults=plan, chunk_rounds=0)
+        self._bad("single-host", faults=plan, shard_devices=2)
+        self._bad("cohort_capacity", faults=plan, semantics="async",
+                  async_gossip="pairwise", cohort_capacity=8)
+        self._bad("out of range", faults=FaultPlan(crashes=((99, 0, 2),)))
+        self._bad("invalid FaultPlan", faults=FaultPlan(msg_loss=1.5))
 
     def test_secure_rejects_payload_knobs(self):
         self._bad("secure", secure=True, payload="on")

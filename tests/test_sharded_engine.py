@@ -165,6 +165,18 @@ class TestShardedEngine:
         _assert_equivalent(topology="regular", degree=5, secure=True,
                            shard_backend="ppermute")
 
+    def test_secure_churn_recovery(self):
+        """secure=True under churn via the Bonawitz seed-recovery pass:
+        the sharded recovery schedule (canonical tables gathered at this
+        device's rows) must reproduce the single-device trajectory."""
+        _assert_equivalent(topology="regular", degree=5, secure=True,
+                           participation=0.6, secure_recovery=True)
+
+    def test_secure_churn_recovery_machine_correlated(self):
+        _assert_equivalent(topology="regular", degree=5, secure=True,
+                           participation=0.6, churn_machines=4,
+                           secure_recovery=True)
+
     def test_randomk_per_node_keys(self):
         _assert_equivalent(topology="regular", degree=5, sharing="randomk")
 
