@@ -9,7 +9,6 @@ accuracies, are the reproduction target (see EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 from typing import Callable, Dict, List
@@ -143,10 +142,11 @@ def memory_snapshot() -> Dict:
 def save_results(bench: str, records: List[Dict]):
     """Write one bench's records plus a trailing ``_memory`` record — every
     bench script inherits peak/live memory capture in its saved JSON, which
-    is what makes bounded-memory gates recorded, inspectable quantities."""
-    os.makedirs(RESULTS_DIR, exist_ok=True)
+    is what makes bounded-memory gates recorded, inspectable quantities.
+    Atomic (temp + ``os.replace``): a crashed or killed bench process can
+    never leave a truncated ``results/*.json`` behind."""
+    from repro.utils.io import atomic_write_json
+
     path = os.path.join(RESULTS_DIR, f"{bench}.json")
     records = list(records) + [{"name": "_memory", **memory_snapshot()}]
-    with open(path, "w") as f:
-        json.dump(records, f, indent=1)
-    return path
+    return atomic_write_json(path, records)

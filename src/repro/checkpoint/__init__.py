@@ -1,1 +1,6 @@
-from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_checkpoint
+from repro.checkpoint.checkpoint import (
+    save_checkpoint,
+    load_checkpoint,
+    latest_checkpoint,
+    restore_tree,
+)

@@ -60,6 +60,26 @@ def load_checkpoint(path: str, step: Optional[int] = None, like: Optional[dict] 
     return step, out
 
 
+def restore_tree(like: Any, nested: Optional[dict]):
+    """Rebuild a pytree with ``like``'s structure from the nested-dict leaf
+    form :func:`load_checkpoint` returns — the inverse of ``_flatten``'s
+    path-join, so ``restore_tree(t, load(save(t)))`` round-trips any tree
+    the engine checkpoints (params / opt_state / share_state).  Leaves come
+    back as jnp arrays in their saved dtypes.  ``nested=None`` (a tree with
+    no array leaves, e.g. stateless sharing's ``()``) returns ``like``."""
+    if nested is None:
+        return like
+    import jax.numpy as jnp
+
+    def pick(path, _leaf):
+        node = nested
+        for p in path:
+            node = node[str(getattr(p, "key", getattr(p, "idx", p)))]
+        return jnp.asarray(node)
+
+    return jax.tree_util.tree_map_with_path(pick, like)
+
+
 def latest_checkpoint(path: str) -> Optional[int]:
     if not os.path.isdir(path):
         return None

@@ -101,6 +101,13 @@ class DLConfig:
     """Experiment specification (paper Fig. 1 'specifications' input)."""
 
     n_nodes: int = 16
+    # execution backend: 'simulated' — the in-process RoundEngine (every
+    # node a slot of the stacked node axis, time simulated); 'processes' —
+    # the real-network runtime (repro.runtime): K OS processes each owning
+    # a row-block of nodes, gossiping the payload wire format over real
+    # TCP sockets on real clocks (failure detection, retry/backoff,
+    # graceful degradation on peer death)
+    backend: str = "simulated"  # simulated | processes
     topology: str = "regular"  # ring | regular | fully | star | dynamic | file:<path>
     degree: int = 5
     sharing: str = "full"      # full | randomk | topk | choco | quant
@@ -174,6 +181,49 @@ class DLConfig:
 
         if self.semantics not in ("sync", "local", "async"):
             bad(f"unknown semantics {self.semantics!r} (sync|local|async)")
+        if self.backend not in ("simulated", "processes"):
+            bad(f"unknown backend {self.backend!r} (simulated|processes)")
+        # -- real-network process backend ----------------------------------
+        if self.backend == "processes":
+            if self.shard_devices > 0:
+                bad("backend='processes' shards nodes over OS processes; "
+                    "shard_devices is the simulated backend's device mesh — "
+                    "drop one of the two")
+            if self.semantics != "sync":
+                bad(f"backend='processes' implements the synchronous round "
+                    f"barrier only for now (got semantics={self.semantics!r});"
+                    " use the simulated backend for local/async semantics")
+            if self.secure:
+                bad("backend='processes' does not run secure aggregation "
+                    "over the socket transport yet; set secure=False or use "
+                    "the simulated backend")
+            if self.faults is not None:
+                bad("FaultPlan injects faults into the *simulated* step; the "
+                    "processes backend takes real faults (kill a worker, see "
+                    "examples/processes.py) — drop the FaultPlan")
+            if self.participation < 1.0 or self.churn_machines > 0:
+                bad("simulated churn masks (participation/churn_machines) "
+                    "don't apply to real processes; model churn by killing "
+                    "workers instead")
+            if self.cohort_capacity > 0 or self.batch_keying != "stream":
+                bad("cohort_capacity/batch_keying='node' are async "
+                    "population-scale knobs of the simulated backend")
+            if self.topology in ("fully", "star") or self.mixing == "dense":
+                bad("processes workers gossip over sparse neighbor tables; "
+                    "fully|star topologies / mixing='dense' have no bounded "
+                    "per-peer send set — use a sparse overlay")
+            if self.topology == "dynamic":
+                bad("backend='processes' needs a static graph to derive "
+                    "its per-peer send/receive sets; topology='dynamic' "
+                    "re-draws them every round")
+            if self.sharing.lower() not in ("full", "randomk", "random"):
+                bad(f"backend='processes' serializes sharing='full' rows or "
+                    f"sharing='randomk' (idx, val) payloads on the wire; "
+                    f"{self.sharing!r} is stateful/unsupported there — use "
+                    "the simulated backend")
+            if self.randk_sampler != "uniform":
+                bad("backend='processes' wires the uniform randomk payload "
+                    "only (strided phases are a simulated fast path)")
         if self.async_gossip not in ("neighborhood", "pairwise"):
             bad(f"unknown async_gossip {self.async_gossip!r} "
                 "(neighborhood|pairwise)")
@@ -398,6 +448,13 @@ class RoundEngine:
         heterogeneous_lrs: Optional[np.ndarray] = None,
     ):
         dl.validate()
+        if dl.backend == "processes":
+            raise ValueError(
+                "RoundEngine is the simulated backend; backend='processes' "
+                "runs K real OS processes — construct "
+                "repro.runtime.ProcessRunner(dl, workload) directly, or pass "
+                "workload= to DecentralizedRunner and it will dispatch"
+            )
         self.dl = dl
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
@@ -591,6 +648,10 @@ class RoundEngine:
         self.history: List[Dict] = []
         self.bytes_sent = 0.0
         self.sim_time_s = 0.0
+        # crash-resume cursor: load_state() advances it so run() continues
+        # from the checkpointed round instead of round 0
+        self._start_round = 0
+        self.rounds_done = 0
         self._eval_jit = jax.jit(self._eval)
 
     def _resolve_shard_backend(self) -> str:
@@ -670,12 +731,12 @@ class RoundEngine:
         ev = max(dl.eval_every, 1)
         t0 = time.time()
         if self.chunk == 0:  # legacy per-round dispatch (sync only)
-            for rnd in range(rounds):
+            for rnd in range(self._start_round, rounds):
                 self.scheduler.run_legacy_round(rnd)
                 if rnd % ev == 0 or rnd == rounds - 1:
                     self._record(rnd, tx, ty, t0, log)
         else:
-            rnd = 0
+            rnd = self._start_round
             while rnd < rounds:
                 nxt = -(-rnd // ev) * ev  # next eval round >= rnd
                 if nxt >= rounds:
@@ -686,8 +747,47 @@ class RoundEngine:
                     self.scheduler.run_span(rnd, r)
                     rnd += r
                 self._record(nxt, tx, ty, t0, log)
+        self.rounds_done = max(rounds, self._start_round)
         self._dump_results()
         return self.history
+
+    # ------------------------------------------------------------------
+    # crash-resume: checkpoint/ integration.  Batches are keyed by absolute
+    # round and gossip/sharing draws by fold_in(base_key, rnd), so a
+    # restarted process that restores (params, opt_state, share_state) and
+    # continues from the saved round reproduces the uninterrupted
+    # trajectory exactly (test_resume.py pins this across a real process
+    # restart).
+    # ------------------------------------------------------------------
+    def save_state(self, path: str, step: Optional[int] = None) -> str:
+        """Checkpoint the node-stacked engine state plus the round cursor
+        into ``path`` (directory).  Returns the checkpoint file path."""
+        if self.dl.semantics != "sync":
+            raise ValueError(
+                "save_state captures the synchronous barrier state only; "
+                "the local/async virtual clocks are not checkpointed yet"
+            )
+        from repro.checkpoint import save_checkpoint
+
+        step = self.rounds_done if step is None else step
+        return save_checkpoint(
+            path, step, params=self.params, opt_state=self.opt_state,
+            share_state=self.share_state,
+        )
+
+    def load_state(self, path: str, step: Optional[int] = None) -> int:
+        """Restore a ``save_state`` checkpoint (latest in ``path`` unless
+        ``step`` names one) and position ``run()`` to continue from it."""
+        from repro.checkpoint import load_checkpoint, restore_tree
+
+        step, trees = load_checkpoint(path, step)
+        self.params = restore_tree(self.params, trees.get("params"))
+        self.opt_state = restore_tree(self.opt_state, trees.get("opt_state"))
+        self.share_state = restore_tree(
+            self.share_state, trees.get("share_state")
+        )
+        self._start_round = self.rounds_done = int(step)
+        return int(step)
 
     def _dump_results(self):
         """Per-node JSON results, DecentralizePy-style (aggregated later)."""

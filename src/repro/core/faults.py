@@ -227,3 +227,20 @@ def zero_stats():
     """The all-zero fstats record — the static per-step schema every
     scheduler emits (see ``STAT_KEYS``)."""
     return {k: jnp.float32(0.0) for k in STAT_KEYS}
+
+
+def retry_backoff_delay(retries, base_s: float, cap: int):
+    """Seconds to wait before retry number ``retries``: base·2^min(k, cap).
+
+    THE retry policy, shared by both clocks: the async scheduler charges it
+    on the *virtual* clock after a lost pairwise exchange (``retries`` is a
+    traced per-node float32 vector there), and the real-network runtime
+    (``repro.runtime``) sleeps it on the *wall* clock between socket send
+    attempts (``retries`` is a host int).  One formula, so the simulated
+    and measured retry behaviors cannot drift apart.
+    """
+    if isinstance(retries, jax.Array):
+        return base_s * 2.0 ** jnp.minimum(
+            retries.astype(jnp.float32), jnp.float32(cap)
+        )
+    return base_s * 2.0 ** min(int(retries), int(cap))

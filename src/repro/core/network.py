@@ -209,3 +209,12 @@ def paper_testbed(n_nodes: int) -> NetworkModel:
 def wan_deployment(n_nodes: int) -> NetworkModel:
     """Geo-distributed deployment (every node its own machine, WAN links)."""
     return NetworkModel(Mapping(n_nodes, n_nodes), LOOPBACK, WAN)
+
+
+def localhost_deployment(n_nodes: int) -> NetworkModel:
+    """Every node on ONE machine, all links loopback — the modeled twin of
+    the ``backend='processes'`` localhost runs.  ``runtime.calibrate``
+    compares this model's :meth:`NetworkModel.round_time` against measured
+    per-round wall-clock, which is what makes the simulated bench gates
+    defensible as predictions rather than definitions."""
+    return NetworkModel(Mapping(n_nodes, 1), LOOPBACK, LOOPBACK)

@@ -44,18 +44,37 @@ class DecentralizedRunner:
     def __init__(
         self,
         dl: DLConfig,
-        init_params_fn: Callable,
-        loss_fn: Callable,
-        acc_fn: Callable,
-        optimizer: Optimizer,
-        batcher,
+        init_params_fn: Optional[Callable] = None,
+        loss_fn: Optional[Callable] = None,
+        acc_fn: Optional[Callable] = None,
+        optimizer: Optional[Optimizer] = None,
+        batcher=None,
         heterogeneous_lrs: Optional[np.ndarray] = None,
+        workload: Optional[Dict] = None,
+        **runner_kw,
     ):
         self.dl = dl
-        self.engine = RoundEngine(
-            dl, init_params_fn, loss_fn, acc_fn, optimizer, batcher,
-            heterogeneous_lrs=heterogeneous_lrs,
-        )
+        if dl.backend == "processes":
+            # real-network backend: callables can't cross the process
+            # boundary — workers rebuild the experiment from a declarative
+            # workload spec (repro.runtime.runner.build_workload)
+            if workload is None:
+                raise ValueError(
+                    "backend='processes' rebuilds the experiment inside "
+                    "each worker process; pass workload={'dataset': ..., "
+                    "'model': ..., 'lr': ...} instead of callables"
+                )
+            from repro.runtime import ProcessRunner
+
+            self.engine = ProcessRunner(dl, workload, **runner_kw)
+        else:
+            assert not runner_kw, (
+                f"unknown kwargs for the simulated backend: {runner_kw}"
+            )
+            self.engine = RoundEngine(
+                dl, init_params_fn, loss_fn, acc_fn, optimizer, batcher,
+                heterogeneous_lrs=heterogeneous_lrs,
+            )
 
     def run(self, rounds: Optional[int] = None, log: bool = True) -> List[Dict]:
         return self.engine.run(rounds, log)

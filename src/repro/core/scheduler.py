@@ -687,10 +687,10 @@ class AsyncScheduler(Scheduler):
                 spiked = ok * spike
                 comm = comm * (1.0 + spike * (plan.latency_spike_factor - 1.0))
                 # retry at the next event, after an exponential backoff on
-                # this node's virtual clock (capped)
-                backoff = lost * plan.retry_backoff_s * 2.0 ** jnp.minimum(
-                    retries.astype(jnp.float32),
-                    jnp.float32(plan.retry_backoff_cap),
+                # this node's virtual clock (capped) — the same policy the
+                # real-network runtime sleeps on the wall clock
+                backoff = lost * faults_lib.retry_backoff_delay(
+                    retries, plan.retry_backoff_s, plan.retry_backoff_cap
                 )
                 recovered = ok_eff * (retries > 0).astype(jnp.float32)
                 retries = jnp.where(

@@ -1,0 +1,22 @@
+"""Real-network execution backend (``DLConfig.backend="processes"``).
+
+The simulated engine emulates N nodes inside one process on a virtual
+clock; this package runs the same experiment as K real OS processes
+gossiping over real TCP sockets on real clocks — the paper's *emulation*
+claim made measurable:
+
+* ``transport``  — length-prefixed frame protocol carrying the payload
+  wire format (full fp32 rows, or (idx, val) payloads with optional
+  int8 + scale header), plus the rendezvous registry protocol.
+* ``peer``       — one worker process owning a contiguous row-block of
+  nodes: asyncio gossip with heartbeat failure detection, send retry
+  with the shared exponential-backoff policy, and graceful degradation
+  (dead peers' edges reweighted via ``sharing.edge_reweight_sparse`` so
+  surviving rows stay row-stochastic).
+* ``runner``     — ``ProcessRunner``: spawns/monitors/kills workers,
+  hosts the rendezvous, merges per-worker results into an engine-shaped
+  history.
+* ``calibrate``  — measured per-round wall-clock vs ``NetworkModel``
+  predictions, recorded into ``results/calibration.json``.
+"""
+from repro.runtime.runner import ProcessRunner, build_workload  # noqa: F401

@@ -1,0 +1,141 @@
+"""Simulator calibration: measured wall-clock vs ``NetworkModel``.
+
+Every bench gate in this repo quotes *simulated* time from the
+``NetworkModel``; this module is the receipt that makes those numbers
+defensible: it runs a real ``backend='processes'`` localhost experiment,
+measures per-round wall-clock at the sync barrier (max over workers,
+compile warm-up excluded), and records measured-vs-modeled into
+``results/calibration.json`` — the modeled side being
+``network.localhost_deployment`` through the same
+``NetworkModel.round_time`` formula the engine traces.
+
+The residual (``implied_compute_s``) is the part the network model does
+not claim to predict — local SGD compute plus serialization/python
+overhead — reported separately so the comparison is honest about what is
+communication and what is not.
+
+CLI:  PYTHONPATH=src python -m repro.runtime.calibrate \
+          --nodes 16 --workers 4 --rounds 12
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.utils.io import atomic_write_json
+
+DEFAULT_OUT = "results/calibration.json"
+
+
+def run_calibration(
+    n_nodes: int = 16,
+    workers: int = 4,
+    rounds: int = 12,
+    *,
+    degree: int = 5,
+    sharing: str = "full",
+    budget: float = 0.1,
+    workload: Optional[Dict] = None,
+    warmup_rounds: int = 2,
+    out_path: str = DEFAULT_OUT,
+    watchdog_s: float = 120.0,
+    log: bool = True,
+) -> Dict:
+    from repro.core.engine import DLConfig, build_graph
+    from repro.core.network import localhost_deployment
+    from repro.runtime.runner import ProcessRunner
+
+    dl = DLConfig(
+        n_nodes=n_nodes, topology="regular", degree=degree, sharing=sharing,
+        budget=budget, rounds=rounds, eval_every=max(rounds, 1),
+        backend="processes",
+    )
+    wl = workload or {
+        "dataset": "cifar10", "model": "mlp", "width": 2,
+        "n_train": 512, "n_test": 256, "lr": 0.05,
+    }
+    runner = ProcessRunner(dl, wl, workers=workers, watchdog_s=watchdog_s)
+    t0 = time.time()
+    runner.run(rounds=rounds, log=log)
+    wall_total = time.time() - t0
+    measured = np.asarray(runner.round_wall_s, np.float64)
+    steady = (
+        measured[warmup_rounds:] if len(measured) > warmup_rounds else measured
+    )
+    # bytes one node sends one neighbor per round, matching the simulator's
+    # accounting (FullSharing: P values in the wire dtype; randomk payload:
+    # k (idx, val) pairs)
+    if sharing.lower() in ("randomk", "random"):
+        k = max(1, int(budget * runner.n_params))
+        item = 1 if dl.payload_quant else 4
+        bytes_per_edge = k * (4 + item) + (4 if dl.payload_quant else 0)
+    else:
+        bytes_per_edge = runner.n_params * 4
+    graph = build_graph(dl)
+    net = localhost_deployment(n_nodes)
+    modeled_comm_s = net.round_time(graph, bytes_per_edge, compute_time_s=0.0)
+    med = float(np.median(steady))
+    record = {
+        "config": {
+            "n_nodes": n_nodes, "workers": workers, "rounds": rounds,
+            "degree": degree, "sharing": sharing, "budget": budget,
+            "dl": dataclasses.asdict(dl), "workload": wl,
+        },
+        "n_params": int(runner.n_params),
+        "bytes_per_edge": float(bytes_per_edge),
+        "measured_round_s": {
+            "min": float(steady.min()),
+            "median": med,
+            "mean": float(steady.mean()),
+            "max": float(steady.max()),
+            "warmup_excluded": int(min(warmup_rounds, len(measured))),
+        },
+        "modeled_round_s": float(modeled_comm_s),
+        # what the model does not claim: compute + framing/python overhead
+        "implied_compute_s": float(med - modeled_comm_s),
+        "ratio_measured_over_modeled": float(med / max(modeled_comm_s, 1e-12)),
+        "per_round_wall_s": [float(x) for x in measured],
+        "total_wall_s": float(wall_total),
+        "wire_bytes_per_node": float(runner.bytes_sent),
+        "counters": runner.counters,
+    }
+    atomic_write_json(out_path, record)
+    if log:
+        print(
+            f"[calibrate] N={n_nodes} K={workers} median round "
+            f"{med * 1e3:.1f}ms vs modeled comm "
+            f"{modeled_comm_s * 1e3:.3f}ms "
+            f"(implied compute {record['implied_compute_s'] * 1e3:.1f}ms) "
+            f"-> {out_path}",
+            flush=True,
+        )
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--nodes", type=int, default=16)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--degree", type=int, default=5)
+    ap.add_argument("--sharing", default="full")
+    ap.add_argument("--budget", type=float, default=0.1)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--watchdog", type=float, default=120.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run for CI (8 rounds, tiny model)")
+    args = ap.parse_args(argv)
+    rounds = 8 if args.smoke else args.rounds
+    run_calibration(
+        args.nodes, args.workers, rounds, degree=args.degree,
+        sharing=args.sharing, budget=args.budget, out_path=args.out,
+        watchdog_s=args.watchdog,
+    )
+
+
+if __name__ == "__main__":
+    main()

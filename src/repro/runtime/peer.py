@@ -1,0 +1,597 @@
+"""One worker process of the real-network backend.
+
+A worker owns a contiguous row-block of ``B = N/K`` nodes and runs the
+synchronous semantics for them on real clocks:
+
+    every round:  local SGD on own rows (jax, in a thread so the event
+                  loop keeps pumping heartbeats) -> serialize the payload
+                  wire format for exactly the rows each peer's nodes
+                  neighbor -> TCP send (per-message timeout, shared
+                  exponential-backoff retry) -> barrier-gather peer
+                  payloads -> mix through the *same* aggregation code as
+                  the simulator (``mixing.apply_W`` / ``mix_payload``)
+                  and keep own rows.
+
+Determinism mirrors the engine exactly — params init from
+``jax.random.key(seed)`` split over all N nodes (sliced to the block),
+batches from the ``NodeBatcher`` PCG64 stream keyed by absolute round,
+payload coordinate draws per-node keyed by *global* id
+(``sharing._randk_idx(rows=...)``), gossip key ``fold_in(base_key, rnd)``
+— which is what makes the loss-free-localhost equivalence oracle
+(process trajectory == simulator trajectory at fp32 tolerance) hold.
+
+## Join/leave protocol and failure detection
+
+Workers discover each other through the rendezvous registry, then hold a
+full mesh of directed TCP connections.  A heartbeat beacon doubles as
+the failure detector: a peer silent for ``dead_timeout_s`` (or whose
+sends exhaust the retry budget) is declared dead, its nodes' edges are
+reweighted away via ``sharing.edge_reweight_sparse`` — surviving rows
+stay row-stochastic, training completes on the survivors.  A graceful
+leave announces itself with a BYE frame (counted as a leave, not a
+fault); a SIGKILL'd worker never says goodbye, so its silence is counted
+in ``faults_detected``.  A per-round watchdog bounds any socket wait so
+a hung transport fails fast instead of stalling forever.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.faults import retry_backoff_delay
+from repro.utils.io import atomic_write_json
+
+HB_TAG = "hb"
+
+
+class PeerWorker:
+    def __init__(self, spec: Dict, wid: int):
+        # jax / engine imports live here so the module is importable (for
+        # the CLI --help and tests) before jax initializes
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import mixing, sharing as sharing_lib
+        from repro.core.engine import DLConfig, build_graph
+        from repro.core.topology import SparseTopology
+        from repro.runtime.runner import build_workload
+        from repro.utils.pytree import tree_unvector, tree_vector
+
+        self.jax, self.jnp = jax, jnp
+        self.spec = spec
+        self.wid = wid
+        dl = DLConfig(**spec["dl"])
+        dl.validate()
+        assert dl.backend == "processes"
+        self.dl = dl
+        self.K = int(spec["workers"])
+        n = dl.n_nodes
+        self.B = n // self.K
+        self.lo, self.hi = wid * self.B, (wid + 1) * self.B
+        self.own_ids = np.arange(self.lo, self.hi)
+        self.rounds = int(spec.get("rounds", dl.rounds))
+        self.ev = max(dl.eval_every, 1)
+        # timeouts / retry policy (PR 7's backoff, now on the wall clock)
+        self.hb_interval_s = float(spec.get("hb_interval_s", 0.25))
+        self.dead_timeout_s = float(spec.get("dead_timeout_s", 3.0))
+        self.watchdog_s = float(spec.get("watchdog_s", 60.0))
+        self.send_timeout_s = float(spec.get("send_timeout_s", 10.0))
+        self.backoff_s = float(spec.get("retry_backoff_s", 0.05))
+        self.backoff_cap = int(spec.get("retry_backoff_cap", 5))
+        self.run_dir = spec["run_dir"]
+        self.rdv = tuple(spec["rendezvous"])
+
+        # --- experiment state (identical derivations to RoundEngine) ----
+        init_fn, loss_fn, acc_fn, opt, batcher = build_workload(
+            spec["workload"], dl
+        )
+        self.batcher = batcher
+        keys = jax.random.split(jax.random.key(dl.seed), n)
+        params_all = jax.vmap(init_fn)(keys)
+        self.params = jax.tree_util.tree_map(
+            lambda a: a[self.lo:self.hi], params_all
+        )
+        self.opt_state = jax.vmap(opt.init)(self.params)
+        self.template = jax.tree_util.tree_map(lambda a: a[0], self.params)
+        X_own = np.asarray(jax.vmap(tree_vector)(self.params), np.float32)
+        self.P = X_own.shape[1]
+        self.X_view = np.zeros((n, self.P), np.float32)
+        self.X_view[self.lo:self.hi] = X_own
+        self._base_key = jax.random.key(dl.seed + 17)
+
+        graph = build_graph(dl)
+        topo = SparseTopology.from_graph(graph)
+        self.nbr = np.asarray(topo.nbr)
+        self.w0 = np.asarray(topo.w, np.float32)
+        self.w_self0 = np.asarray(topo.w_self, np.float32)
+        self._topo_cls = SparseTopology
+        self.live_nodes = np.ones(n, np.float32)
+        self.topo_eff = SparseTopology(
+            jnp.asarray(self.nbr), jnp.asarray(self.w0),
+            jnp.asarray(self.w_self0),
+        )
+        # per-peer send/need sets from the genuine-edge mask (w > 0)
+        valid = self.w0 > 0
+        need = np.zeros((self.K, n), bool)  # need[v, i]: worker v reads row i
+        owner = np.arange(n) // self.B
+        for j in range(n):
+            need[owner[j], self.nbr[j, valid[j]]] = True
+        self.send_to = {
+            v: np.array([i for i in self.own_ids if need[v, i]], np.int32)
+            for v in range(self.K) if v != wid
+        }
+        self.need_from = {
+            v: np.array(
+                [j for j in range(v * self.B, (v + 1) * self.B)
+                 if need[wid, j]], np.int32)
+            for v in range(self.K) if v != wid
+        }
+
+        # --- sharing strategy: full rows or randomk payloads ------------
+        self.payload = dl.sharing.lower() in ("randomk", "random")
+        self.quantize = self.payload and dl.payload_quant
+        self.k = max(1, int(dl.budget * self.P)) if self.payload else 0
+
+        # --- jitted step/mix functions (engine-identical math) ----------
+        L, bs = dl.local_steps, dl.batch_size
+
+        def node_grad(p, x, y):
+            return jax.grad(loss_fn)(p, x, y)
+
+        def local(params, opt_state, bx, by):
+            from repro.optim.optimizers import apply_updates
+
+            for s in range(L):
+                grads = jax.vmap(node_grad)(params, bx[s], by[s])
+                updates, new_opt = jax.vmap(opt.update)(
+                    grads, opt_state, params
+                )
+                params, opt_state = apply_updates(params, updates), new_opt
+            return params, opt_state, jax.vmap(tree_vector)(params)
+
+        self._local = jax.jit(local)
+
+        def mix_full(topo_e, Xv):
+            return mixing.apply_W(topo_e, Xv)[self.lo:self.hi]
+
+        def mix_pay(topo_e, idx, val, Xv):
+            return mixing.mix_payload(
+                topo_e, idx, val, Xv, exact_values=not self.quantize
+            )[self.lo:self.hi]
+
+        self._mix_full = jax.jit(mix_full)
+        self._mix_pay = jax.jit(mix_pay)
+
+        if self.payload:
+            own_rows = jnp.asarray(self.own_ids)
+
+            def emit(key, Xo):
+                idx = sharing_lib._randk_idx(
+                    key, (self.B, self.P), self.k, rows=own_rows
+                )
+                return idx, jnp.take_along_axis(Xo, idx, axis=1)
+
+            self._emit = jax.jit(emit)
+            if self.quantize:
+                from repro.core.compression import (
+                    dequantize_int8, quantize_int8,
+                )
+
+                self._quant = jax.jit(quantize_int8)
+                self._dequant = dequantize_int8
+
+        def unvec(X2):
+            return jax.vmap(lambda v: tree_unvector(v, self.template))(X2)
+
+        self._unvec = jax.jit(unvec)
+        self._eval = jax.jit(
+            lambda p, tx, ty: jax.vmap(lambda q: acc_fn(q, tx, ty))(p)
+        )
+
+        # --- runtime state ----------------------------------------------
+        self.peers: Dict[int, Tuple[str, int]] = {}
+        self.conns: Dict[int, Tuple] = {}
+        self.inbox: Dict[int, asyncio.Queue] = {}
+        self.last_seen: Dict[int, float] = {}
+        self.dead: set = set()
+        self.left: set = set()
+        self._pending_bye: set = set()
+        self.wire_bytes = 0.0
+        self.counters = {"faults_detected": 0, "retry_total": 0, "leaves": 0}
+        self.detect_rounds: Dict[str, int] = {}
+        self.reweight_row_err = 0.0
+        self.round_wall: List[float] = []
+        self.records: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def _warmup(self):
+        """Compile every jitted function before joining the mesh, so no
+        peer mistakes our compile stall for death and the steady-state
+        round walls that calibration records exclude compilation."""
+        jnp = self.jnp
+        idx = self.batcher.round_indices(0, self.dl.local_steps)
+        bx = jnp.asarray(self.batcher.x[idx[:, self.lo:self.hi]])
+        by = jnp.asarray(self.batcher.y[idx[:, self.lo:self.hi]])
+        p, o, Xo = self._local(self.params, self.opt_state, bx, by)
+        Xv = jnp.asarray(self.X_view)
+        if self.payload:
+            key = self.jax.random.fold_in(self._base_key, 0)
+            i, v = self._emit(key, Xo)
+            if self.quantize:
+                c, s = self._quant(v)
+                v = self._dequant(c, s)
+            zi = jnp.zeros((self.dl.n_nodes, self.k), jnp.int32)
+            zv = jnp.zeros((self.dl.n_nodes, self.k), jnp.float32)
+            zi = zi.at[self.lo:self.hi].set(i)
+            zv = zv.at[self.lo:self.hi].set(v)
+            X2 = self._mix_pay(self.topo_eff, zi, zv, Xv)
+        else:
+            X2 = self._mix_full(self.topo_eff, Xv)
+        self._unvec(X2)
+        tx, ty = self.batcher.test_batch()
+        np.asarray(self._eval(p, jnp.asarray(tx), jnp.asarray(ty)))
+
+    # ------------------------------------------------------------------
+    # membership
+    # ------------------------------------------------------------------
+    def _rows_of(self, v: int) -> np.ndarray:
+        return np.arange(v * self.B, (v + 1) * self.B)
+
+    def _mark_gone(self, v: int, rnd: int, *, fault: bool):
+        """Graceful-degradation path: drop worker v's nodes and return
+        their edge mass to the surviving receivers' diagonals
+        (``edge_reweight_sparse`` — the PR 7 reweight, reused on real
+        deaths), so surviving rows stay row-stochastic."""
+        if v in self.dead or v in self.left:
+            return
+        from repro.core.sharing import edge_reweight_sparse
+
+        (self.dead if fault else self.left).add(v)
+        self.live_nodes[self._rows_of(v)] = 0.0
+        live_slots = self.live_nodes[self.nbr]
+        base = self._topo_cls(
+            self.jnp.asarray(self.nbr), self.jnp.asarray(self.w0),
+            self.jnp.asarray(self.w_self0),
+        )
+        self.topo_eff = edge_reweight_sparse(
+            base, self.jnp.asarray(live_slots)
+        )
+        w = np.asarray(self.topo_eff.w)
+        ws = np.asarray(self.topo_eff.w_self)
+        rows = slice(self.lo, self.hi)
+        err = float(np.abs(ws[rows] + w[rows].sum(-1) - 1.0).max())
+        self.reweight_row_err = max(self.reweight_row_err, err)
+        if fault:
+            self.counters["faults_detected"] += 1
+        else:
+            self.counters["leaves"] += 1
+        self.detect_rounds[str(v)] = rnd
+        self.conns.pop(v, None)
+
+    def _live_peers(self) -> List[int]:
+        return [v for v in range(self.K)
+                if v != self.wid and v not in self.dead and v not in self.left]
+
+    # ------------------------------------------------------------------
+    # transport
+    # ------------------------------------------------------------------
+    async def _handle_conn(self, reader, writer):
+        from repro.runtime import transport as tp
+
+        try:
+            while True:
+                ftype, body = await tp.read_frame(reader)
+                if ftype == tp.MSG_ROWS:
+                    msg = tp.decode_rows(body)
+                    v = msg["sender"]
+                    self.last_seen[v] = time.monotonic()
+                    if v not in self.dead and v not in self.left:
+                        self.inbox[v].put_nowait(msg)
+                elif ftype == tp.MSG_HEARTBEAT:
+                    self.last_seen[tp.decode_wid(body)] = time.monotonic()
+                elif ftype == tp.MSG_BYE:
+                    # graceful leave: the barrier stops expecting rows from
+                    # v (same reweight as a death, counted as a leave)
+                    self._pending_bye.add(tp.decode_wid(body))
+        except (asyncio.IncompleteReadError, ConnectionError, OSError,
+                ValueError):
+            return
+        finally:
+            writer.close()
+
+    async def _heartbeat_loop(self):
+        from repro.runtime import transport as tp
+
+        beat = tp.encode_wid(self.wid)
+        while True:
+            await asyncio.sleep(self.hb_interval_s)
+            for v in self._live_peers():
+                conn = self.conns.get(v)
+                if conn is None:
+                    continue
+                try:
+                    conn[1].write(
+                        tp._FRAME.pack(tp.MSG_HEARTBEAT, len(beat)) + beat
+                    )
+                except OSError:
+                    pass
+
+    async def _send_rows(self, v: int, rnd: int, body: bytes) -> bool:
+        """Per-message send with timeout and the shared exponential
+        backoff; exhausting the retry budget declares the peer dead."""
+        from repro.runtime import transport as tp
+
+        for attempt in range(self.backoff_cap + 2):
+            try:
+                if v not in self.conns:
+                    self.conns[v] = await asyncio.open_connection(
+                        *self.peers[v]
+                    )
+                await asyncio.wait_for(
+                    tp.write_frame(self.conns[v][1], tp.MSG_ROWS, body),
+                    timeout=self.send_timeout_s,
+                )
+                self.wire_bytes += len(body) + 5
+                return True
+            except (OSError, asyncio.TimeoutError):
+                self.conns.pop(v, None)
+                self.counters["retry_total"] += 1
+                await asyncio.sleep(
+                    retry_backoff_delay(attempt, self.backoff_s,
+                                        self.backoff_cap)
+                )
+        self._mark_gone(v, rnd, fault=True)
+        return False
+
+    async def _gather(self, rnd: int) -> Dict[int, Dict]:
+        """The sync barrier: one ROWS frame per live peer for this round.
+        TCP ordering + one frame per (peer, round) means the next frame
+        from a peer is this round's — anything else is a protocol error.
+        Waits are sliced so heartbeat silence can be detected mid-wait;
+        the whole barrier is bounded by the watchdog."""
+        out: Dict[int, Dict] = {}
+        t0 = time.monotonic()
+        for v in list(self.need_from):
+            if not len(self.need_from[v]):
+                continue  # no edge crosses this worker pair
+            while v in self._live_peers() and v not in out:
+                # BYE is FIFO-ordered after the peer's last ROWS frame, so
+                # only honor it once the inbox is drained — a leaver's
+                # final-round contribution still counts
+                if v in self._pending_bye and self.inbox[v].empty():
+                    self._mark_gone(v, rnd, fault=False)
+                    break
+                try:
+                    msg = await asyncio.wait_for(
+                        self.inbox[v].get(), timeout=0.25
+                    )
+                except asyncio.TimeoutError:
+                    now = time.monotonic()
+                    if now - self.last_seen.get(v, t0) > self.dead_timeout_s:
+                        self._mark_gone(v, rnd, fault=True)
+                    if now - t0 > self.watchdog_s:
+                        raise RuntimeError(
+                            f"worker {self.wid}: watchdog — round {rnd} "
+                            f"barrier stalled > {self.watchdog_s}s on peer "
+                            f"{v}"
+                        )
+                    continue
+                if msg["round"] < rnd:
+                    continue  # pre-death stragglers of an old round
+                if msg["round"] > rnd:
+                    raise RuntimeError(
+                        f"worker {self.wid}: protocol error — peer {v} "
+                        f"sent round {msg['round']} during round {rnd}"
+                    )
+                out[v] = msg
+        return out
+
+    # ------------------------------------------------------------------
+    # the round
+    # ------------------------------------------------------------------
+    async def _round(self, rnd: int):
+        import jax
+
+        jnp = self.jnp
+        from repro.runtime import transport as tp
+
+        loop = asyncio.get_running_loop()
+        t0 = time.monotonic()
+        idx = self.batcher.round_indices(rnd, self.dl.local_steps)
+        bx = self.batcher.x[idx[:, self.lo:self.hi]]
+        by = self.batcher.y[idx[:, self.lo:self.hi]]
+
+        def _step():
+            p, o, Xo = self._local(
+                self.params, self.opt_state, jnp.asarray(bx), jnp.asarray(by)
+            )
+            return p, o, np.asarray(Xo, np.float32)
+
+        self.params, self.opt_state, X_own = await loop.run_in_executor(
+            None, _step
+        )
+        self.X_view[self.lo:self.hi] = X_own
+
+        # --- emit + send ------------------------------------------------
+        if self.payload:
+            key = jax.random.fold_in(self._base_key, rnd)
+
+            def _emit():
+                i, v = self._emit(key, jnp.asarray(X_own))
+                if self.quantize:
+                    c, s = self._quant(v)
+                    return (np.asarray(i), np.asarray(c),
+                            np.asarray(s, np.float32).reshape(-1),
+                            np.asarray(self._dequant(c, s), np.float32))
+                return np.asarray(i), None, None, np.asarray(v, np.float32)
+
+            idx_own, codes_own, scale_own, val_own = (
+                await loop.run_in_executor(None, _emit)
+            )
+        sends = []
+        for v in self._live_peers():
+            ids = self.send_to[v]
+            if not len(ids):
+                continue
+            loc = ids - self.lo
+            if not self.payload:
+                body = tp.encode_rows(
+                    rnd, self.wid, ids, tp.FMT_FULL_F32, rows=X_own[loc]
+                )
+            elif self.quantize:
+                body = tp.encode_rows(
+                    rnd, self.wid, ids, tp.FMT_PAYLOAD_I8, idx=idx_own[loc],
+                    codes=codes_own[loc], scale=scale_own[loc],
+                )
+            else:
+                body = tp.encode_rows(
+                    rnd, self.wid, ids, tp.FMT_PAYLOAD_F32, idx=idx_own[loc],
+                    val=val_own[loc],
+                )
+            sends.append(self._send_rows(v, rnd, body))
+        if sends:
+            await asyncio.gather(*sends)
+
+        # --- barrier gather + aggregate ---------------------------------
+        got = await self._gather(rnd)
+        if self.payload:
+            idx_all = np.zeros((self.dl.n_nodes, self.k), np.int32)
+            val_all = np.zeros((self.dl.n_nodes, self.k), np.float32)
+            idx_all[self.lo:self.hi] = idx_own
+            val_all[self.lo:self.hi] = val_own
+            for msg in got.values():
+                if msg["fmt"] == tp.FMT_PAYLOAD_I8:
+                    val = np.asarray(self._dequant(
+                        self.jnp.asarray(msg["codes"]),
+                        self.jnp.asarray(msg["scale"][:, None]),
+                    ), np.float32)
+                else:
+                    val = msg["val"]
+                idx_all[msg["ids"]] = msg["idx"]
+                val_all[msg["ids"]] = val
+        else:
+            for msg in got.values():
+                self.X_view[msg["ids"]] = msg["rows"]
+
+        def _mix():
+            Xv = jnp.asarray(self.X_view)
+            if self.payload:
+                X2 = self._mix_pay(
+                    self.topo_eff, jnp.asarray(idx_all), jnp.asarray(val_all),
+                    Xv,
+                )
+            else:
+                X2 = self._mix_full(self.topo_eff, Xv)
+            return self._unvec(X2), np.asarray(X2, np.float32)
+
+        self.params, X2_own = await loop.run_in_executor(None, _mix)
+        self.X_view[self.lo:self.hi] = X2_own
+        self.round_wall.append(time.monotonic() - t0)
+
+    # ------------------------------------------------------------------
+    async def main(self):
+        from repro.runtime import transport as tp
+
+        server = await asyncio.start_server(
+            self._handle_conn, "127.0.0.1", 0
+        )
+        my_port = server.sockets[0].getsockname()[1]
+        loop = asyncio.get_running_loop()
+        # compile before joining: peers time liveness, not XLA
+        await loop.run_in_executor(None, self._warmup)
+        self.peers = await tp.rendezvous_register(
+            self.rdv[0], self.rdv[1], self.wid, "127.0.0.1", my_port,
+            timeout_s=float(self.spec.get("join_timeout_s", 30.0)),
+        )
+        now = time.monotonic()
+        for v in range(self.K):
+            if v == self.wid:
+                continue
+            self.inbox[v] = asyncio.Queue()
+            self.last_seen[v] = now
+            r, w = await tp.open_with_retry(*self.peers[v])
+            self.conns[v] = (r, w)
+        hb = asyncio.create_task(self._heartbeat_loop())
+        t_start = time.monotonic()
+        tx, ty = self.batcher.test_batch()
+        txj, tyj = self.jnp.asarray(tx), self.jnp.asarray(ty)
+        try:
+            for rnd in range(self.rounds):
+                await self._round(rnd)
+                self._write_progress(rnd)
+                if rnd % self.ev == 0 or rnd == self.rounds - 1:
+                    accs = np.asarray(self._eval(self.params, txj, tyj))
+                    self.records.append({
+                        "round": rnd,
+                        "accs": [float(a) for a in accs],
+                        "bytes_wire": float(self.wire_bytes),
+                        "wall_s": time.monotonic() - t_start,
+                        **{k: int(v) for k, v in self.counters.items()},
+                    })
+        finally:
+            hb.cancel()
+            bye = tp.encode_wid(self.wid)
+            for v in self._live_peers():
+                conn = self.conns.get(v)
+                if conn is not None:
+                    try:
+                        await tp.write_frame(conn[1], tp.MSG_BYE, bye)
+                    except OSError:
+                        pass
+            server.close()
+        self._write_results()
+
+    # ------------------------------------------------------------------
+    def _write_progress(self, rnd: int):
+        """Crash-consistent progress marker (the runner's kill trigger and
+        liveness probe): temp + rename, like every result file here."""
+        path = os.path.join(self.run_dir, f"w{self.wid}.progress")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(str(rnd))
+        os.replace(tmp, path)
+
+    def _write_results(self):
+        out = {
+            "worker": self.wid,
+            "rows": [int(self.lo), int(self.hi)],
+            "n_params": int(self.P),
+            "history": self.records,
+            "round_wall_s": self.round_wall,
+            "wire_bytes": float(self.wire_bytes),
+            "counters": dict(self.counters),
+            "detect_rounds": self.detect_rounds,
+            "reweight_row_err": self.reweight_row_err,
+            "dead_peers": sorted(self.dead),
+            "left_peers": sorted(self.left),
+        }
+        atomic_write_json(
+            os.path.join(self.run_dir, f"worker_{self.wid}.json"), out
+        )
+        fn = os.path.join(self.run_dir, f"worker_{self.wid}_X.npy")
+        tmp = fn + ".tmp.npy"
+        np.save(tmp, self.X_view[self.lo:self.hi])
+        os.replace(tmp, fn)
+
+
+def main(argv: Optional[List[str]] = None):
+    ap = argparse.ArgumentParser(
+        description="one row-block worker of the processes backend"
+    )
+    ap.add_argument("--spec", required=True, help="path to the run spec JSON")
+    ap.add_argument("--worker", type=int, required=True)
+    args = ap.parse_args(argv)
+    with open(args.spec) as f:
+        spec = json.load(f)
+    worker = PeerWorker(spec, args.worker)
+    asyncio.run(worker.main())
+
+
+if __name__ == "__main__":
+    main()

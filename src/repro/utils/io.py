@@ -1,0 +1,25 @@
+"""Crash-consistent file writes.
+
+A killed process (the whole point of the kill test) must never leave a
+truncated/corrupt results file behind: write to a temp file in the same
+directory, then ``os.replace`` — atomic on POSIX, so readers observe
+either the old complete file or the new complete file, never a partial
+one."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+
+def atomic_write_json(path: str, obj: Any, *, indent: int = 1) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=indent)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path

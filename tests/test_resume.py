@@ -1,0 +1,116 @@
+"""Checkpoint crash-resume: an engine restarted from a mid-run
+checkpoint — in the same process or in a *fresh* process — must continue
+the exact uninterrupted trajectory.
+
+The determinism contract makes this exact, not approximate: batch draws
+and gossip payload draws are keyed by the absolute round number, so
+restoring (params, opt_state, share_state) and the round cursor replays
+rounds [step, rounds) identically.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DLConfig, RoundEngine
+from repro.utils.pytree import tree_vector
+
+def _engine(seed=11, rounds=8, sharing="full", **kw):
+    from repro.data import NodeBatcher, make_dataset, sharding_partition
+    from repro.models.mlp import mlp_apply, mlp_init
+    from repro.models.api import cross_entropy
+    from repro.optim import make_optimizer
+
+    dl = DLConfig(n_nodes=8, topology="regular", degree=3, rounds=rounds,
+                  eval_every=4, seed=seed, sharing=sharing, **kw)
+    ds = make_dataset("cifar10", n_train=256, n_test=64, seed=7, sigma=4.0)
+    parts = sharding_partition(ds.train_y, dl.n_nodes, 2, seed=dl.seed)
+    batcher = NodeBatcher(ds.train_x, ds.train_y, parts, dl.batch_size,
+                          seed=dl.seed)
+    init = lambda k: mlp_init(k, hidden=8)  # noqa: E731
+
+    def loss(p, x, y):
+        return cross_entropy(mlp_apply(p, x), y)
+
+    def acc(p, x, y):
+        return (mlp_apply(p, x).argmax(-1) == y).mean()
+
+    return RoundEngine(dl, init, loss, acc, make_optimizer("sgd", 0.05),
+                       batcher)
+
+
+def _X(eng):
+    return np.asarray(jax.vmap(tree_vector)(eng.params))
+
+
+@pytest.mark.parametrize("sharing", ["full", "topk"])
+def test_save_load_roundtrip_continues_exactly(tmp_path, sharing):
+    """In-process: 4 rounds + checkpoint + fresh engine + 4 more rounds
+    == 8 uninterrupted rounds (bitwise, incl. stateful sharing state)."""
+    kw = {"budget": 0.25} if sharing == "topk" else {}
+    ref = _engine(sharing=sharing, **kw)
+    ref.run(log=False)
+
+    half = _engine(sharing=sharing, **kw)
+    half.run(rounds=4, log=False)
+    ckpt_dir = str(tmp_path / "ck")
+    half.save_state(ckpt_dir)
+
+    fresh = _engine(sharing=sharing, **kw)
+    step = fresh.load_state(ckpt_dir)
+    assert step == 4
+    fresh.run(rounds=8, log=False)
+    np.testing.assert_array_equal(_X(fresh), _X(ref))
+
+
+def test_resume_in_fresh_process(tmp_path):
+    """The crash-resume scenario proper: the checkpoint is restored by a
+    *restarted process* (new PRNG state, new jit caches) and the
+    trajectory still continues identically."""
+    ref = _engine()
+    ref.run(log=False)
+
+    half = _engine()
+    half.run(rounds=4, log=False)
+    ckpt_dir = str(tmp_path / "ck")
+    half.save_state(ckpt_dir)
+    out_npy = str(tmp_path / "final_X.npy")
+
+    script = textwrap.dedent(f"""
+        import sys
+        sys.path.insert(0, {os.path.dirname(__file__)!r})
+        import numpy as np, jax
+        from test_resume import _engine, _X
+        eng = _engine()
+        assert eng.load_state({ckpt_dir!r}) == 4
+        eng.run(rounds=8, log=False)
+        np.save({out_npy!r}, _X(eng))
+    """)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    np.testing.assert_array_equal(np.load(out_npy), _X(ref))
+
+
+def test_load_state_picks_named_step(tmp_path):
+    eng = _engine()
+    eng.run(rounds=3, log=False)
+    eng.save_state(str(tmp_path), step=3)
+    eng.run(rounds=6, log=False)
+    eng.save_state(str(tmp_path), step=6)
+    fresh = _engine()
+    assert fresh.load_state(str(tmp_path), step=3) == 3
+    assert fresh.load_state(str(tmp_path)) == 6  # latest wins by default
+
+
+def test_save_state_rejects_async_semantics(tmp_path):
+    eng = _engine(semantics="async", compute_time_s=0.01)
+    with pytest.raises(ValueError, match="synchronous"):
+        eng.save_state(str(tmp_path))

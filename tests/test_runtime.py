@@ -1,0 +1,211 @@
+"""Real-network process backend (``repro.runtime``).
+
+Three layers, cheapest first:
+
+- wire codec roundtrips (pure numpy, no processes),
+- launcher validation errors (no processes),
+- end-to-end multi-process runs over localhost TCP: the equivalence
+  oracle (process trajectory == simulator trajectory on a loss-free
+  network with deterministic seeds) and the kill test (SIGKILL one
+  worker mid-run; survivors detect it, reweight, and converge).
+
+The oracle is the correctness anchor for the whole backend: the worker
+processes call the *same* jitted aggregation functions as the simulator
+on zero-padded full-size arrays, so full-sharing fp32 runs must match
+bitwise and int8 payload runs to ~1 ulp of the dequantization.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DLConfig, RoundEngine
+from repro.runtime import ProcessRunner, build_workload
+from repro.runtime import transport as T
+from repro.utils.io import atomic_write_json
+from repro.utils.pytree import tree_vector
+
+# small, fast workload shared by every process test (width=1 keeps the
+# per-worker jit compile short; the wire format is size-independent)
+WL = {"dataset": "cifar10", "model": "mlp", "width": 1,
+      "n_train": 256, "n_test": 128, "lr": 0.05}
+
+
+def _sim_final_X(dl, rounds):
+    """Simulator trajectory for the same config/workload: final (N, P)."""
+    dl_sim = dataclasses.replace(dl, backend="simulated", rounds=rounds)
+    init, loss, acc, opt, batcher = build_workload(WL, dl_sim)
+    eng = RoundEngine(dl_sim, init, loss, acc, opt, batcher)
+    hist = eng.run(log=False)
+    return np.asarray(jax.vmap(tree_vector)(eng.params)), hist
+
+
+# ---------------------------------------------------------------------------
+# wire codec: encode/decode roundtrip for every ROWS format
+# ---------------------------------------------------------------------------
+
+class TestWireCodec:
+    def test_full_f32_roundtrip(self):
+        rng = np.random.default_rng(0)
+        ids = np.array([3, 7, 11], np.int32)
+        rows = rng.standard_normal((3, 9)).astype(np.float32)
+        body = T.encode_rows(5, 2, ids, T.FMT_FULL_F32, rows=rows)
+        out = T.decode_rows(body)
+        assert (out["round"], out["sender"], out["fmt"]) == (5, 2, T.FMT_FULL_F32)
+        np.testing.assert_array_equal(out["ids"], ids)
+        np.testing.assert_array_equal(out["rows"], rows)
+
+    def test_payload_f32_roundtrip(self):
+        rng = np.random.default_rng(1)
+        ids = np.arange(4, dtype=np.int32)
+        idx = rng.integers(0, 100, (4, 6)).astype(np.int32)
+        val = rng.standard_normal((4, 6)).astype(np.float32)
+        out = T.decode_rows(
+            T.encode_rows(0, 0, ids, T.FMT_PAYLOAD_F32, idx=idx, val=val)
+        )
+        np.testing.assert_array_equal(out["idx"], idx)
+        np.testing.assert_array_equal(out["val"], val)
+
+    def test_payload_i8_roundtrip(self):
+        rng = np.random.default_rng(2)
+        ids = np.array([1, 5], np.int32)
+        idx = rng.integers(0, 50, (2, 3)).astype(np.int32)
+        codes = rng.integers(-127, 128, (2, 3)).astype(np.int8)
+        scale = rng.random(2).astype(np.float32)
+        out = T.decode_rows(
+            T.encode_rows(9, 1, ids, T.FMT_PAYLOAD_I8,
+                          idx=idx, codes=codes, scale=scale)
+        )
+        np.testing.assert_array_equal(out["idx"], idx)
+        np.testing.assert_array_equal(out["codes"], codes)
+        np.testing.assert_array_equal(out["scale"], scale)
+
+    def test_truncated_body_rejected(self):
+        ids = np.array([0], np.int32)
+        body = T.encode_rows(0, 0, ids, T.FMT_FULL_F32,
+                             rows=np.zeros((1, 4), np.float32))
+        with pytest.raises((ValueError, Exception)):
+            T.decode_rows(body[:-2])
+
+    def test_trailing_garbage_rejected(self):
+        ids = np.array([0], np.int32)
+        body = T.encode_rows(0, 0, ids, T.FMT_FULL_F32,
+                             rows=np.zeros((1, 4), np.float32))
+        with pytest.raises(ValueError, match="length mismatch"):
+            T.decode_rows(body + b"xx")
+
+    def test_wid_roundtrip(self):
+        assert T.decode_wid(T.encode_wid(13)) == 13
+
+
+# ---------------------------------------------------------------------------
+# launcher validation (no processes spawned)
+# ---------------------------------------------------------------------------
+
+class TestRunnerValidation:
+    def test_rejects_simulated_backend(self):
+        with pytest.raises(ValueError, match="backend='processes'"):
+            ProcessRunner(DLConfig(n_nodes=8), WL, workers=2)
+
+    def test_rejects_uneven_row_blocks(self):
+        with pytest.raises(ValueError, match="divide evenly"):
+            ProcessRunner(DLConfig(n_nodes=10, backend="processes"), WL,
+                          workers=4)
+
+    def test_kill_knobs_come_as_a_pair(self):
+        dl = DLConfig(n_nodes=8, backend="processes")
+        with pytest.raises(ValueError, match="pair"):
+            ProcessRunner(dl, WL, workers=2, kill_worker=1)
+        with pytest.raises(ValueError, match="out of range"):
+            ProcessRunner(dl, WL, workers=2, kill_worker=5, kill_at_round=1)
+
+
+# ---------------------------------------------------------------------------
+# atomic results writes (satellite: crash-safe benchmarks/common.save_results)
+# ---------------------------------------------------------------------------
+
+class TestAtomicWrite:
+    def test_atomic_write_json_leaves_no_tmp(self, tmp_path):
+        path = str(tmp_path / "sub" / "r.json")
+        atomic_write_json(path, [{"a": 1}])
+        atomic_write_json(path, [{"a": 2}])  # overwrite goes through replace
+        with open(path) as f:
+            assert json.load(f) == [{"a": 2}]
+        assert os.listdir(tmp_path / "sub") == ["r.json"]
+
+    def test_save_results_is_atomic(self, tmp_path, monkeypatch):
+        sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+        try:
+            from benchmarks import common
+        finally:
+            sys.path.pop(0)
+        monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+        common.save_results("smoke", [{"name": "x", "acc_mean": 0.5}])
+        with open(tmp_path / "smoke.json") as f:
+            recs = json.load(f)
+        assert recs[0]["name"] == "x" and recs[-1]["name"] == "_memory"
+        assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: real sockets, real processes
+# ---------------------------------------------------------------------------
+
+ROUNDS = 5
+
+
+class TestProcessBackend:
+    def test_equivalence_oracle_full_sharing(self):
+        """Loss-free localhost, deterministic seeds: the K-process run
+        must reproduce the simulator trajectory (fp32 full sharing is
+        bitwise; we assert a tight fp32 tolerance)."""
+        dl = DLConfig(n_nodes=16, topology="regular", degree=5,
+                      rounds=ROUNDS, eval_every=2, backend="processes",
+                      seed=3)
+        r = ProcessRunner(dl, WL, workers=4, watchdog_s=120.0)
+        hist = r.run(log=False)
+        X_sim, hist_sim = _sim_final_X(dl, ROUNDS)
+        assert r.final_X.shape == X_sim.shape
+        np.testing.assert_allclose(r.final_X, X_sim, rtol=0, atol=1e-6)
+        # eval records line up round-for-round
+        sim_acc = {h["round"]: h["acc_mean"] for h in hist_sim}
+        for h in hist:
+            assert h["round"] in sim_acc
+            assert abs(h["acc_mean"] - sim_acc[h["round"]]) < 1e-6
+        assert r.bytes_sent > 0 and r.counters["faults_detected"] == 0
+        assert r.wire_dtype == "float32"
+
+    def test_equivalence_oracle_randomk_int8(self):
+        """Sparsified int8 payload over the wire: trajectory matches the
+        simulator's quantized path to ~1 ulp of the dequantization."""
+        dl = DLConfig(n_nodes=16, topology="regular", degree=5,
+                      sharing="randomk", budget=0.25, payload_quant=True,
+                      rounds=ROUNDS, eval_every=ROUNDS, backend="processes",
+                      seed=4)
+        r = ProcessRunner(dl, WL, workers=4, watchdog_s=120.0)
+        r.run(log=False)
+        X_sim, _ = _sim_final_X(dl, ROUNDS)
+        np.testing.assert_allclose(r.final_X, X_sim, rtol=0, atol=1e-5)
+        assert r.wire_dtype == "int8"
+
+    def test_kill_worker_detect_reweight_converge(self):
+        """SIGKILL one worker mid-run: every survivor's heartbeat
+        detector fires, its rows are reweighted away (surviving rows stay
+        row-stochastic), and the run completes all rounds."""
+        dl = DLConfig(n_nodes=16, topology="regular", degree=5,
+                      rounds=8, eval_every=4, backend="processes", seed=5)
+        r = ProcessRunner(dl, WL, workers=4, watchdog_s=120.0,
+                          kill_worker=3, kill_at_round=2)
+        hist = r.run(log=False)
+        assert r.killed_at_round is not None
+        assert r.counters["faults_detected"] >= 1
+        assert r.reweight_row_err < 1e-5
+        assert int(r.live_rows.sum()) == 12
+        assert hist[-1]["round"] == 7  # survivors finished every round
+        assert np.isfinite(r.final_X[r.live_rows]).all()
+        assert np.isnan(r.final_X[~r.live_rows]).all()
+        assert np.isfinite(r.consensus_error())

@@ -18,6 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core import DLConfig, RoundEngine
+from repro.core.faults import FaultPlan
 from repro.core.mixing import gossip_pair_avg
 from repro.core.topology import Graph, SparseTopology, sample_neighbor_slots
 from repro.data import NodeBatcher, make_dataset, sharding_partition
@@ -324,6 +325,44 @@ class TestValidate:
 
     def test_straggler_knobs_without_compute_time_rejected(self):
         self._bad("no-op", straggler_factor=10.0, straggler_frac=0.1)
+
+    def test_processes_backend_knobs(self):
+        # the real-network backend accepts its supported surface ...
+        DLConfig(backend="processes").validate()
+        DLConfig(backend="processes", sharing="randomk",
+                 payload_quant=True).validate()
+        self._bad("unknown backend", backend="threads")
+        # ... and rejects simulated-only knobs with actionable messages
+        self._bad("shard_devices", backend="processes", shard_devices=2)
+        self._bad("synchronous", backend="processes", semantics="async",
+                  compute_time_s=0.1)
+        self._bad("synchronous", backend="processes", semantics="local")
+        self._bad("secure", backend="processes", secure=True)
+        self._bad("FaultPlan", backend="processes",
+                  faults=FaultPlan(msg_loss=0.1))
+        self._bad("killing workers", backend="processes", participation=0.5)
+        self._bad("killing workers", backend="processes", churn_machines=2)
+        self._bad("population-scale", backend="processes",
+                  batch_keying="node")
+        self._bad("sparse", backend="processes", topology="fully")
+        self._bad("sparse", backend="processes", mixing="dense")
+        self._bad("static graph", backend="processes", topology="dynamic")
+        self._bad("stateful/unsupported", backend="processes",
+                  sharing="topk")
+        self._bad("stateful/unsupported", backend="processes",
+                  sharing="choco")
+        self._bad("uniform", backend="processes", sharing="randomk",
+                  randk_sampler="strided")
+
+    def test_engine_refuses_processes_backend(self):
+        eng = _engine(n_nodes=8)  # reuse a built engine's batcher
+        with pytest.raises(ValueError, match="ProcessRunner"):
+            RoundEngine(
+                DLConfig(n_nodes=8, backend="processes"),
+                lambda k: {"w": jnp.zeros((2,))},
+                _loss, _acc,
+                make_optimizer("sgd", 0.05), eng.batcher,
+            )
 
     def test_unknown_semantics(self):
         self._bad("unknown semantics", semantics="eventual")
