@@ -28,7 +28,14 @@ def _flatten(tree):
 
 
 def save_checkpoint(path: str, step: int, **trees) -> str:
-    """save_checkpoint(dir, 100, params=..., opt_state=...) -> file path."""
+    """save_checkpoint(dir, 100, params=..., opt_state=...) -> file path.
+
+    Crash-consistent: the .npz lands via temp-file + ``os.replace`` and
+    only after its meta JSON, so a process killed mid-save leaves at most
+    a stray meta file — never a truncated archive that
+    :func:`latest_checkpoint` (which matches only ``.npz`` names) would
+    pick up.  The rejoin path relies on this: any step the index reports
+    is fully restorable."""
     os.makedirs(path, exist_ok=True)
     fn = os.path.join(path, f"ckpt_{step:08d}.npz")
     payload = {}
@@ -37,9 +44,11 @@ def save_checkpoint(path: str, step: int, **trees) -> str:
         flat = _flatten(tree)
         meta["trees"][tname] = {k: [list(v.shape), str(v.dtype)] for k, v in flat.items()}
         payload.update({f"{tname}::{k}": v for k, v in flat.items()})
-    np.savez(fn, **payload)
     with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
         json.dump(meta, f)
+    tmp = fn + ".tmp.npz"
+    np.savez(tmp, **payload)
+    os.replace(tmp, fn)
     return fn
 
 

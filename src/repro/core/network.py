@@ -138,6 +138,11 @@ class NetworkModel:
     # (stragglers = heavy-tailed entries).  None means homogeneous zero;
     # a scalar passed to round_time overrides/broadcasts as before.
     compute_time_s: Optional[np.ndarray] = None
+    # calibrated per-round runtime overhead (framing, syscalls, barrier
+    # slack) fitted by ``runtime.calibrate`` — added once per round in
+    # :meth:`round_time`, never in :meth:`node_times`, so a default-0
+    # model is unchanged everywhere (including the traced-time oracle)
+    overhead_s: float = 0.0
 
     def link(self, a: int, b: int) -> LinkSpec:
         return self.local if self.mapping.same_machine(a, b) else self.remote
@@ -194,7 +199,7 @@ class NetworkModel:
         return float(
             self.node_times(graph, bytes_per_edge, compute_time_s,
                             parallel_sends).max()
-        )
+        ) + self.overhead_s
 
     def experiment_time(self, graph: Graph, bytes_per_edge: float,
                         compute_time_s, rounds: int) -> float:
@@ -218,3 +223,32 @@ def localhost_deployment(n_nodes: int) -> NetworkModel:
     per-round wall-clock, which is what makes the simulated bench gates
     defensible as predictions rather than definitions."""
     return NetworkModel(Mapping(n_nodes, 1), LOOPBACK, LOOPBACK)
+
+
+def load_calibration_fit(path: str = "results/calibration.json"
+                         ) -> "Optional[dict]":
+    """The ``fit`` block ``runtime.calibrate`` recorded (``alpha_s`` per-
+    round constant, ``beta_s_per_byte`` residual slope), or None when no
+    sweep has been run on this machine."""
+    import json
+    import os
+
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f).get("fit")
+    except (OSError, ValueError):
+        return None
+
+
+def calibrated_localhost(n_nodes: int,
+                         path: str = "results/calibration.json"
+                         ) -> NetworkModel:
+    """:func:`localhost_deployment` with the measured per-round overhead
+    constant folded in (identity when no calibration file exists)."""
+    fit = load_calibration_fit(path)
+    model = localhost_deployment(n_nodes)
+    if fit:
+        model.overhead_s = float(fit.get("alpha_s", 0.0))
+    return model

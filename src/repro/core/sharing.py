@@ -258,6 +258,27 @@ def edge_reweight_sparse(topo: SparseTopology, live):
     return SparseTopology(topo.nbr, w, 1.0 - w.sum(-1))
 
 
+def edge_readmit_sparse(topo0: SparseTopology, live):
+    """Re-admission restore — the exact inverse of
+    :func:`edge_reweight_sparse` against the *pristine* table ``topo0``:
+    recompute the effective topology from the original weights and the
+    current live mask, so clearing a slot's dead mark returns its edge
+    mass from the receiver's diagonal bitwise.
+
+    When every slot is live again the pristine topology object itself is
+    returned: ``w_self`` tables are built in float64 before the fp32 cast
+    (``mh_weight_table``), so recomputing ``1 - w.sum(-1)`` in fp32 could
+    differ from the pristine diagonal in the last ulp — the round-trip
+    guarantee (property-tested in ``tests/test_faults.py``) must be
+    exact, not within-a-ulp.
+
+    live: (N, D) {0,1} over the padded neighbor slots.
+    """
+    if bool(np.all(np.asarray(live) == 1.0)):
+        return topo0
+    return edge_reweight_sparse(topo0, live)
+
+
 def participation_deg_eff(topo: SparseTopology, active):
     """The ``deg_eff`` scalar of :func:`participation_reweight_sparse`
     alone — same counting expressions, no reweighted table built.  The

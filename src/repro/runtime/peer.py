@@ -32,6 +32,26 @@ leave announces itself with a BYE frame (counted as a leave, not a
 fault); a SIGKILL'd worker never says goodbye, so its silence is counted
 in ``faults_detected``.  A per-round watchdog bounds any socket wait so
 a hung transport fails fast instead of stalling forever.
+
+## Elastic membership: crash-rejoin
+
+All liveness/epoch bookkeeping lives in :class:`runtime.membership.Membership`;
+this module wires it to the sockets.  A supervisor-relaunched worker
+(``--rejoin --epoch E``) restores its row-block from its newest
+checkpoint (``run_dir/ckpt_w{wid}``, written every ``ckpt_every`` rounds
+*before* the progress marker so visible progress implies a durable
+checkpoint) or, with no checkpoint, cold-syncs a live donor's current
+block over ``STATE_REQ``/``STATE`` frames.  It then runs the two-phase
+JOIN handshake: *hello* (announce the new endpoint + epoch; survivors
+reply WELCOME with their current round) and *commit* (pick a start round
+safely past every survivor's current round; each survivor schedules the
+re-admission for the top of exactly that round).  At admission the
+survivor clears the dead mark and rebuilds its effective topology from
+the pristine table (``sharing.edge_readmit_sparse`` — with everyone live
+again this *is* the pristine object, so the fault-free mixing matrix is
+restored bitwise).  Every frame carries the sender's epoch; frames from
+dead/left senders or older incarnations are dropped — never enqueued —
+and counted under ``stale_frames_dropped``.
 """
 from __future__ import annotations
 
@@ -39,19 +59,22 @@ import argparse
 import asyncio
 import json
 import os
+import re
 import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.faults import retry_backoff_delay
+from repro.runtime.membership import Membership, zero_counters
 from repro.utils.io import atomic_write_json
 
 HB_TAG = "hb"
 
 
 class PeerWorker:
-    def __init__(self, spec: Dict, wid: int):
+    def __init__(self, spec: Dict, wid: int, *, epoch: int = 0,
+                 rejoin: bool = False):
         # jax / engine imports live here so the module is importable (for
         # the CLI --help and tests) before jax initializes
         import jax
@@ -66,6 +89,8 @@ class PeerWorker:
         self.jax, self.jnp = jax, jnp
         self.spec = spec
         self.wid = wid
+        self.epoch = int(epoch)
+        self.rejoin = bool(rejoin)
         dl = DLConfig(**spec["dl"])
         dl.validate()
         assert dl.backend == "processes"
@@ -84,6 +109,12 @@ class PeerWorker:
         self.send_timeout_s = float(spec.get("send_timeout_s", 10.0))
         self.backoff_s = float(spec.get("retry_backoff_s", 0.05))
         self.backoff_cap = int(spec.get("retry_backoff_cap", 5))
+        # elastic-membership knobs: checkpoint cadence (0 = off), a round
+        # floor so rejoin lands mid-run instead of after round 500 of 500
+        # finished in 2s, and the bitwise view dump the chaos gate reads
+        self.ckpt_every = int(spec.get("ckpt_every", 0))
+        self.round_min_s = float(spec.get("round_min_s", 0.0))
+        self.dump_view = bool(spec.get("dump_view", False))
         self.run_dir = spec["run_dir"]
         self.rdv = tuple(spec["rendezvous"])
 
@@ -190,24 +221,42 @@ class PeerWorker:
             return jax.vmap(lambda v: tree_unvector(v, self.template))(X2)
 
         self._unvec = jax.jit(unvec)
+        self._vec = jax.jit(lambda p: jax.vmap(tree_vector)(p))
+        self._opt_init = jax.jit(lambda p: jax.vmap(opt.init)(p))
         self._eval = jax.jit(
             lambda p, tx, ty: jax.vmap(lambda q: acc_fn(q, tx, ty))(p)
         )
 
         # --- runtime state ----------------------------------------------
+        self.mem = Membership(self.K, wid, self.dead_timeout_s)
         self.peers: Dict[int, Tuple[str, int]] = {}
         self.conns: Dict[int, Tuple] = {}
         self.inbox: Dict[int, asyncio.Queue] = {}
-        self.last_seen: Dict[int, float] = {}
-        self.dead: set = set()
-        self.left: set = set()
         self._pending_bye: set = set()
+        self._ctrl_q: asyncio.Queue = asyncio.Queue()
+        self._state_q: asyncio.Queue = asyncio.Queue()
         self.wire_bytes = 0.0
-        self.counters = {"faults_detected": 0, "retry_total": 0, "leaves": 0}
+        self.counters = zero_counters()
         self.detect_rounds: Dict[str, int] = {}
+        self.admit_rounds: Dict[str, int] = {}
         self.reweight_row_err = 0.0
         self.round_wall: List[float] = []
         self.records: List[Dict] = []
+        self.cur_round = -1
+        self.start_round = 0
+        self.rejoined = False
+        self.completed = False
+        self.catchup_source: Optional[str] = None
+        self._last_sent: Optional[np.ndarray] = None
+
+    # back-compat views (tests and the runner read these)
+    @property
+    def dead(self) -> set:
+        return self.mem.dead
+
+    @property
+    def left(self) -> set:
+        return self.mem.left
 
     # ------------------------------------------------------------------
     def _warmup(self):
@@ -243,40 +292,70 @@ class PeerWorker:
     def _rows_of(self, v: int) -> np.ndarray:
         return np.arange(v * self.B, (v + 1) * self.B)
 
+    def _recompute_topo(self):
+        """Effective topology from the *pristine* table and the current
+        live mask: the reweight on deaths, the exact (bitwise, when all
+        rows are live again) restore on re-admissions."""
+        from repro.core.sharing import edge_readmit_sparse
+
+        jnp = self.jnp
+        base = self._topo_cls(
+            jnp.asarray(self.nbr), jnp.asarray(self.w0),
+            jnp.asarray(self.w_self0),
+        )
+        self.topo_eff = edge_readmit_sparse(
+            base, jnp.asarray(self.live_nodes[self.nbr])
+        )
+
+    def _purge_inbox(self, v: int):
+        q = self.inbox.get(v)
+        if q is None:
+            return
+        while not q.empty():
+            q.get_nowait()
+            self.counters["stale_frames_dropped"] += 1
+
     def _mark_gone(self, v: int, rnd: int, *, fault: bool):
         """Graceful-degradation path: drop worker v's nodes and return
         their edge mass to the surviving receivers' diagonals
         (``edge_reweight_sparse`` — the PR 7 reweight, reused on real
-        deaths), so surviving rows stay row-stochastic."""
-        if v in self.dead or v in self.left:
+        deaths), so surviving rows stay row-stochastic.  Already-queued
+        frames from v are purged (and counted stale) — a corpse's rows
+        must not feed a later barrier."""
+        if not self.mem.is_live(v):
             return
-        from repro.core.sharing import edge_reweight_sparse
-
-        (self.dead if fault else self.left).add(v)
+        if fault:
+            self.mem.declare_dead(v)
+            self.counters["faults_detected"] += 1
+        else:
+            self.mem.declare_left(v)
+            self.counters["leaves"] += 1
         self.live_nodes[self._rows_of(v)] = 0.0
-        live_slots = self.live_nodes[self.nbr]
-        base = self._topo_cls(
-            self.jnp.asarray(self.nbr), self.jnp.asarray(self.w0),
-            self.jnp.asarray(self.w_self0),
-        )
-        self.topo_eff = edge_reweight_sparse(
-            base, self.jnp.asarray(live_slots)
-        )
+        self._recompute_topo()
         w = np.asarray(self.topo_eff.w)
         ws = np.asarray(self.topo_eff.w_self)
         rows = slice(self.lo, self.hi)
         err = float(np.abs(ws[rows] + w[rows].sum(-1) - 1.0).max())
         self.reweight_row_err = max(self.reweight_row_err, err)
-        if fault:
-            self.counters["faults_detected"] += 1
-        else:
-            self.counters["leaves"] += 1
         self.detect_rounds[str(v)] = rnd
         self.conns.pop(v, None)
+        self._purge_inbox(v)
+
+    def _process_admissions(self, rnd: int):
+        """Top-of-round hook: re-admit every peer whose committed start
+        round has arrived — clear the dead mark, restore the pristine
+        edge weights, and resume expecting its rows this very round."""
+        for v in self.mem.due_admissions(rnd):
+            was_dead = self.mem.admit(v)
+            self.live_nodes[self._rows_of(v)] = 1.0
+            self._recompute_topo()
+            if was_dead:
+                self.counters["rejoin_total"] += 1
+            self.mem.last_seen[v] = time.monotonic()
+            self.admit_rounds[str(v)] = rnd
 
     def _live_peers(self) -> List[int]:
-        return [v for v in range(self.K)
-                if v != self.wid and v not in self.dead and v not in self.left]
+        return self.mem.live_peers()
 
     # ------------------------------------------------------------------
     # transport
@@ -290,28 +369,120 @@ class PeerWorker:
                 if ftype == tp.MSG_ROWS:
                     msg = tp.decode_rows(body)
                     v = msg["sender"]
-                    self.last_seen[v] = time.monotonic()
-                    if v not in self.dead and v not in self.left:
+                    st = self.mem.frame_status(v, msg["epoch"])
+                    if st == "ok":
+                        self.mem.last_seen[v] = time.monotonic()
                         self.inbox[v].put_nowait(msg)
+                    elif st == "stale":
+                        self.counters["stale_frames_dropped"] += 1
                 elif ftype == tp.MSG_HEARTBEAT:
-                    self.last_seen[tp.decode_wid(body)] = time.monotonic()
+                    v, ep = tp.decode_peer(body)
+                    if self.mem.heartbeat(
+                            v, ep, time.monotonic()) == "stale":
+                        self.counters["stale_frames_dropped"] += 1
                 elif ftype == tp.MSG_BYE:
                     # graceful leave: the barrier stops expecting rows from
                     # v (same reweight as a death, counted as a leave)
-                    self._pending_bye.add(tp.decode_wid(body))
+                    v, ep = tp.decode_peer(body)
+                    if self.mem.frame_status(v, ep) == "ok":
+                        self._pending_bye.add(v)
+                    else:
+                        self.counters["stale_frames_dropped"] += 1
+                elif ftype == tp.MSG_JOIN:
+                    await self._on_join(tp.decode_json(body))
+                elif ftype == tp.MSG_WELCOME:
+                    msg = tp.decode_json(body)
+                    v = int(msg["worker"])
+                    # a WELCOME teaches the joiner the survivor's epoch
+                    # (a survivor may itself be a prior rejoiner, and the
+                    # joiner's fresh view starts everyone at epoch 0)
+                    self.mem.epochs[v] = max(
+                        self.mem.epochs.get(v, 0), int(msg["epoch"])
+                    )
+                    self.mem.last_seen[v] = time.monotonic()
+                    self._ctrl_q.put_nowait(msg)
+                elif ftype == tp.MSG_STATE_REQ:
+                    await self._on_state_req(tp.decode_json(body))
+                elif ftype == tp.MSG_STATE:
+                    self._state_q.put_nowait((tp.decode_rows(body), len(body)))
         except (asyncio.IncompleteReadError, ConnectionError, OSError,
                 ValueError):
             return
         finally:
             writer.close()
 
+    async def _send_ctrl(self, v: int, ftype: int, body: bytes) -> bool:
+        """Best-effort control-plane send (JOIN/WELCOME/STATE*), reusing
+        (or re-dialing) the data-plane connection to v."""
+        from repro.runtime import transport as tp
+
+        try:
+            if v not in self.conns:
+                self.conns[v] = await asyncio.wait_for(
+                    asyncio.open_connection(*self.peers[v]), timeout=2.0
+                )
+            await asyncio.wait_for(
+                tp.write_frame(self.conns[v][1], ftype, body),
+                timeout=self.send_timeout_s,
+            )
+            self.wire_bytes += len(body) + 5
+            return True
+        except (OSError, asyncio.TimeoutError, KeyError):
+            self.conns.pop(v, None)
+            return False
+
+    async def _on_join(self, msg: Dict):
+        """Survivor side of the two-phase rejoin handshake."""
+        from repro.runtime import transport as tp
+
+        v, ep = int(msg["worker"]), int(msg["epoch"])
+        phase = msg.get("phase")
+        if phase == "hello":
+            if self.mem.is_live(v) and ep > self.mem.epochs[v]:
+                # the supervisor relaunched v before we ever noticed the
+                # death: retire the old incarnation first so detection
+                # and re-admission stay paired (conservation invariant)
+                self._mark_gone(v, self.cur_round, fault=True)
+            st = self.mem.hello(v, ep)
+            if st == "stale":
+                self.counters["stale_frames_dropped"] += 1
+                return
+            self.peers[v] = (msg["host"], int(msg["port"]))
+            self.conns.pop(v, None)  # the old incarnation's socket
+            self.mem.last_seen[v] = time.monotonic()
+            await self._send_ctrl(v, tp.MSG_WELCOME, tp.encode_json({
+                "phase": "hello", "worker": self.wid, "epoch": self.epoch,
+                "round": self.cur_round, "ok": True,
+            }))
+        elif phase == "commit":
+            start = int(msg["start_round"])
+            ok = self.mem.schedule_admit(v, ep, start, self.cur_round)
+            await self._send_ctrl(v, tp.MSG_WELCOME, tp.encode_json({
+                "phase": "commit", "worker": self.wid, "epoch": self.epoch,
+                "round": self.cur_round, "start": start, "ok": ok,
+            }))
+
+    async def _on_state_req(self, msg: Dict):
+        """Donor side of cold catch-up: ship the current own-block rows
+        (the STATE body reuses the ROWS codec)."""
+        from repro.runtime import transport as tp
+
+        v = int(msg["worker"])
+        body = tp.encode_rows(
+            max(self.cur_round, 0), self.wid, self.own_ids, tp.FMT_FULL_F32,
+            epoch=self.epoch, rows=self.X_view[self.lo:self.hi].copy(),
+        )
+        await self._send_ctrl(v, tp.MSG_STATE, body)
+
     async def _heartbeat_loop(self):
         from repro.runtime import transport as tp
 
-        beat = tp.encode_wid(self.wid)
+        beat = tp.encode_peer(self.wid, self.epoch)
         while True:
             await asyncio.sleep(self.hb_interval_s)
-            for v in self._live_peers():
+            # beacon mid-rejoin peers too: a waiting rejoiner must not
+            # mistake our silence for death before its start round
+            for v in self.mem.beacon_targets():
                 conn = self.conns.get(v)
                 if conn is None:
                     continue
@@ -360,11 +531,12 @@ class PeerWorker:
         for v in list(self.need_from):
             if not len(self.need_from[v]):
                 continue  # no edge crosses this worker pair
-            while v in self._live_peers() and v not in out:
+            while self.mem.is_live(v) and v not in out:
                 # BYE is FIFO-ordered after the peer's last ROWS frame, so
                 # only honor it once the inbox is drained — a leaver's
                 # final-round contribution still counts
                 if v in self._pending_bye and self.inbox[v].empty():
+                    self._pending_bye.discard(v)
                     self._mark_gone(v, rnd, fault=False)
                     break
                 try:
@@ -373,7 +545,8 @@ class PeerWorker:
                     )
                 except asyncio.TimeoutError:
                     now = time.monotonic()
-                    if now - self.last_seen.get(v, t0) > self.dead_timeout_s:
+                    if now - self.mem.last_seen.get(v, t0) \
+                            > self.dead_timeout_s:
                         self._mark_gone(v, rnd, fault=True)
                     if now - t0 > self.watchdog_s:
                         raise RuntimeError(
@@ -403,6 +576,8 @@ class PeerWorker:
 
         loop = asyncio.get_running_loop()
         t0 = time.monotonic()
+        self.cur_round = rnd
+        self._process_admissions(rnd)
         idx = self.batcher.round_indices(rnd, self.dl.local_steps)
         bx = self.batcher.x[idx[:, self.lo:self.hi]]
         by = self.batcher.y[idx[:, self.lo:self.hi]]
@@ -417,6 +592,7 @@ class PeerWorker:
             None, _step
         )
         self.X_view[self.lo:self.hi] = X_own
+        self._last_sent = X_own
 
         # --- emit + send ------------------------------------------------
         if self.payload:
@@ -442,17 +618,19 @@ class PeerWorker:
             loc = ids - self.lo
             if not self.payload:
                 body = tp.encode_rows(
-                    rnd, self.wid, ids, tp.FMT_FULL_F32, rows=X_own[loc]
+                    rnd, self.wid, ids, tp.FMT_FULL_F32, epoch=self.epoch,
+                    rows=X_own[loc],
                 )
             elif self.quantize:
                 body = tp.encode_rows(
-                    rnd, self.wid, ids, tp.FMT_PAYLOAD_I8, idx=idx_own[loc],
-                    codes=codes_own[loc], scale=scale_own[loc],
+                    rnd, self.wid, ids, tp.FMT_PAYLOAD_I8, epoch=self.epoch,
+                    idx=idx_own[loc], codes=codes_own[loc],
+                    scale=scale_own[loc],
                 )
             else:
                 body = tp.encode_rows(
-                    rnd, self.wid, ids, tp.FMT_PAYLOAD_F32, idx=idx_own[loc],
-                    val=val_own[loc],
+                    rnd, self.wid, ids, tp.FMT_PAYLOAD_F32, epoch=self.epoch,
+                    idx=idx_own[loc], val=val_own[loc],
                 )
             sends.append(self._send_rows(v, rnd, body))
         if sends:
@@ -492,7 +670,169 @@ class PeerWorker:
 
         self.params, X2_own = await loop.run_in_executor(None, _mix)
         self.X_view[self.lo:self.hi] = X2_own
+        # round floor: pad so wall-clock rounds are long enough for a
+        # killed worker's relaunch to land mid-run (chaos harness knob)
+        dt = time.monotonic() - t0
+        if self.round_min_s > dt:
+            await asyncio.sleep(self.round_min_s - dt)
         self.round_wall.append(time.monotonic() - t0)
+
+    # ------------------------------------------------------------------
+    # checkpoint catch-up
+    # ------------------------------------------------------------------
+    def _ckpt_dir(self) -> str:
+        return os.path.join(self.run_dir, f"ckpt_w{self.wid}")
+
+    def _save_checkpoint(self, rnd: int):
+        from repro.checkpoint import save_checkpoint
+
+        save_checkpoint(self._ckpt_dir(), rnd, params=self.params,
+                        opt_state=self.opt_state)
+
+    def _restore_checkpoint(self) -> Optional[int]:
+        """Restore the newest readable checkpoint of this row-block;
+        returns its round or None.  Saves are atomic, but stay defensive:
+        an unreadable step falls back to the one before it."""
+        from repro.checkpoint import load_checkpoint
+        from repro.checkpoint.checkpoint import restore_tree
+
+        path = self._ckpt_dir()
+        if not os.path.isdir(path):
+            return None
+        steps = sorted(
+            (int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))),
+            reverse=True,
+        )
+        for step in steps:
+            try:
+                _, trees = load_checkpoint(path, step)
+                if "params" not in trees:
+                    continue
+                self.params = restore_tree(self.params, trees["params"])
+                # a leafless opt_state (plain SGD) saves no arrays at all
+                self.opt_state = restore_tree(
+                    self.opt_state, trees.get("opt_state")
+                )
+            except Exception:
+                continue
+            self.X_view[self.lo:self.hi] = np.asarray(
+                self._vec(self.params), np.float32
+            )
+            self.counters["catchup_bytes"] += os.path.getsize(
+                os.path.join(path, f"ckpt_{step:08d}.npz")
+            )
+            self.catchup_source = f"checkpoint:{step}"
+            return step
+        return None
+
+    async def _cold_sync(self, donors: List[int]) -> bool:
+        """No checkpoint: pull a live donor's current block over
+        STATE_REQ/STATE and map its rows onto ours (cyclically — blocks
+        are equal-sized, so this is the identity map in practice); the
+        optimizer state restarts fresh."""
+        from repro.runtime import transport as tp
+
+        req = tp.encode_json({"worker": self.wid, "epoch": self.epoch})
+        for v in donors:
+            if not await self._send_ctrl(v, tp.MSG_STATE_REQ, req):
+                continue
+            try:
+                msg, nbytes = await asyncio.wait_for(
+                    self._state_q.get(), timeout=self.dead_timeout_s + 2.0
+                )
+            except asyncio.TimeoutError:
+                continue
+            rows = np.asarray(msg["rows"], np.float32)
+            take = rows[np.arange(self.B) % len(rows)]
+            self.params = self._unvec(self.jnp.asarray(take))
+            self.opt_state = self._opt_init(self.params)
+            self.X_view[self.lo:self.hi] = take
+            self.counters["catchup_bytes"] += nbytes
+            self.catchup_source = f"donor:{msg['sender']}"
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    # rejoiner side of the handshake
+    # ------------------------------------------------------------------
+    async def _rejoin_handshake(self, my_port: int,
+                                have_ckpt: bool) -> Optional[int]:
+        """Hello every peer, catch up (donor STATE if no checkpoint),
+        then commit a start round safely past every survivor's current
+        round.  Returns the committed start round, or None when there is
+        nothing left to rejoin (no survivors, or the run is ending)."""
+        from repro.runtime import transport as tp
+
+        hello = tp.encode_json({
+            "phase": "hello", "worker": self.wid, "epoch": self.epoch,
+            "host": "127.0.0.1", "port": my_port,
+        })
+        targets = self.mem.live_peers()
+        for v in targets:
+            await self._send_ctrl(v, tp.MSG_JOIN, hello)
+        welcomes: Dict[int, Dict] = {}
+        deadline = time.monotonic() + self.dead_timeout_s + 2.0
+        while len(welcomes) < len(targets) and time.monotonic() < deadline:
+            try:
+                msg = await asyncio.wait_for(self._ctrl_q.get(), timeout=0.25)
+            except asyncio.TimeoutError:
+                continue
+            if msg.get("phase") == "hello" and msg.get("ok"):
+                welcomes[int(msg["worker"])] = msg
+        for v in targets:
+            if v not in welcomes:
+                self._mark_gone(v, -1, fault=True)
+        if not welcomes:
+            return None
+        if not have_ckpt:
+            await self._cold_sync(sorted(welcomes))
+        if self.catchup_source is None:
+            self.catchup_source = "fresh"
+
+        # commit: everyone must re-admit us at the same future round
+        slack = max(4, int(2.0 / max(self.round_min_s, 0.02)))
+        for _attempt in range(6):
+            cur = max(int(m["round"]) for m in welcomes.values())
+            start = cur + slack
+            if start >= self.rounds:
+                return None  # the run ends before we could participate
+            commit = tp.encode_json({
+                "phase": "commit", "worker": self.wid, "epoch": self.epoch,
+                "start_round": start,
+            })
+            for v in list(welcomes):
+                await self._send_ctrl(v, tp.MSG_JOIN, commit)
+            acks: Dict[int, Dict] = {}
+            deadline = time.monotonic() + self.dead_timeout_s + 2.0
+            while len(acks) < len(welcomes) \
+                    and time.monotonic() < deadline:
+                try:
+                    msg = await asyncio.wait_for(
+                        self._ctrl_q.get(), timeout=0.25
+                    )
+                except asyncio.TimeoutError:
+                    continue
+                if msg.get("phase") == "commit" \
+                        and int(msg.get("start", -1)) == start:
+                    acks[int(msg["worker"])] = msg
+            for v in list(welcomes):
+                if v not in acks:
+                    self._mark_gone(v, -1, fault=True)
+                    welcomes.pop(v)
+            if not welcomes:
+                return None
+            if all(m.get("ok") for m in acks.values() if m):
+                return start
+            # a nack means some survivor's round already passed start:
+            # refresh our round knowledge and retry further out
+            for v, m in acks.items():
+                if v in welcomes:
+                    welcomes[v]["round"] = max(
+                        int(welcomes[v]["round"]), int(m.get("round", -1))
+                    )
+            slack *= 2
+        return None
 
     # ------------------------------------------------------------------
     async def main(self):
@@ -505,6 +845,9 @@ class PeerWorker:
         loop = asyncio.get_running_loop()
         # compile before joining: peers time liveness, not XLA
         await loop.run_in_executor(None, self._warmup)
+        ck = None
+        if self.rejoin:
+            ck = await loop.run_in_executor(None, self._restore_checkpoint)
         self.peers = await tp.rendezvous_register(
             self.rdv[0], self.rdv[1], self.wid, "127.0.0.1", my_port,
             timeout_s=float(self.spec.get("join_timeout_s", 30.0)),
@@ -514,16 +857,40 @@ class PeerWorker:
             if v == self.wid:
                 continue
             self.inbox[v] = asyncio.Queue()
-            self.last_seen[v] = now
-            r, w = await tp.open_with_retry(*self.peers[v])
-            self.conns[v] = (r, w)
+            self.mem.last_seen[v] = now
+            try:
+                r, w = await tp.open_with_retry(
+                    *self.peers[v], attempts=10 if self.rejoin else 40
+                )
+                self.conns[v] = (r, w)
+            except ConnectionError:
+                if not self.rejoin:
+                    raise
+                # a fellow casualty: rejoin with whoever answers
+                self._mark_gone(v, -1, fault=True)
         hb = asyncio.create_task(self._heartbeat_loop())
+        start = 0
+        if self.rejoin:
+            start = await self._rejoin_handshake(my_port, ck is not None)
+            if start is None:
+                hb.cancel()
+                server.close()
+                self._write_results()
+                return
+            self.rejoined = True
+        self.start_round = start
         t_start = time.monotonic()
         tx, ty = self.batcher.test_batch()
         txj, tyj = self.jnp.asarray(tx), self.jnp.asarray(ty)
         try:
-            for rnd in range(self.rounds):
+            for rnd in range(start, self.rounds):
                 await self._round(rnd)
+                # checkpoint *before* the progress marker: any progress
+                # the supervisor can see implies a durable checkpoint
+                if self.ckpt_every and (rnd + 1) % self.ckpt_every == 0:
+                    await loop.run_in_executor(
+                        None, self._save_checkpoint, rnd
+                    )
                 self._write_progress(rnd)
                 if rnd % self.ev == 0 or rnd == self.rounds - 1:
                     accs = np.asarray(self._eval(self.params, txj, tyj))
@@ -534,9 +901,10 @@ class PeerWorker:
                         "wall_s": time.monotonic() - t_start,
                         **{k: int(v) for k, v in self.counters.items()},
                     })
+            self.completed = True
         finally:
             hb.cancel()
-            bye = tp.encode_wid(self.wid)
+            bye = tp.encode_peer(self.wid, self.epoch)
             for v in self._live_peers():
                 conn = self.conns.get(v)
                 if conn is not None:
@@ -562,15 +930,27 @@ class PeerWorker:
             "worker": self.wid,
             "rows": [int(self.lo), int(self.hi)],
             "n_params": int(self.P),
+            "epoch": self.epoch,
             "history": self.records,
             "round_wall_s": self.round_wall,
             "wire_bytes": float(self.wire_bytes),
             "counters": dict(self.counters),
             "detect_rounds": self.detect_rounds,
+            "admit_rounds": self.admit_rounds,
             "reweight_row_err": self.reweight_row_err,
             "dead_peers": sorted(self.dead),
             "left_peers": sorted(self.left),
+            "rejoined": self.rejoined,
+            "start_round": int(self.start_round),
+            "catchup_source": self.catchup_source,
+            "completed": self.completed,
+            "membership": self.mem.snapshot(),
         }
+        if self.dump_view:
+            out["need_from"] = {
+                str(v): [int(i) for i in ids]
+                for v, ids in self.need_from.items()
+            }
         atomic_write_json(
             os.path.join(self.run_dir, f"worker_{self.wid}.json"), out
         )
@@ -578,6 +958,18 @@ class PeerWorker:
         tmp = fn + ".tmp.npy"
         np.save(tmp, self.X_view[self.lo:self.hi])
         os.replace(tmp, fn)
+        if self.dump_view:
+            for tag, arr in (
+                ("view", self.X_view),
+                ("sent", self._last_sent if self._last_sent is not None
+                 else self.X_view[self.lo:self.hi]),
+            ):
+                fn = os.path.join(
+                    self.run_dir, f"worker_{self.wid}_{tag}.npy"
+                )
+                tmp = fn + ".tmp.npy"
+                np.save(tmp, arr)
+                os.replace(tmp, fn)
 
 
 def main(argv: Optional[List[str]] = None):
@@ -586,10 +978,15 @@ def main(argv: Optional[List[str]] = None):
     )
     ap.add_argument("--spec", required=True, help="path to the run spec JSON")
     ap.add_argument("--worker", type=int, required=True)
+    ap.add_argument("--epoch", type=int, default=0,
+                    help="membership epoch (incarnation number)")
+    ap.add_argument("--rejoin", action="store_true",
+                    help="relaunch after a crash: restore + JOIN handshake")
     args = ap.parse_args(argv)
     with open(args.spec) as f:
         spec = json.load(f)
-    worker = PeerWorker(spec, args.worker)
+    worker = PeerWorker(spec, args.worker, epoch=args.epoch,
+                        rejoin=args.rejoin)
     asyncio.run(worker.main())
 
 

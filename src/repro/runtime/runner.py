@@ -1,4 +1,4 @@
-"""ProcessRunner — launch, monitor, (optionally) kill, and merge.
+"""ProcessRunner — launch, monitor, kill/relaunch, and merge.
 
 The launcher side of the processes backend: hosts the rendezvous
 registry, spawns K ``repro.runtime.peer`` worker processes (real
@@ -6,6 +6,18 @@ registry, spawns K ``repro.runtime.peer`` worker processes (real
 the kill test is about), watches their crash-consistent progress files,
 and merges the per-worker results into the engine-shaped history every
 existing entry point understands.
+
+The launcher doubles as the elastic-membership **supervisor**: a
+``chaos_plan`` entry ``{"worker": w, "kill_at_round": r, "rejoin": bool}``
+SIGKILLs worker w once its progress reaches round r and — when
+``rejoin`` — immediately relaunches it with ``--rejoin --epoch E`` (the
+epoch bumps by one per relaunch, so survivors reject the corpse's stale
+frames by integer compare).  With ``supervise=True`` the same relaunch
+also fires on an *unplanned* death: a worker that exits without results,
+or whose progress file goes stale past ``stall_timeout_s``.  A relaunch
+re-arms a worker's next chaos entry only after its *new* incarnation
+writes progress (mtime gating), so a pre-crash progress value cannot
+double-trigger.
 
 Workers rebuild the experiment from a *declarative* workload spec
 (:func:`build_workload`) — callables cannot cross a process boundary —
@@ -107,6 +119,13 @@ class ProcessRunner:
         retry_backoff_cap: int = 5,
         kill_worker: Optional[int] = None,
         kill_at_round: Optional[int] = None,
+        chaos_plan: Optional[List[Dict]] = None,
+        supervise: bool = False,
+        stall_timeout_s: Optional[float] = None,
+        max_relaunches: int = 2,
+        ckpt_every: int = 0,
+        round_min_s: float = 0.0,
+        dump_view: bool = False,
         timeout_s: Optional[float] = None,
         keep_run_dir: bool = False,
     ):
@@ -129,21 +148,44 @@ class ProcessRunner:
             )
         if kill_worker is not None and not 0 <= kill_worker < workers:
             raise ValueError(f"kill_worker {kill_worker} out of range")
+        # normalize the legacy kill pair into a one-entry chaos plan
+        self.chaos_plan = [dict(e) for e in (chaos_plan or [])]
+        if kill_worker is not None:
+            self.chaos_plan.append({
+                "worker": kill_worker, "kill_at_round": kill_at_round,
+                "rejoin": False,
+            })
+        for e in self.chaos_plan:
+            w = e.get("worker")
+            if not isinstance(w, int) or not 0 <= w < workers:
+                raise ValueError(f"chaos_plan worker {w!r} out of range")
+            r = e.get("kill_at_round")
+            if not isinstance(r, int) or r < 0:
+                raise ValueError(
+                    f"chaos_plan kill_at_round {r!r} must be an int >= 0"
+                )
+            e["rejoin"] = bool(e.get("rejoin", True))
+        self.chaos_plan.sort(key=lambda e: (e["kill_at_round"], e["worker"]))
         self.dl = dl
         self.workload = dict(workload)
         self.workers = workers
         self.kill_worker = kill_worker
         self.kill_at_round = kill_at_round
+        self.supervise = supervise
+        self.stall_timeout_s = stall_timeout_s
+        self.max_relaunches = int(max_relaunches)
         self.keep_run_dir = keep_run_dir
         self._cfg = dict(
             hb_interval_s=hb_interval_s, dead_timeout_s=dead_timeout_s,
             watchdog_s=watchdog_s, send_timeout_s=send_timeout_s,
             join_timeout_s=join_timeout_s, retry_backoff_s=retry_backoff_s,
-            retry_backoff_cap=retry_backoff_cap,
+            retry_backoff_cap=retry_backoff_cap, ckpt_every=int(ckpt_every),
+            round_min_s=float(round_min_s), dump_view=bool(dump_view),
         )
         self.timeout_s = (
             timeout_s if timeout_s is not None
-            else join_timeout_s + 2 * watchdog_s + 2.0 * dl.rounds + 120.0
+            else join_timeout_s + 2 * watchdog_s
+            + (2.0 + round_min_s) * dl.rounds + 120.0
         )
         self.run_dir = run_dir
         # engine-shaped surface
@@ -157,6 +199,10 @@ class ProcessRunner:
         self.final_X: Optional[np.ndarray] = None
         self.live_rows: Optional[np.ndarray] = None
         self.killed_at_round: Optional[int] = None
+        self.epochs: Dict[int, int] = {w: 0 for w in range(workers)}
+        self.kill_events: List[Dict] = []
+        self.workers_rejoined = 0
+        self.conservation: Dict[str, Any] = {}
         self.reweight_row_err = 0.0
         self.wire_dtype = (
             "int8" if (dl.payload_quant and dl.sharing.lower() in
@@ -202,33 +248,113 @@ class ProcessRunner:
         atomic_write_json(spec_path, spec)
         env = dict(os.environ)
         env["PYTHONPATH"] = _src_root() + os.pathsep + env.get("PYTHONPATH", "")
-        procs, logs = [], []
+        procs: Dict[int, subprocess.Popen] = {}
+        logs = {w: os.path.join(self.run_dir, f"w{w}.log")
+                for w in range(self.workers)}
+        armed_after: Dict[int, float] = {}
+        relaunches = {w: 0 for w in range(self.workers)}
+        gone_for_good: set = set()  # killed with no relaunch coming
+        plan = list(self.chaos_plan)
+
+        def _launch(w: int, *, rejoin: bool = False):
+            cmd = [sys.executable, "-m", "repro.runtime.peer",
+                   "--spec", spec_path, "--worker", str(w),
+                   "--epoch", str(self.epochs[w])]
+            if rejoin:
+                cmd.append("--rejoin")
+            with open(logs[w], "a") as lf:
+                procs[w] = subprocess.Popen(
+                    cmd, stdout=lf, stderr=subprocess.STDOUT, env=env
+                )
+            armed_after[w] = time.time()
+
+        def _relaunch(w: int, why: str):
+            self.epochs[w] += 1
+            relaunches[w] += 1
+            _launch(w, rejoin=True)
+            if log:
+                print(f"[runner] relaunch worker {w} epoch "
+                      f"{self.epochs[w]} ({why})", flush=True)
+
+        def _progress_fresh(w: int) -> bool:
+            # only the *current* incarnation's progress arms a trigger —
+            # a pre-crash progress value must not double-fire
+            try:
+                return os.path.getmtime(os.path.join(
+                    self.run_dir, f"w{w}.progress")) > armed_after[w]
+            except OSError:
+                return False
+
         try:
             for w in range(self.workers):
-                lp = os.path.join(self.run_dir, f"w{w}.log")
-                logs.append(lp)
-                lf = open(lp, "w")
-                procs.append(subprocess.Popen(
-                    [sys.executable, "-m", "repro.runtime.peer",
-                     "--spec", spec_path, "--worker", str(w)],
-                    stdout=lf, stderr=subprocess.STDOUT, env=env,
-                ))
-                lf.close()
+                _launch(w)
             deadline = time.time() + self.timeout_s
-            killed = False
-            while any(p.poll() is None for p in procs):
-                if (self.kill_worker is not None and not killed
-                        and self._progress(self.kill_worker)
-                        >= self.kill_at_round):
-                    self.killed_at_round = self._progress(self.kill_worker)
-                    os.kill(procs[self.kill_worker].pid, signal.SIGKILL)
-                    killed = True
-                    if log:
-                        print(f"[runner] SIGKILL worker {self.kill_worker} "
-                              f"after round {self.killed_at_round}",
-                              flush=True)
+            while any(p.poll() is None for p in procs.values()):
+                # planned chaos kills
+                for e in list(plan):
+                    w = e["worker"]
+                    if w in gone_for_good or procs[w].poll() is not None:
+                        continue
+                    if (_progress_fresh(w)
+                            and self._progress(w) >= e["kill_at_round"]):
+                        rnd = self._progress(w)
+                        os.kill(procs[w].pid, signal.SIGKILL)
+                        procs[w].wait()
+                        self.kill_events.append({
+                            "worker": w, "round": rnd,
+                            "rejoin": e["rejoin"],
+                            "epoch": self.epochs[w], "cause": "chaos",
+                        })
+                        if self.killed_at_round is None:
+                            self.killed_at_round = rnd
+                        if log:
+                            print(f"[runner] SIGKILL worker {w} after "
+                                  f"round {rnd}"
+                                  + (" (rejoin)" if e["rejoin"] else ""),
+                                  flush=True)
+                        plan.remove(e)
+                        if e["rejoin"]:
+                            _relaunch(w, "chaos kill")
+                        else:
+                            gone_for_good.add(w)
+                # unplanned deaths / stalls (supervision)
+                if self.supervise:
+                    for w in range(self.workers):
+                        if (w in gone_for_good
+                                or relaunches[w] >= self.max_relaunches):
+                            continue
+                        p = procs[w]
+                        res = os.path.join(
+                            self.run_dir, f"worker_{w}.json")
+                        if p.poll() is not None and not os.path.exists(res):
+                            self.kill_events.append({
+                                "worker": w, "round": self._progress(w),
+                                "rejoin": True, "epoch": self.epochs[w],
+                                "cause": f"exit {p.returncode}",
+                            })
+                            _relaunch(w, f"unexpected exit "
+                                         f"{p.returncode}")
+                        elif (self.stall_timeout_s is not None
+                                and p.poll() is None):
+                            try:
+                                mt = os.path.getmtime(os.path.join(
+                                    self.run_dir, f"w{w}.progress"))
+                            except OSError:
+                                mt = armed_after[w]
+                            last = max(mt, armed_after[w])
+                            if time.time() - last > self.stall_timeout_s:
+                                os.kill(p.pid, signal.SIGKILL)
+                                p.wait()
+                                self.kill_events.append({
+                                    "worker": w,
+                                    "round": self._progress(w),
+                                    "rejoin": True,
+                                    "epoch": self.epochs[w],
+                                    "cause": "stall",
+                                })
+                                _relaunch(w, "progress stall")
                 if time.time() > deadline:
-                    for p in procs:
+                    for p in procs.values():
                         if p.poll() is None:
                             p.kill()
                     tails = "\n".join(
@@ -248,7 +374,7 @@ class ProcessRunner:
             if os.path.exists(path):
                 with open(path) as f:
                     self.worker_results[w] = json.load(f)
-            elif w != self.kill_worker and procs[w].returncode != 0:
+            elif w not in gone_for_good and procs[w].returncode != 0:
                 raise RuntimeError(
                     f"worker {w} exited {procs[w].returncode} without "
                     f"results:\n{self._tail(logs[w])}"
@@ -256,7 +382,7 @@ class ProcessRunner:
         if not self.worker_results:
             raise RuntimeError(
                 "no worker produced results:\n"
-                + "\n".join(self._tail(p) for p in logs)
+                + "\n".join(self._tail(p) for p in logs.values())
             )
         self._merge(log)
         if self.dl.results_dir:
@@ -291,10 +417,32 @@ class ProcessRunner:
             self.round_wall_s.append(
                 max(ws[i] for ws in walls if i < len(ws))
             )
-        for key in ("faults_detected", "retry_total", "leaves"):
+        from repro.runtime.membership import RUNTIME_COUNTER_KEYS
+
+        for key in RUNTIME_COUNTER_KEYS:
             self.counters[key] = sum(
                 r["counters"].get(key, 0) for r in res.values()
             )
+        self.workers_rejoined = sum(
+            1 for r in res.values() if r.get("rejoined")
+        )
+        # per-worker conservation: every detection either stays dead or
+        # was re-admitted (the chaos gate's bookkeeping invariant)
+        per_worker = {}
+        for w, r in res.items():
+            c = r["counters"]
+            per_worker[str(w)] = {
+                "detected": int(c.get("faults_detected", 0)),
+                "still_dead": len(r.get("dead_peers", [])),
+                "rejoined": int(c.get("rejoin_total", 0)),
+            }
+        self.conservation = {
+            "per_worker": per_worker,
+            "ok": all(
+                d["detected"] == d["still_dead"] + d["rejoined"]
+                for d in per_worker.values()
+            ),
+        }
         by_round: Dict[int, List[Dict]] = {}
         for r in res.values():
             for rec in r["history"]:
@@ -328,6 +476,42 @@ class ProcessRunner:
         self.bytes_sent = (
             self.history[-1]["bytes_per_node"] if self.history else 0.0
         )
+
+    # ------------------------------------------------------------------
+    def verify_rejoin_views(self) -> Dict[int, bool]:
+        """Bitwise post-catch-up check (full sharing, ``dump_view=True``,
+        ``keep_run_dir=True``): for every rejoined worker v, a surviving
+        worker's final view of v's rows must equal — byte for byte — the
+        rows v last put on the wire.  Proves the rejoiner was genuinely
+        re-admitted into the final barrier, not merely reweighted back in
+        approximately."""
+        out: Dict[int, bool] = {}
+        res = self.worker_results
+        for v, rv in res.items():
+            if not rv.get("rejoined") or not rv.get("completed"):
+                continue
+            sent_p = os.path.join(self.run_dir, f"worker_{v}_sent.npy")
+            if not os.path.exists(sent_p):
+                raise RuntimeError(
+                    "verify_rejoin_views needs dump_view=True and "
+                    "keep_run_dir=True"
+                )
+            sent = np.load(sent_p)
+            lo = rv["rows"][0]
+            ok = None
+            for s, rs in res.items():
+                if s == v or not rs.get("completed"):
+                    continue
+                ids = rs.get("need_from", {}).get(str(v), [])
+                if not ids:
+                    continue
+                view = np.load(os.path.join(
+                    self.run_dir, f"worker_{s}_view.npy"))
+                ids = np.asarray(ids, np.int64)
+                same = np.array_equal(view[ids], sent[ids - lo])
+                ok = same if ok is None else (ok and same)
+            out[v] = bool(ok) if ok is not None else False
+        return out
 
     # ------------------------------------------------------------------
     def consensus_error(self) -> float:

@@ -10,11 +10,22 @@ Every message is one length-prefixed binary frame on a TCP stream:
 Types: ``ROWS`` (a round's gossip payload for a set of node rows),
 ``HEARTBEAT`` (the failure detector's liveness beacon), ``BYE`` (graceful
 leave — the join/leave protocol's clean half; a SIGKILL'd worker never
-sends one, which is exactly how the two are told apart).
+sends one, which is exactly how the two are told apart), and the elastic
+membership control plane: ``JOIN`` (a relaunched incarnation announces
+itself — hello phase carries its new endpoint, commit phase the round it
+will rejoin at), ``WELCOME`` (a survivor's reply: its current round and
+epoch, plus the ack/nack of a commit), ``STATE_REQ``/``STATE`` (cold
+catch-up: a rejoiner with no checkpoint pulls a live donor's current
+row-block — the STATE body reuses the ROWS codec verbatim).
+
+Every frame is stamped with the sender's **membership epoch** (its
+incarnation number: 0 at first launch, +1 per supervisor relaunch), so
+a receiver can reject a pre-crash zombie's stale frames with one integer
+compare — see ``runtime.membership``.
 
 ## ROWS body — the PR 4 payload wire format, serialized
 
-    !IHHBI  round, sender worker id, n_rows, fmt, k_or_p
+    !IHHHBI round, sender worker id, sender epoch, n_rows, fmt, k_or_p
     ids     (n_rows,) int32 global node ids
 
 then per format:
@@ -50,14 +61,19 @@ import numpy as np
 MSG_ROWS = 1
 MSG_HEARTBEAT = 2
 MSG_BYE = 3
+MSG_JOIN = 4
+MSG_WELCOME = 5
+MSG_STATE_REQ = 6
+MSG_STATE = 7
 
 FMT_FULL_F32 = 0
 FMT_PAYLOAD_F32 = 1
 FMT_PAYLOAD_I8 = 2
 
 _FRAME = struct.Struct("!BI")
-_ROWS_HDR = struct.Struct("!IHHBI")
+_ROWS_HDR = struct.Struct("!IHHHBI")
 _WID = struct.Struct("!H")
+_PEER = struct.Struct("!HH")
 
 MAX_FRAME_BYTES = 1 << 30  # sanity bound: a longer length prefix is garbage
 
@@ -66,7 +82,8 @@ MAX_FRAME_BYTES = 1 << 30  # sanity bound: a longer length prefix is garbage
 # frame codec
 # ----------------------------------------------------------------------
 def encode_rows(rnd: int, sender: int, ids: np.ndarray, fmt: int,
-                *, rows: Optional[np.ndarray] = None,
+                *, epoch: int = 0,
+                rows: Optional[np.ndarray] = None,
                 idx: Optional[np.ndarray] = None,
                 val: Optional[np.ndarray] = None,
                 codes: Optional[np.ndarray] = None,
@@ -74,7 +91,7 @@ def encode_rows(rnd: int, sender: int, ids: np.ndarray, fmt: int,
     """ROWS frame body for ``ids`` (global node ids).  ``rows`` is the
     (n, P) fp32 matrix for FMT_FULL_F32; ``idx``/``val`` the (n, k)
     payload for FMT_PAYLOAD_F32; ``idx``/``codes``/``scale`` for
-    FMT_PAYLOAD_I8."""
+    FMT_PAYLOAD_I8.  ``epoch`` is the sender's membership epoch."""
     ids = np.ascontiguousarray(ids, np.int32)
     n = len(ids)
     if fmt == FMT_FULL_F32:
@@ -92,16 +109,18 @@ def encode_rows(rnd: int, sender: int, ids: np.ndarray, fmt: int,
         tail = scale.tobytes() + idx.tobytes() + codes.tobytes()
     else:
         raise ValueError(f"unknown ROWS fmt {fmt}")
-    return _ROWS_HDR.pack(rnd, sender, n, fmt, kp) + ids.tobytes() + tail
+    return (_ROWS_HDR.pack(rnd, sender, epoch, n, fmt, kp)
+            + ids.tobytes() + tail)
 
 
 def decode_rows(body: bytes) -> Dict:
     """Inverse of :func:`encode_rows`; raises on a malformed body."""
-    rnd, sender, n, fmt, kp = _ROWS_HDR.unpack_from(body)
+    rnd, sender, epoch, n, fmt, kp = _ROWS_HDR.unpack_from(body)
     off = _ROWS_HDR.size
     ids = np.frombuffer(body, np.int32, n, off)
     off += 4 * n
-    out = {"round": rnd, "sender": sender, "ids": ids, "fmt": fmt}
+    out = {"round": rnd, "sender": sender, "epoch": epoch, "ids": ids,
+           "fmt": fmt}
     if fmt == FMT_FULL_F32:
         out["rows"] = np.frombuffer(body, np.float32, n * kp, off).reshape(n, kp)
         off += 4 * n * kp
@@ -132,6 +151,24 @@ def encode_wid(wid: int) -> bytes:
 
 def decode_wid(body: bytes) -> int:
     return _WID.unpack(body)[0]
+
+
+def encode_peer(wid: int, epoch: int) -> bytes:
+    """HEARTBEAT/BYE body: (worker id, membership epoch)."""
+    return _PEER.pack(wid, epoch)
+
+
+def decode_peer(body: bytes) -> Tuple[int, int]:
+    return _PEER.unpack(body)
+
+
+def encode_json(obj: Dict) -> bytes:
+    """JOIN/WELCOME/STATE_REQ control-plane body (low-rate, so JSON)."""
+    return json.dumps(obj).encode()
+
+
+def decode_json(body: bytes) -> Dict:
+    return json.loads(body.decode())
 
 
 async def write_frame(writer: asyncio.StreamWriter, ftype: int, body: bytes):

@@ -18,7 +18,11 @@ from repro.core.network import (
     node_round_times,
     paper_testbed,
 )
-from repro.core.sharing import edge_reweight, edge_reweight_sparse
+from repro.core.sharing import (
+    edge_readmit_sparse,
+    edge_reweight,
+    edge_reweight_sparse,
+)
 from repro.core.topology import Graph, SparseTopology, neighbor_table
 from repro.data import NodeBatcher, make_dataset, sharding_partition
 from repro.optim import make_optimizer
@@ -209,6 +213,65 @@ class TestEdgeReweight:
         Wm = edge_reweight(jnp.asarray(topo.to_dense()), jnp.asarray(dense_live))
         np.testing.assert_allclose(
             np.asarray(tm.to_dense()), np.asarray(Wm), atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# re-admission restore: reweight -> readmit round-trips to pristine
+# ---------------------------------------------------------------------------
+
+class TestEdgeReadmitRoundTrip:
+    @settings(max_examples=15)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_arbitrary_dead_set_sequences_round_trip_bitwise(self, seed):
+        """Property: for ANY sequence of node dead-sets (deaths and
+        rejoins in arbitrary order), recomputing the effective topology
+        from the pristine table + live mask is row-stochastic at every
+        intermediate state, and the moment everyone is live again the
+        result is the pristine topology — **bitwise**, w_self included
+        (the last-ulp trap: pristine w_self comes from a float64
+        accumulation that fp32 ``1 - w.sum(-1)`` cannot reproduce)."""
+        rng = np.random.default_rng(seed)
+        n = 12
+        topo0 = SparseTopology.regular_circulant(n, 4)
+        w0 = np.asarray(topo0.w)
+        ws0 = np.asarray(topo0.w_self)
+        nbr = np.asarray(topo0.nbr)
+        # a random walk over dead-sets, ending with everyone alive
+        n_steps = rng.integers(2, 6)
+        dead_sets = [set(rng.choice(n, size=rng.integers(1, n // 2),
+                                    replace=False))
+                     for _ in range(n_steps)] + [set()]
+        for dead in dead_sets:
+            live_nodes = np.ones(n, np.float32)
+            for v in dead:
+                live_nodes[v] = 0.0
+            eff = edge_readmit_sparse(topo0, jnp.asarray(live_nodes[nbr]))
+            w = np.asarray(eff.w)
+            ws = np.asarray(eff.w_self)
+            # row-stochastic at every intermediate state
+            np.testing.assert_allclose(ws + w.sum(-1), 1.0, atol=1e-6)
+            assert (w >= 0).all()
+            # surviving edges keep their pristine weight exactly
+            kept = (live_nodes[nbr] > 0) & (w0 > 0)
+            np.testing.assert_array_equal(w[kept], w0[kept])
+            if not dead:
+                # full recovery: the pristine object itself, bitwise
+                assert eff is topo0
+                np.testing.assert_array_equal(w, w0)
+                np.testing.assert_array_equal(ws, ws0)
+
+    def test_readmit_matches_reweight_when_dead_remain(self):
+        topo0 = SparseTopology.regular_circulant(10, 4)
+        nbr = np.asarray(topo0.nbr)
+        live_nodes = np.ones(10, np.float32)
+        live_nodes[3] = 0.0
+        mask = jnp.asarray(live_nodes[nbr])
+        a = edge_readmit_sparse(topo0, mask)
+        b = edge_reweight_sparse(topo0, mask)
+        np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+        np.testing.assert_array_equal(
+            np.asarray(a.w_self), np.asarray(b.w_self)
         )
 
 

@@ -1,0 +1,180 @@
+"""Elastic membership in isolation (``repro.runtime.membership``).
+
+The failure detector and the rejoin admission state machine, with no
+sockets and no full run: silence past ``dead_timeout_s`` and retry-budget
+exhaustion each declare dead exactly once; a re-JOIN from a declared-dead
+peer at a newer epoch clears the dead mark (at its committed admission
+round); epoch-stamped frame admission rejects zombies and ignores
+not-yet-announced future incarnations.
+"""
+import pytest
+
+from repro.runtime.membership import (
+    Membership,
+    RUNTIME_COUNTER_KEYS,
+    zero_counters,
+)
+
+
+def mk(n=4, wid=0, timeout=3.0):
+    return Membership(n, wid, timeout)
+
+
+class TestCounterSchema:
+    def test_schema_extends_pr7(self):
+        for k in ("faults_detected", "retry_total", "leaves",
+                  "rejoin_total", "stale_frames_dropped", "catchup_bytes"):
+            assert k in RUNTIME_COUNTER_KEYS
+
+    def test_zero_counters(self):
+        c = zero_counters()
+        assert set(c) == set(RUNTIME_COUNTER_KEYS)
+        assert all(v == 0 for v in c.values())
+
+
+class TestFailureDetector:
+    def test_silence_past_timeout_declares_dead_exactly_once(self):
+        m = mk(timeout=3.0)
+        m.heartbeat(1, 0, now=10.0)
+        assert not m.silent_too_long(1, now=12.9)
+        assert m.silent_too_long(1, now=13.1)
+        # the declare is idempotent: one detection per incarnation,
+        # however many silence checks fire afterwards
+        assert m.declare_dead(1) is True
+        assert m.declare_dead(1) is False
+        assert m.declare_dead(1) is False
+        assert not m.is_live(1)
+        # a dead peer no longer trips the silence check at all
+        assert not m.silent_too_long(1, now=99.0)
+
+    def test_retry_exhaustion_same_declare_path(self):
+        # send-retry exhaustion calls the same declare_dead: the second
+        # path (e.g. silence after the retry fault) must be a no-op
+        m = mk()
+        assert m.declare_dead(2) is True   # retry budget exhausted
+        assert m.declare_dead(2) is False  # silence detector fires later
+        assert m.dead == {2}
+
+    def test_never_heard_is_not_silent(self):
+        m = mk()
+        assert not m.silent_too_long(1, now=1e9)
+
+    def test_graceful_leave_is_not_a_fault(self):
+        m = mk()
+        assert m.declare_left(3) is True
+        assert m.declare_left(3) is False
+        assert m.declare_dead(3) is False  # already gone, not a new fault
+        assert m.left == {3} and m.dead == set()
+
+    def test_zombie_heartbeat_does_not_refresh(self):
+        m = mk()
+        m.heartbeat(1, 0, now=1.0)
+        m.declare_dead(1)
+        m.hello(1, 1)  # new incarnation announced
+        assert m.heartbeat(1, 0, now=50.0) == "stale"  # the corpse beacons
+        assert m.last_seen[1] == 1.0
+        assert m.heartbeat(1, 1, now=51.0) == "ok"
+        assert m.last_seen[1] == 51.0
+
+
+class TestFrameAdmission:
+    def test_live_current_epoch_ok(self):
+        m = mk()
+        assert m.frame_status(1, 0) == "ok"
+
+    def test_dead_sender_is_stale_even_at_current_epoch(self):
+        m = mk()
+        m.declare_dead(1)
+        assert m.frame_status(1, 0) == "stale"
+
+    def test_left_sender_is_stale(self):
+        m = mk()
+        m.declare_left(1)
+        assert m.frame_status(1, 0) == "stale"
+
+    def test_older_epoch_is_stale_newer_is_future(self):
+        m = mk()
+        m.declare_dead(1)
+        m.hello(1, 2)
+        assert m.frame_status(1, 1) == "stale"   # pre-crash zombie
+        assert m.frame_status(1, 2) == "ok"      # mid-rejoin incarnation
+        assert m.frame_status(1, 3) == "future"  # JOIN not yet seen
+
+    def test_unknown_worker_is_stale(self):
+        m = mk(n=4)
+        assert m.frame_status(17, 0) == "stale"
+
+
+class TestRejoin:
+    def test_rejoin_clears_dead_mark_at_admission(self):
+        m = mk()
+        m.declare_dead(1)
+        assert m.hello(1, 1) == "rejoin"
+        assert not m.is_live(1)            # not live until the start round
+        assert 1 in m.beacon_targets()     # but beaconed while pending
+        assert m.schedule_admit(1, 1, start_round=10, cur_round=5)
+        assert m.due_admissions(9) == []
+        assert m.due_admissions(10) == [1]
+        assert m.admit(1) is True          # was dead -> counts rejoin_total
+        assert m.is_live(1)
+        assert m.dead == set() and not m._pending(1)
+
+    def test_hello_at_stale_epoch_rejected(self):
+        m = mk()
+        m.declare_dead(1)
+        assert m.hello(1, 0) == "stale"    # zombie JOIN at the old epoch
+        assert not m._pending(1)
+        assert m.hello(1, 1) == "rejoin"
+
+    def test_hello_from_live_peer_at_newer_epoch(self):
+        # the supervisor relaunched the peer before this worker noticed
+        # the death — the caller retires the old incarnation first, then
+        # hello returns 'ok' for a live peer
+        m = mk()
+        assert m.hello(1, 1) == "ok"
+        assert m.epochs[1] == 1
+
+    def test_admit_requires_safe_future_round(self):
+        m = mk()
+        m.declare_dead(1)
+        m.hello(1, 1)
+        # cur_round + 1's barrier may already be in flight
+        assert not m.schedule_admit(1, 1, start_round=6, cur_round=5)
+        assert m.schedule_admit(1, 1, start_round=7, cur_round=5)
+
+    def test_admit_requires_matching_epoch(self):
+        m = mk()
+        m.declare_dead(1)
+        m.hello(1, 2)
+        assert not m.schedule_admit(1, 1, start_round=10, cur_round=0)
+        assert m.schedule_admit(1, 2, start_round=10, cur_round=0)
+
+    def test_second_death_after_rejoin_counts_again(self):
+        # detection/rejoin conservation across two full cycles
+        m = mk()
+        detected = rejoined = 0
+        for ep in (1, 2):
+            detected += int(m.declare_dead(1))
+            assert m.hello(1, ep) == "rejoin"
+            assert m.schedule_admit(1, ep, start_round=10 * ep, cur_round=0)
+            rejoined += int(m.admit(1))
+        assert detected == 2 and rejoined == 2
+        assert detected == len(m.dead) + rejoined
+
+    def test_pending_cleared_by_new_death(self):
+        m = mk()
+        m.declare_dead(1)
+        m.hello(1, 1)
+        m.schedule_admit(1, 1, start_round=10, cur_round=0)
+        m.admit(1)
+        # the rejoined incarnation dies too, while nothing is pending
+        assert m.declare_dead(1) is True
+        assert m.due_admissions(99) == []
+
+    def test_snapshot_shape(self):
+        m = mk()
+        m.declare_dead(1)
+        m.hello(1, 1)
+        s = m.snapshot()
+        assert s["dead"] == [1] and s["pending"] == [1]
+        assert s["epochs"][1] == 1

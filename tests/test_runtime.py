@@ -101,6 +101,22 @@ class TestWireCodec:
     def test_wid_roundtrip(self):
         assert T.decode_wid(T.encode_wid(13)) == 13
 
+    def test_epoch_stamped_rows(self):
+        """Every ROWS frame carries the sender's membership epoch; the
+        default 0 keeps pre-rejoin encodings identical in meaning."""
+        ids = np.array([1, 2], np.int32)
+        rows = np.zeros((2, 3), np.float32)
+        body = T.encode_rows(7, 1, ids, T.FMT_FULL_F32, rows=rows)
+        assert T.decode_rows(body)["epoch"] == 0
+        body = T.encode_rows(7, 1, ids, T.FMT_FULL_F32, epoch=3, rows=rows)
+        out = T.decode_rows(body)
+        assert (out["round"], out["sender"], out["epoch"]) == (7, 1, 3)
+
+    def test_peer_and_json_roundtrip(self):
+        assert T.decode_peer(T.encode_peer(13, 2)) == (13, 2)
+        msg = {"phase": "hello", "worker": 3, "epoch": 1, "port": 4242}
+        assert T.decode_json(T.encode_json(msg)) == msg
+
 
 # ---------------------------------------------------------------------------
 # launcher validation (no processes spawned)
@@ -122,6 +138,31 @@ class TestRunnerValidation:
             ProcessRunner(dl, WL, workers=2, kill_worker=1)
         with pytest.raises(ValueError, match="out of range"):
             ProcessRunner(dl, WL, workers=2, kill_worker=5, kill_at_round=1)
+
+    def test_chaos_plan_validation(self):
+        dl = DLConfig(n_nodes=8, backend="processes")
+        with pytest.raises(ValueError, match="out of range"):
+            ProcessRunner(dl, WL, workers=2,
+                          chaos_plan=[{"worker": 7, "kill_at_round": 1}])
+        with pytest.raises(ValueError, match="kill_at_round"):
+            ProcessRunner(dl, WL, workers=2,
+                          chaos_plan=[{"worker": 1, "kill_at_round": -1}])
+
+    def test_legacy_kill_pair_becomes_no_rejoin_entry(self):
+        dl = DLConfig(n_nodes=8, backend="processes")
+        r = ProcessRunner(dl, WL, workers=2, kill_worker=1, kill_at_round=2)
+        assert r.chaos_plan == [
+            {"worker": 1, "kill_at_round": 2, "rejoin": False}
+        ]
+
+    def test_chaos_plan_defaults_rejoin_true_and_sorts(self):
+        dl = DLConfig(n_nodes=8, backend="processes")
+        r = ProcessRunner(dl, WL, workers=2, chaos_plan=[
+            {"worker": 1, "kill_at_round": 9},
+            {"worker": 0, "kill_at_round": 2, "rejoin": False},
+        ])
+        assert [e["kill_at_round"] for e in r.chaos_plan] == [2, 9]
+        assert r.chaos_plan[1]["rejoin"] is True
 
 
 # ---------------------------------------------------------------------------
@@ -208,4 +249,35 @@ class TestProcessBackend:
         assert hist[-1]["round"] == 7  # survivors finished every round
         assert np.isfinite(r.final_X[r.live_rows]).all()
         assert np.isnan(r.final_X[~r.live_rows]).all()
+        assert np.isfinite(r.consensus_error())
+
+    def test_kill_rejoin_heals_the_mesh(self, tmp_path):
+        """Elastic membership end-to-end: SIGKILL one worker, relaunch it
+        with --rejoin — it catches up (checkpoint or donor STATE), the
+        survivors re-admit it at a committed round with pristine edge
+        weights, every round completes, detection/rejoin conservation
+        holds on every worker, and the rejoiner's final row-block matches
+        a survivor's view of it bitwise."""
+        dl = DLConfig(n_nodes=16, topology="regular", degree=5,
+                      rounds=30, eval_every=10, backend="processes", seed=7)
+        r = ProcessRunner(
+            dl, WL, workers=4, watchdog_s=120.0,
+            chaos_plan=[{"worker": 2, "kill_at_round": 3, "rejoin": True}],
+            ckpt_every=4, round_min_s=0.35, dump_view=True,
+            keep_run_dir=True, run_dir=str(tmp_path),
+        )
+        hist = r.run(log=False)
+        assert r.workers_rejoined == 1
+        assert r.counters["rejoin_total"] >= 1
+        assert r.conservation["ok"], r.conservation
+        assert hist[-1]["round"] == 29            # nobody stalled
+        assert hist[-1]["n_live_rows"] == 16      # all rows healed
+        res = r.worker_results[2]
+        assert res["rejoined"] and res["completed"]
+        assert res["epoch"] == 1
+        assert res["catchup_source"] is not None
+        assert res["counters"]["catchup_bytes"] > 0
+        views = r.verify_rejoin_views()
+        assert views == {2: True}
+        assert np.isfinite(r.final_X).all()       # no NaN rows remain
         assert np.isfinite(r.consensus_error())
