@@ -50,6 +50,131 @@ def dequantize_int4(packed, scale):
     return q.astype(jnp.float32) * scale
 
 
+# ---------------------------------------------------------------------------
+# cold population-row codec (AsyncScheduler ``DLConfig.cold_dtype``)
+# ---------------------------------------------------------------------------
+# The cohort engine's cold (N, P) population state is only ever touched by
+# row gathers/scatters, so it can live compressed: ``encode_cold`` maps a
+# node-stacked pytree (every float leaf (N, ...)) into its stored form and
+# ``decode_cold`` maps a (full or gathered) stored tree back to fp32.
+#
+# * ``bf16`` — per-leaf bitcast truncation; ``decode(encode(x)) == x``
+#   bitwise for every bf16-representable fp32 value (the upcast pads the
+#   mantissa with zeros), so values that survive one round-trip are fixed
+#   points of all further round-trips.
+# * ``int8`` — per-*row* symmetric :func:`quantize_int8` over the leaf's
+#   trailing dims: codes keep the leaf's shape at 1 byte/elt plus one (N,)
+#   fp32 scale per leaf (:class:`QuantRows`).  Lossy (~0.4% relative per
+#   row); re-encoding a decoded row reproduces its codes exactly (the row
+#   max decodes to ±127·scale, so the re-derived scale matches to rounding
+#   and every |code| <= 127 re-rounds to itself), which makes untouched
+#   gathered rows stable across gather/scatter cycles.
+#
+# Non-float leaves (int event counters, step counts) pass through raw in
+# both modes.
+
+COLD_DTYPES = ("fp32", "bf16", "int8")
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantRows:
+    """int8-quantized node-stacked leaf: ``q`` int8 codes with the original
+    leaf's shape, ``s`` (N,) fp32 per-row scales.  Registered as a pytree
+    so row gathers/scatters (``tree_map(take/at[].set)``) descend into both
+    fields untouched."""
+
+    __slots__ = ("q", "s")
+
+    def __init__(self, q, s):
+        self.q = q
+        self.s = s
+
+    def tree_flatten(self):
+        return (self.q, self.s), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"QuantRows(q={self.q.shape}, s={self.s.shape})"
+
+
+def _is_quant(x):
+    return isinstance(x, QuantRows)
+
+
+def quantize_rows(a) -> QuantRows:
+    """(N, ...) float leaf -> :class:`QuantRows` (row-flattened int8)."""
+    flat = a.reshape(a.shape[0], -1)
+    q, s = quantize_int8(flat)
+    return QuantRows(q.reshape(a.shape), s[:, 0])
+
+
+def dequantize_rows(enc: QuantRows, dtype=jnp.float32):
+    q = enc.q
+    flat = q.reshape(q.shape[0], -1).astype(jnp.float32) * enc.s[:, None]
+    return flat.reshape(q.shape).astype(dtype)
+
+
+def encode_cold(tree, mode: str):
+    """Node-stacked pytree -> its ``cold_dtype`` stored form ('fp32' is the
+    identity).  Float leaves only; everything else passes through."""
+    if mode == "fp32":
+        return tree
+    if mode not in COLD_DTYPES:
+        raise ValueError(f"unknown cold_dtype {mode!r} ({'|'.join(COLD_DTYPES)})")
+
+    def enc(a):
+        if not jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating):
+            return a
+        if mode == "bf16":
+            return jnp.asarray(a, jnp.bfloat16)
+        return quantize_rows(jnp.asarray(a))
+
+    return jax.tree_util.tree_map(enc, tree)
+
+
+def decode_cold(tree, mode: str):
+    """Stored form (full tree or a row-gathered subtree) -> fp32 pytree."""
+    if mode == "fp32":
+        return tree
+
+    def dec(x):
+        if isinstance(x, QuantRows):
+            return dequantize_rows(x)
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype == jnp.bfloat16:
+            return x.astype(jnp.float32)
+        return x
+
+    return jax.tree_util.tree_map(dec, tree, is_leaf=_is_quant)
+
+
+def cold_leaf_bytes(leaf) -> int:
+    """Stored bytes of one cold leaf (codes + scales for QuantRows)."""
+    if isinstance(leaf, QuantRows):
+        return int(leaf.q.nbytes + leaf.s.nbytes)
+    return int(leaf.nbytes)
+
+
+def cold_leaf_fp32_bytes(leaf) -> int:
+    """fp32-equivalent bytes of one cold leaf (the uncompressed baseline)."""
+    if isinstance(leaf, QuantRows):
+        return int(leaf.q.size * 4)
+    if jnp.issubdtype(leaf.dtype, jnp.floating):
+        return int(leaf.size * 4)
+    return int(leaf.nbytes)
+
+
+def cold_tree_bytes(tree):
+    """(stored, fp32-equivalent) byte totals of a cold pytree."""
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=_is_quant)
+    return (
+        sum(cold_leaf_bytes(l) for l in leaves),
+        sum(cold_leaf_fp32_bytes(l) for l in leaves),
+    )
+
+
 def delta_encode_indices(idx):
     """Sorted-index delta encoding (smaller varint-able ints on the wire)."""
     idx = jnp.sort(idx, axis=-1)

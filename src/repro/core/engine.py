@@ -143,6 +143,21 @@ class DLConfig:
     # of O(N·P) — with overflow-carry for in-slice nodes beyond capacity.
     # 0 = the dense oracle (every step computes over all N rows).
     cohort_capacity: int = 0
+    # cohort selection layer: 'flat' = the O(N) min+top_k oracle; 'hier' =
+    # carried segment-minimum hierarchy — top-K segments of the (S,)
+    # per-segment minima, then top_k inside their gathered clock union —
+    # O(S + K·seg) per step with bitwise-identical cohorts (slices
+    # spanning more than K segments fall back to the flat oracle inside
+    # the step); 'auto' = hier above ~260k nodes.
+    selection: str = "auto"    # auto | flat | hier
+    segment_size: int = 0      # hier segment length; 0 = auto ~ sqrt(N/C)
+    # cold population storage (cohort path): the (N, P) params and float
+    # opt-state moments live compressed on device — 'bf16' truncates
+    # (round-trip exact for bf16-representable values), 'int8' per-row
+    # symmetric quantization (codes + one fp32 scale per row per leaf,
+    # ~0.26x fp32 bytes; lossy, gated by a tolerance oracle) — decoded on
+    # cohort gather, re-encoded on scatter.
+    cold_dtype: str = "fp32"   # fp32 | bf16 | int8
     # batch-index derivation: 'stream' = per-round numpy PCG64 host staging
     # (the original path); 'node' = per-(round, node) jax PRNG keying,
     # derived on device for exactly the rows a step touches — required by
@@ -169,6 +184,11 @@ class DLConfig:
     compute_time_s: float = 0.0  # base per-node local compute in the time model
     straggler_factor: float = 1.0  # stragglers run at factor x compute_time_s
     straggler_frac: float = 0.0    # seeded fraction of straggler nodes
+    # continuous per-node heterogeneity: node i runs at compute_time_s *
+    # U(1, 1 + compute_spread), seeded — de-ties the event clock so the
+    # population's t_next is spread instead of lattice-valued (the regime
+    # where hierarchical cohort selection can prune segments)
+    compute_spread: float = 0.0
     parallel_sends: bool = False  # overlap a node's sends (dedicated NICs)
 
     # ------------------------------------------------------------------
@@ -255,6 +275,11 @@ class DLConfig:
             bad("straggler_factor/straggler_frac scale compute_time_s, "
                 "which is 0 — the straggler distribution would be a silent "
                 "no-op; set a base compute_time_s")
+        if self.compute_spread < 0:
+            bad(f"compute_spread must be >= 0, got {self.compute_spread}")
+        if self.compute_spread > 0 and self.compute_time_s == 0:
+            bad("compute_spread scales compute_time_s, which is 0 — the "
+                "spread would be a silent no-op; set a base compute_time_s")
         # (churn_machines with participation=1.0 is permitted: sweeps use
         # p=1.0 as the no-churn baseline row)
         # -- sharing-strategy knob compatibility ---------------------------
@@ -380,6 +405,19 @@ class DLConfig:
                     "staging of (R, L, N, B) sample indices is O(N·B) per "
                     "step — the population-scale cost the cohort path "
                     "exists to remove")
+        if self.selection not in ("auto", "flat", "hier"):
+            bad(f"unknown selection {self.selection!r} (auto|flat|hier)")
+        if self.segment_size < 0:
+            bad(f"segment_size must be >= 0, got {self.segment_size}")
+        if self.cold_dtype not in ("fp32", "bf16", "int8"):
+            bad(f"unknown cold_dtype {self.cold_dtype!r} (fp32|bf16|int8)")
+        if self.cohort_capacity == 0:
+            if self.selection == "hier" or self.segment_size > 0:
+                bad("selection='hier'/segment_size tune the cohort "
+                    "selection layer; set cohort_capacity > 0")
+            if self.cold_dtype != "fp32":
+                bad("cold_dtype compresses the cohort path's cold "
+                    "population state; set cohort_capacity > 0")
         return self
 
 
@@ -407,10 +445,19 @@ def compute_time_vector(cfg: DLConfig) -> np.ndarray:
     derivation (including the straggler draw's seed offset) shared by the
     host ``NetworkModel`` and the engine's traced step/scheduler layers,
     so the two cannot disagree about who the stragglers are."""
-    return straggler_compute_times(
+    ct = straggler_compute_times(
         cfg.n_nodes, cfg.compute_time_s, cfg.straggler_factor,
         cfg.straggler_frac, seed=cfg.seed + 31,
     )
+    if cfg.compute_spread > 0:
+        # continuous multiplier on top of the (possibly bimodal) straggler
+        # draw — distinct seed stream so toggling stragglers does not
+        # reshuffle the spread
+        rng = np.random.default_rng(cfg.seed + 47)
+        ct = (ct * (1.0 + cfg.compute_spread
+                    * rng.random(cfg.n_nodes, dtype=np.float32))
+              ).astype(np.float32)
+    return ct
 
 
 def build_network(cfg: DLConfig) -> Optional[NetworkModel]:
@@ -700,7 +747,9 @@ class RoundEngine:
 
     # ------------------------------------------------------------------
     def _record(self, rnd: int, tx, ty, t0: float, log: bool):
-        accs = np.asarray(self._eval_jit(self.params, tx, ty))
+        # eval through the scheduler hook: the quantized-cold async path
+        # stores self.params compressed and decodes them here
+        accs = np.asarray(self._eval_jit(self.scheduler.eval_params(), tx, ty))
         rec = {
             "round": rnd,
             "acc_mean": float(accs.mean()),

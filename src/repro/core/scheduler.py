@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compression as compression_lib
 from repro.core import faults as faults_lib
 from repro.core.mixing import ShardedDense, ShardedTopology, gossip_pair_avg
 from repro.data.loader import node_batch_indices
@@ -77,6 +78,13 @@ _BATCH_STACK_BYTES_CAP = 256 * 1024 * 1024
 # threshold is far above any existing test horizon, so trajectories below
 # it are untouched bitwise.
 _REBASE_T_S = 65536.0
+
+# selection='auto' switches the cohort path from the flat O(N) min+top_k
+# selection to the hierarchical segment-minimum selection above this node
+# count: below it the flat scan over t_next is already cheap next to the
+# O(C·(d+1)·P) gossip, above it the O(N) selection layer starts to bind
+# (the million-node regime the hierarchy exists for).
+_HIER_AUTO_MIN_N = 1 << 18
 
 
 def _live_edges(W, act):
@@ -265,6 +273,12 @@ class Scheduler:
             self._fault_totals[k] += float(
                 np.asarray(fstats[k], np.float64).sum()
             )
+
+    def eval_params(self):
+        """The params tree evaluation should run on.  Identity for every
+        semantics except the quantized-cold async path, which stores
+        ``eng.params`` compressed and decodes here."""
+        return self.eng.params
 
     def extra_metrics(self) -> Dict:
         """Semantics-specific metrics merged into each history record.
@@ -626,7 +640,73 @@ class AsyncScheduler(Scheduler):
         self._occ_sum = 0.0
         self._occ_steps = 0
         self._overflow_total = 0
+        # --- cohort selection layer (flat oracle vs segment-min hierarchy)
+        sel = eng.dl.selection
+        if sel == "auto":
+            sel = "hier" if (
+                self._cohort_c > 0 and n >= _HIER_AUTO_MIN_N
+            ) else "flat"
+        self._selection = sel
+        self._fallback_total = 0
+        if sel == "hier":
+            seg = int(eng.dl.segment_size)
+            if seg <= 0:
+                # minimize the per-step selection cost S + C·seg + K·seg
+                # (segment scan + seg_min refresh + union gather):
+                # seg ~ sqrt(N/C), clamped to sane block sizes
+                seg = int(np.clip(
+                    round(np.sqrt(n / max(self._cohort_c, 1))), 4, 128
+                ))
+            self._seg = min(seg, n)
+            self._n_seg = -(-n // self._seg)
+            # candidate segments per step: at least C, because under
+            # uncorrelated (continuous heterogeneous) event times the
+            # in-slice nodes land in ~one segment each, plus twice what
+            # a cohort of dense segments needs for the clustered/tied
+            # case; a slice spanning more segments than this falls back
+            # to the flat oracle inside the step (counted in
+            # selection_fallback_total).  Union size stays K*seg ~
+            # sqrt(N*C) at the auto segment size — sublinear in N.
+            self._seg_k = min(
+                self._n_seg,
+                max(self._cohort_c,
+                    2 * (-(-self._cohort_c // self._seg)), 8),
+            )
+            self._seg_min = self._build_seg_min(self._t_next)
+        else:
+            self._seg = self._n_seg = self._seg_k = 0
+            self._seg_min = None
+        # --- cold population storage (DLConfig.cold_dtype) ----------------
+        # the (N, P) params / opt moments live compressed; every cohort
+        # gather decodes C rows to fp32 and every scatter re-encodes them
+        self._cold_dtype = eng.dl.cold_dtype
+        if self._cold_dtype != "fp32":
+            eng.params = compression_lib.encode_cold(
+                eng.params, self._cold_dtype
+            )
+            eng.opt_state = compression_lib.encode_cold(
+                eng.opt_state, self._cold_dtype
+            )
         self._chunk_jit = jax.jit(self._chunk_fn)
+
+    def eval_params(self):
+        return compression_lib.decode_cold(self.eng.params, self._cold_dtype)
+
+    # -- hierarchical selection state -------------------------------------
+    def _build_seg_min(self, t_next):
+        """(S,) exact per-segment minima of ``t_next`` — the carried
+        selection index.  O(N); init/rebase only (the scan body refreshes
+        just the segments its scatter touched)."""
+        n = self.eng.dl.n_nodes
+        seg, S = self._seg, self._n_seg
+        rows = (
+            jnp.arange(S, dtype=jnp.int32)[:, None] * seg
+            + jnp.arange(seg, dtype=jnp.int32)[None, :]
+        )
+        vals = jnp.where(
+            rows < n, jnp.take(t_next, jnp.minimum(rows, n - 1)), jnp.inf
+        )
+        return jnp.min(vals, axis=1)
 
     # -- traced cohort helpers -------------------------------------------
     def _pair_comm(self, partner, ok, rows=None):
@@ -808,14 +888,93 @@ class AsyncScheduler(Scheduler):
             params, opt_state, share_state, t_next, vclock, events, retries
         ), out
 
+    # -- traced cohort selection ------------------------------------------
+    def _select_flat(self, t_next, t_min=None):
+        """The flat selection oracle: top-C earliest ``t_next`` inside the
+        slice over the full (N,) clock — O(N) per step.  Returns
+        ``(cids, cmask, occupancy, overflow)`` with ``cids`` sorted
+        ascending."""
+        dl = self.eng.dl
+        C = self._cohort_c
+        if t_min is None:
+            t_min = jnp.min(t_next)
+        in_slice = t_next <= t_min + dl.async_slice_s
+        neg, cand = jax.lax.top_k(jnp.where(in_slice, -t_next, -jnp.inf), C)
+        pad = jnp.isfinite(neg).astype(jnp.float32)    # (C,) real-vs-pad
+        occupancy = jnp.sum(pad)
+        overflow = (
+            jnp.sum(in_slice.astype(jnp.int32)) - occupancy.astype(jnp.int32)
+        )
+        cids, cmask = jax.lax.sort_key_val(cand, pad)  # ascending ids
+        return cids, cmask, occupancy, overflow
+
+    def _select_hier(self, t_next, seg_min):
+        """Hierarchical segment-min selection: pick the K earliest-min
+        segments from the carried (S,) ``seg_min``, gather their (K·seg,)
+        clock union, and run the slice mask + ``top_k`` inside it — no
+        O(N) op on the step.  Exactness: ``min(seg_min) == min(t_next)``
+        (each entry is an exact fp32 min), and whenever every in-slice
+        segment is among the top K (the ``covered`` predicate), the
+        union's masked candidate set equals the flat oracle's and the
+        union rows ascend in global id (segments sorted, rows contiguous),
+        so ``top_k`` reproduces the flat pick *and* its lowest-id
+        tie-break bitwise.  Slices spanning more than K segments take a
+        ``lax.cond`` branch into :meth:`_select_flat` (rare; counted).
+        Capacity-padding slots may carry out-of-range ids (the union's
+        tail rows past N): gathers clip them and scatters drop them, the
+        same masked no-op contract in-range pad ids already satisfy."""
+        dl = self.eng.dl
+        C = self._cohort_c
+        n = dl.n_nodes
+        seg, K = self._seg, self._seg_k
+        t_min = jnp.min(seg_min)
+        theta = t_min + dl.async_slice_s
+        covered = jnp.sum((seg_min <= theta).astype(jnp.int32)) <= K
+
+        def hier_branch(operand):
+            t_next, seg_min = operand
+            _, seg_sel = jax.lax.top_k(-seg_min, K)
+            seg_sel = jnp.sort(seg_sel)        # union rows ascend globally
+            rows = (
+                seg_sel[:, None] * seg
+                + jnp.arange(seg, dtype=seg_sel.dtype)[None, :]
+            ).reshape(-1)                      # (K·seg,) global ids
+            u_t = jnp.where(
+                rows < n, jnp.take(t_next, jnp.minimum(rows, n - 1)), jnp.inf
+            )
+            in_sl = u_t <= theta
+            neg, pos = jax.lax.top_k(jnp.where(in_sl, -u_t, -jnp.inf), C)
+            pad = jnp.isfinite(neg).astype(jnp.float32)
+            occupancy = jnp.sum(pad)
+            overflow = (
+                jnp.sum(in_sl.astype(jnp.int32)) - occupancy.astype(jnp.int32)
+            )
+            cand = jnp.take(rows, pos).astype(jnp.int32)
+            cids, cmask = jax.lax.sort_key_val(cand, pad)
+            return cids, cmask, occupancy, overflow
+
+        def flat_branch(operand):
+            t_next, _ = operand
+            return self._select_flat(t_next, t_min=t_min)
+
+        cids, cmask, occupancy, overflow = jax.lax.cond(
+            covered, hier_branch, flat_branch, (t_next, seg_min)
+        )
+        return cids, cmask, occupancy, overflow, 1 - covered.astype(jnp.int32)
+
     def _cohort_gs(self, carry, xs_r):
         """Population-scale cohort body: the semantics of :meth:`_cohort`
         executed on a gathered (C, ...) hot set.  Selection is top-C
         earliest ``t_next`` inside the slice (ties by lowest id — the
-        ``lax.top_k`` tie-break), unselected in-slice nodes keep their
+        ``lax.top_k`` tie-break), either flat over the (N,) clock
+        (:meth:`_select_flat`, the oracle) or through the carried
+        segment-minimum hierarchy (:meth:`_select_hier`, bitwise the same
+        cohort with no O(N) op); unselected in-slice nodes keep their
         ``t_next`` untouched (overflow-carry: the slice window is
         monotone, so they remain inside the next one and fire in
-        earliest-deadline order).  Capacity padding slots carry
+        earliest-deadline order).  Under a compressed ``cold_dtype`` the
+        cold population rows decode to fp32 at the gather and re-encode
+        at the scatter below.  Capacity padding slots carry
         ``cmask=0``: their gathered rows run through the same masked ops
         as churn-down nodes and scatter back bit-unchanged.  The dense
         oracle reads post-local-step rows of same-step peers, so neighbor
@@ -829,20 +988,24 @@ class AsyncScheduler(Scheduler):
         eng = self.eng
         dl = eng.dl
         C = self._cohort_c
-        params, opt_state, share_state, t_next, vclock, events, vmax = carry
+        cold = self._cold_dtype
+        hier = self._selection == "hier"
+        if hier:
+            (params, opt_state, share_state, t_next, vclock, events, vmax,
+             seg_min) = carry
+        else:
+            params, opt_state, share_state, t_next, vclock, events, vmax = carry
         W = xs_r["mix"] if "mix" in xs_r else eng._mix_static
         act = xs_r.get("act")
         rnd = xs_r["rnd"]
         # --- cohort selection on the virtual clock ------------------------
-        t_min = jnp.min(t_next)
-        in_slice = t_next <= t_min + dl.async_slice_s
-        neg, cand = jax.lax.top_k(jnp.where(in_slice, -t_next, -jnp.inf), C)
-        pad = jnp.isfinite(neg).astype(jnp.float32)     # (C,) real-vs-pad
-        occupancy = jnp.sum(pad)
-        overflow = (
-            jnp.sum(in_slice.astype(jnp.int32)) - occupancy.astype(jnp.int32)
-        )
-        cids, cmask = jax.lax.sort_key_val(cand, pad)   # ascending ids
+        if hier:
+            cids, cmask, occupancy, overflow, fb = self._select_hier(
+                t_next, seg_min
+            )
+        else:
+            cids, cmask, occupancy, overflow = self._select_flat(t_next)
+            fb = jnp.int32(0)
 
         def take_rows(tree):
             return jax.tree_util.tree_map(
@@ -857,18 +1020,24 @@ class AsyncScheduler(Scheduler):
                 tree, sub,
             )
 
-        # global id -> cohort slot (-1 outside): how neighbor/partner
-        # reads find this step's fresh rows without scattering them first
-        slot_of = (
-            jnp.full((dl.n_nodes,), -1, jnp.int32)
-            .at[cids].set(jnp.arange(C, dtype=jnp.int32),
-                          indices_are_sorted=True, unique_indices=True)
-        )
+        # global id -> cohort slot (-1 outside): how neighbor/partner reads
+        # find this step's fresh rows without scattering them first.  A
+        # sorted-membership probe on the (C,) sorted cids — O(M·log C) per
+        # M-row lookup, replacing the former full-(N,) scatter map
+        def slot_lookup(ids):
+            pos = jnp.minimum(
+                jnp.searchsorted(cids, ids).astype(jnp.int32), C - 1
+            )
+            return jnp.where(jnp.take(cids, pos) == ids, pos, -1)
 
         act_c = jnp.take(act, cids) if act is not None else None
         actv_c = cmask * act_c if act is not None else cmask  # fired AND up
         # --- local step on the hot slice ----------------------------------
-        p_c, o_c = take_rows(params), take_rows(opt_state)
+        # gathered rows decode to fp32 (identity under cold_dtype='fp32');
+        # the encoded gather is kept so masked rows scatter back bit-exact
+        enc_p, enc_o = take_rows(params), take_rows(opt_state)
+        p_c = compression_lib.decode_cold(enc_p, cold)
+        o_c = compression_lib.decode_cold(enc_o, cold)
         idx_c = self._node_indices(rnd, cids)                 # (L, C, B)
         bx = jnp.take(eng._dev_x, idx_c, axis=0)
         by = jnp.take(eng._dev_y, idx_c, axis=0)
@@ -878,7 +1047,7 @@ class AsyncScheduler(Scheduler):
         def fresh_rows(ids, X_cold):
             """Post-local-step values for global ``ids``: the fresh hot
             slice where ``ids`` is in this cohort, ``X_cold`` otherwise."""
-            s = jnp.take(slot_of, ids)
+            s = slot_lookup(ids)
             X_f = jnp.take(X_c, jnp.clip(s, 0), axis=0)
             return jnp.where((s >= 0)[..., None], X_f, X_cold)
 
@@ -893,8 +1062,11 @@ class AsyncScheduler(Scheduler):
             ok = actv_c
             if act is not None:
                 ok = ok * jnp.take(act, partner)
-            p_partner = jax.tree_util.tree_map(
-                lambda a: jnp.take(a, partner, axis=0), params
+            p_partner = compression_lib.decode_cold(
+                jax.tree_util.tree_map(
+                    lambda a: jnp.take(a, partner, axis=0), params
+                ),
+                cold,
             )
             X_p = fresh_rows(partner, jax.vmap(tree_vector)(p_partner))
             X2_c = jnp.where(ok[:, None] > 0, 0.5 * (X_c + X_p), X_c)
@@ -912,8 +1084,11 @@ class AsyncScheduler(Scheduler):
             else:
                 Wm_c, deg_eff = topo_c, eng.steps.mean_degree
             nbr_flat = Wm_c.nbr.reshape(-1)                   # (C·D,)
-            p_n = jax.tree_util.tree_map(
-                lambda a: jnp.take(a, nbr_flat, axis=0), params
+            p_n = compression_lib.decode_cold(
+                jax.tree_util.tree_map(
+                    lambda a: jnp.take(a, nbr_flat, axis=0), params
+                ),
+                cold,
             )
             Xn = fresh_rows(nbr_flat, jax.vmap(tree_vector)(p_n)).reshape(
                 X_c.shape[0], -1, X_c.shape[1]
@@ -954,9 +1129,21 @@ class AsyncScheduler(Scheduler):
         )
         p2_c = node_where(actv_c, p2_c, p_c)
         # the one (C, P)-scale scatter of the step: post-mix params (which
-        # are the post-local params on masked rows) and opt state together
-        params = put_rows(params, p2_c)
-        opt_state = put_rows(opt_state, o_c)
+        # are the post-local params on masked rows) and opt state together.
+        # Compressed cold rows re-encode first, and masked rows scatter
+        # the *original* encoded gather back — int8 re-encode wobbles the
+        # per-row scale by ulps, so untouched rows stay bit-exact by
+        # construction, not by codec luck
+        if cold == "fp32":
+            params = put_rows(params, p2_c)
+            opt_state = put_rows(opt_state, o_c)
+        else:
+            params = put_rows(params, node_where(
+                actv_c, compression_lib.encode_cold(p2_c, cold), enc_p
+            ))
+            opt_state = put_rows(opt_state, node_where(
+                actv_c, compression_lib.encode_cold(o_c, cold), enc_o
+            ))
         # --- clock advance on the gathered rows ---------------------------
         dur_c = jnp.take(eng.steps.compute_node, cids) + comm
         t_c = jnp.take(t_next, cids)
@@ -976,6 +1163,25 @@ class AsyncScheduler(Scheduler):
         vmax = jnp.maximum(
             vmax, jnp.max(jnp.where(cmask > 0, t_c, -jnp.inf))
         )
+        if hier:
+            # refresh the carried segment minima for exactly the segments
+            # this scatter touched: gather each one's (seg,) clock block
+            # and rewrite its exact min — O(C·seg).  Duplicate segments
+            # write identical values; out-of-range pad ids clamp into the
+            # last segment, whose (unchanged) min is simply recomputed
+            n = dl.n_nodes
+            seg = self._seg
+            segs = jnp.minimum(cids, n - 1) // seg
+            rows2 = (
+                segs[:, None] * seg
+                + jnp.arange(seg, dtype=jnp.int32)[None, :]
+            )
+            vals = jnp.where(
+                rows2 < n,
+                jnp.take(t_next, jnp.minimum(rows2, n - 1)),
+                jnp.inf,
+            )
+            seg_min = seg_min.at[segs].set(jnp.min(vals, axis=1))
         out = (
             nbytes,
             vmax,
@@ -985,29 +1191,31 @@ class AsyncScheduler(Scheduler):
             jnp.max(stale_c),
             occupancy,
             overflow,
+            fb,
         )
-        return (
-            params, opt_state, share_state, t_next, vclock, events, vmax
-        ), out
+        state = (params, opt_state, share_state, t_next, vclock, events, vmax)
+        if hier:
+            state = state + (seg_min,)
+        return state, out
 
     def _chunk_fn(self, params, opt_state, share_state, t_next, vclock, events,
-                  retries, xs):
+                  retries, seg_min, xs):
         if self._cohort_c > 0:
             # the cohort gather/scatter path runs fault-free (validated):
             # retries pass through untouched, no fstats emitted
-            carry, outs = jax.lax.scan(
-                self._cohort_gs,
-                (params, opt_state, share_state, t_next, vclock, events,
-                 jnp.max(vclock)),
-                xs,
-            )
-            return carry[:6] + (retries,) + outs
+            init = (params, opt_state, share_state, t_next, vclock, events,
+                    jnp.max(vclock))
+            if self._selection == "hier":
+                init = init + (seg_min,)
+            carry, outs = jax.lax.scan(self._cohort_gs, init, xs)
+            seg_out = carry[7] if self._selection == "hier" else None
+            return carry[:6] + (retries, seg_out) + outs
         carry, outs = jax.lax.scan(
             self._cohort,
             (params, opt_state, share_state, t_next, vclock, events, retries),
             xs,
         )
-        return carry + outs
+        return carry + (None,) + outs
 
     # -- host-side dispatch ----------------------------------------------
     def run_span(self, start: int, n_rounds: int) -> None:
@@ -1015,11 +1223,13 @@ class AsyncScheduler(Scheduler):
         xs = self._stage_xs(start, n_rounds)
         out = self._chunk_jit(
             eng.params, eng.opt_state, eng.share_state,
-            self._t_next, self._vclock, self._events, self._retries, xs,
+            self._t_next, self._vclock, self._events, self._retries,
+            self._seg_min, xs,
         )
         (eng.params, eng.opt_state, eng.share_state,
          self._t_next, self._vclock, self._events, self._retries) = out[:7]
-        nbytes, t_virt, fired, stale_sum, stale_n, stale_max = out[7:13]
+        self._seg_min = out[7]
+        nbytes, t_virt, fired, stale_sum, stale_n, stale_max = out[8:14]
         eng.bytes_sent += float(np.asarray(nbytes, np.float64).sum())
         # the virtual clock is a running maximum, not a per-cohort sum —
         # fp32-exact (max selects, never rounds) — plus the rebase offset
@@ -1029,12 +1239,13 @@ class AsyncScheduler(Scheduler):
         self._stale_n += float(np.asarray(stale_n, np.float64).sum())
         self._stale_max = max(self._stale_max, float(np.asarray(stale_max).max()))
         if self._cohort_c > 0:
-            occ = np.asarray(out[13], np.float64)
+            occ = np.asarray(out[14], np.float64)
             self._occ_sum += float(occ.sum())
             self._occ_steps += int(occ.shape[0])
-            self._overflow_total += int(np.asarray(out[14], np.int64).sum())
+            self._overflow_total += int(np.asarray(out[15], np.int64).sum())
+            self._fallback_total += int(np.asarray(out[16], np.int64).sum())
         else:
-            self._accum_faults(out[13])
+            self._accum_faults(out[14])
         self._maybe_rebase()
 
     def _maybe_rebase(self) -> None:
@@ -1055,6 +1266,11 @@ class AsyncScheduler(Scheduler):
         s = jnp.float32(shift)
         self._t_next = self._t_next - s
         self._vclock = self._vclock - s
+        if self._seg_min is not None:
+            # x - s is monotone in x (fp rounding preserves order), so each
+            # segment's min element stays its min and seg_min - s rounds to
+            # exactly the shifted t_next entry it mirrors
+            self._seg_min = self._seg_min - s
 
     # -- population-scale memory accounting --------------------------------
     def memory_model(self) -> Dict:
@@ -1090,17 +1306,43 @@ class AsyncScheduler(Scheduler):
             "topology_rows_bytes": c * (d * 8 + 4),      # nbr+w rows, w_self
         }
         hot["total"] = int(sum(hot.values()))
+        # population params/opt bytes come from the *stored* trees — under a
+        # compressed cold_dtype that is codes+scales, not N·P·4 — alongside
+        # the fp32-equivalent baseline the compression gate divides by
+        pop_b, pop_fp32 = compression_lib.cold_tree_bytes(
+            (eng.params, eng.opt_state)
+        )
+        seg_min_bytes = self._n_seg * 4 if self._selection == "hier" else 0
         cold = {
-            "population_params_bytes": n * p * 4,
-            "clock_bytes": n * (4 + 4 + 4),  # t_next / vclock / events
+            "population_params_bytes": int(pop_b),
+            "clock_bytes": n * (4 + 4 + 4) + seg_min_bytes,
             "topology_bytes": topo_bytes,
         }
         cold["total"] = int(sum(cold.values()))
+        cold["population_params_fp32_bytes"] = int(pop_fp32)
+        cold["total_fp32"] = int(cold["total"] - pop_b + pop_fp32)
+        # the selection layer's per-step working set: O(S + K·seg) for the
+        # hierarchy (clock union + segment minima) vs O(N) flat.  Reported
+        # separately from `hot`, which stays the N-independent-at-fixed-C
+        # gossip working set the bench independence check pins
+        if self._selection == "hier":
+            selection = {
+                "mode": "hier",
+                "segment": self._seg,
+                "n_segments": self._n_seg,
+                "segments_topk": self._seg_k,
+                "per_step_bytes": self._seg_k * self._seg * 12
+                + self._n_seg * 4,
+            }
+        else:
+            selection = {"mode": "flat", "per_step_bytes": n * 12}
         return {
             "cohort_capacity": c,
             "n_nodes": n,
             "n_params": p,
             "dmax": d,
+            "cold_dtype": self._cold_dtype,
+            "selection": selection,
             "hot": hot,
             "cold": cold,
         }
@@ -1126,6 +1368,14 @@ class AsyncScheduler(Scheduler):
             m["cohort_capacity"] = self._cohort_c
             m["cohort_occupancy_mean"] = self._occ_sum / max(self._occ_steps, 1)
             m["cohort_overflow_total"] = self._overflow_total
+            # overflow per selected event: how often an in-slice node had
+            # to carry to a later step — the raw counter's denominator
+            m["cohort_overflow_ratio"] = (
+                self._overflow_total / max(self._fired_total, 1)
+            )
+            m["cohort_selection"] = self._selection
+            if self._selection == "hier":
+                m["selection_fallback_total"] = self._fallback_total
         m.update(super().extra_metrics())
         return m
 

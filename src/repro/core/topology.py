@@ -207,8 +207,11 @@ def circulant_neighbor_table(n: int, degree: int) -> np.ndarray:
     :func:`neighbor_table` produces from ``Graph.regular_circulant(n, d)``
     (bitwise-equal tables; property-tested), which is what lets the
     population-scale engine instantiate 100k+-node overlays that the dense
-    ``Graph`` constructor cannot hold."""
+    ``Graph`` constructor cannot hold.  Offsets are applied in int64 and
+    the table narrows to int32 at the end, so node ids stay exact up to
+    the int32 ceiling (property-tested at N >= 2^20)."""
     assert 0 < degree < n
+    assert n <= np.iinfo(np.int32).max, "node ids are int32 on device"
     idx = np.arange(n, dtype=np.int64)[:, None]
     cols = []
     for o in circulant_offsets(n, degree):
@@ -236,6 +239,9 @@ def random_regular_neighbors(n: int, degree: int, seed: int) -> np.ndarray:
     regime occurs).  Same seed -> same graph either way.
     """
     assert 0 < degree < n and n * degree % 2 == 0, "n*degree must be even"
+    assert n <= np.iinfo(np.int32).max, "node ids are int32 on device"
+    # edge keys are a*n + b with a, b < n: int64 keeps them exact for any
+    # int32-range n (a*n alone overflows int32 beyond n ~ 46341)
     rng = np.random.default_rng(seed)
     stubs = np.repeat(np.arange(n, dtype=np.int64), degree)
     rng.shuffle(stubs)

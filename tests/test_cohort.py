@@ -279,3 +279,277 @@ class TestCohortValidate:
         self._bad("unknown batch_keying", batch_keying="host")
         self._bad("chunk", batch_keying="node", chunk_rounds=0)
         self._bad("single-host", batch_keying="node", shard_devices=2)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical segment-min selection == the flat top_k oracle (bitwise)
+# ---------------------------------------------------------------------------
+
+class TestHierarchicalSelection:
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS), ids=sorted(SCENARIOS))
+    def test_hier_matches_flat_oracle_bitwise(self, scenario):
+        """Under capacity pressure (C < N, real overflow-carry) the
+        segment-min hierarchy must pick the bitwise-identical cohort —
+        earliest deadline, same lowest-id tie-break — so the full
+        trajectory (params, events, bytes, sim time) matches the flat
+        selection run exactly, on every scenario axis."""
+        kw = SCENARIOS[scenario]
+        flat = _engine(rounds=12, seed=3, n_nodes=24, cohort_capacity=6,
+                       selection="flat", **kw)
+        hier = _engine(rounds=12, seed=3, n_nodes=24, cohort_capacity=6,
+                       selection="hier", segment_size=4, **kw)
+        flat.run(log=False)
+        hier.run(log=False)
+        np.testing.assert_array_equal(_w(flat), _w(hier))
+        np.testing.assert_array_equal(np.asarray(flat.scheduler._events),
+                                      np.asarray(hier.scheduler._events))
+        assert hier.bytes_sent == flat.bytes_sent
+        assert hier.sim_time_s == pytest.approx(flat.sim_time_s, rel=1e-12)
+        mf, mh = flat.history[-1], hier.history[-1]
+        for k in ("events_total", "staleness_mean", "vclock_max_s",
+                  "cohort_occupancy_mean", "cohort_overflow_total"):
+            assert mh[k] == pytest.approx(mf[k], rel=1e-6), k
+        assert mh["cohort_selection"] == "hier"
+        assert mf["cohort_selection"] == "flat"
+
+    def test_wide_slice_takes_flat_fallback_and_stays_equal(self):
+        """A slice window wide enough to span more than the top-K segments
+        must route through the in-step flat fallback (counted in
+        selection_fallback_total) and still reproduce the oracle
+        bitwise."""
+        kw = dict(topology="regular", degree=4, async_slice_s=1e9,
+                  straggler_frac=0.5, straggler_factor=3.0)
+        flat = _engine(rounds=10, seed=7, n_nodes=48, cohort_capacity=4,
+                       selection="flat", **kw)
+        hier = _engine(rounds=10, seed=7, n_nodes=48, cohort_capacity=4,
+                       selection="hier", segment_size=4, **kw)
+        flat.run(log=False)
+        hier.run(log=False)
+        np.testing.assert_array_equal(_w(flat), _w(hier))
+        np.testing.assert_array_equal(np.asarray(flat.scheduler._events),
+                                      np.asarray(hier.scheduler._events))
+        assert hier.scheduler.extra_metrics()["selection_fallback_total"] > 0
+
+    def test_hier_survives_clock_rebase(self):
+        """The carried segment minima must stay exact across the fp32
+        virtual-clock rebase (they are shifted by the same monotone
+        subtraction as t_next)."""
+        kw = dict(topology="regular", degree=4, compute_time_s=30_000.0,
+                  straggler_frac=0.25, straggler_factor=2.0)
+        flat = _engine(rounds=12, seed=5, n_nodes=24, cohort_capacity=6,
+                       selection="flat", **kw)
+        hier = _engine(rounds=12, seed=5, n_nodes=24, cohort_capacity=6,
+                       selection="hier", segment_size=4, **kw)
+        flat.run(log=False)
+        hier.run(log=False)
+        np.testing.assert_array_equal(_w(flat), _w(hier))
+        assert hier.sim_time_s == pytest.approx(flat.sim_time_s, rel=1e-12)
+        assert hier.sim_time_s > 65536.0  # actually crossed the threshold
+        smin = np.asarray(hier.scheduler._seg_min)
+        t = np.asarray(hier.scheduler._t_next)
+        seg = hier.scheduler._seg
+        expect = [t[i:i + seg].min() for i in range(0, t.shape[0], seg)]
+        np.testing.assert_array_equal(smin, np.asarray(expect, np.float32))
+
+    def test_auto_selection_resolves_flat_at_small_n(self):
+        e = _engine(rounds=2, n_nodes=12, cohort_capacity=4,
+                    topology="regular", degree=4)
+        assert e.scheduler._selection == "flat"
+
+    def test_odd_population_padding_segments(self):
+        """N not divisible by the segment size: the last segment's padding
+        rows must never enter a cohort (they are masked to +inf)."""
+        flat = _engine(rounds=10, seed=2, n_nodes=23, cohort_capacity=5,
+                       topology="regular", degree=4, selection="flat")
+        hier = _engine(rounds=10, seed=2, n_nodes=23, cohort_capacity=5,
+                       topology="regular", degree=4, selection="hier",
+                       segment_size=4)
+        flat.run(log=False)
+        hier.run(log=False)
+        np.testing.assert_array_equal(_w(flat), _w(hier))
+        np.testing.assert_array_equal(np.asarray(flat.scheduler._events),
+                                      np.asarray(hier.scheduler._events))
+
+    def test_compute_spread_deties_the_clock(self):
+        """compute_spread draws a seeded continuous per-node multiplier in
+        [1, 1+spread] on top of the straggler distribution — all-distinct
+        times (no lattice ties), reproducible, bounded."""
+        from repro.core.engine import compute_time_vector
+        cfg = DLConfig(n_nodes=64, topology="regular", degree=4,
+                       compute_time_s=1e-3, compute_spread=15.0, seed=9)
+        ct = compute_time_vector(cfg)
+        assert ct.shape == (64,) and ct.dtype == np.float32
+        assert np.unique(ct).size == 64  # continuous draw: no ties
+        assert np.all(ct >= 1e-3) and np.all(ct <= 16e-3 * (1 + 1e-6))
+        np.testing.assert_array_equal(ct, compute_time_vector(cfg))
+        base = compute_time_vector(
+            DLConfig(n_nodes=64, topology="regular", degree=4,
+                     compute_time_s=1e-3, seed=9))
+        np.testing.assert_array_equal(base, np.full(64, 1e-3, np.float32))
+        with pytest.raises(ValueError, match="compute_spread"):
+            DLConfig(n_nodes=4, topology="regular", degree=2,
+                     compute_spread=-0.1, compute_time_s=1e-3).validate()
+        with pytest.raises(ValueError, match="compute_spread"):
+            DLConfig(n_nodes=4, topology="regular", degree=2,
+                     compute_spread=1.0).validate()
+
+    def test_hier_prunes_under_continuous_spread_and_stays_equal(self):
+        """The regime the hierarchy is built for: a continuous
+        heterogeneous clock (compute_spread) with a slice sized for
+        ~0.8*C occupancy.  The segment filter must actually prune
+        (fallbacks strictly below the step count) and still reproduce
+        the flat oracle bitwise."""
+        # slice for ~0.8*C steady occupancy at rate N*ln(1+s)/(base*s)
+        n, c, spread = 96, 8, 15.0
+        sl = 0.8 * c * (1e-3 * spread) / (n * np.log1p(spread))
+        kw = dict(topology="regular", degree=4, compute_spread=spread,
+                  async_slice_s=float(sl))
+        flat = _engine(rounds=12, seed=11, n_nodes=n, cohort_capacity=c,
+                       selection="flat", **kw)
+        hier = _engine(rounds=12, seed=11, n_nodes=n, cohort_capacity=c,
+                       selection="hier", segment_size=4, **kw)
+        flat.run(log=False)
+        hier.run(log=False)
+        np.testing.assert_array_equal(_w(flat), _w(hier))
+        np.testing.assert_array_equal(np.asarray(flat.scheduler._events),
+                                      np.asarray(hier.scheduler._events))
+        m = hier.scheduler.extra_metrics()
+        assert m["selection_fallback_total"] < 12
+        assert hier.scheduler._n_seg > hier.scheduler._seg_k  # prunable
+
+
+# ---------------------------------------------------------------------------
+# quantized cold population state (DLConfig.cold_dtype)
+# ---------------------------------------------------------------------------
+
+class TestColdDtype:
+    def test_bf16_roundtrip_exact_for_representable_values(self):
+        """decode(encode(x)) is bitwise x for every bf16-representable
+        fp32 value — the codec contract the engine's masked-row scatter
+        relies on."""
+        from repro.core import compression as comp
+        x = jnp.asarray(np.float32([0.0, -0.0, 1.0, -2.5, 0.15625, 2.0 ** -20,
+                                    65536.0, -1.9921875]))
+        tree = {"w": jnp.tile(x, (4, 1))}
+        out = comp.decode_cold(comp.encode_cold(tree, "bf16"), "bf16")
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+        assert out["w"].dtype == jnp.float32
+
+    def test_int8_codec_error_bound_and_reencode_stability(self):
+        from repro.core import compression as comp
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.normal(size=(16, 7)).astype(np.float32))
+        enc = comp.quantize_rows(a)
+        dec = comp.dequantize_rows(enc)
+        scale = np.abs(np.asarray(a)).max(axis=1) / 127.0
+        err = np.abs(np.asarray(dec) - np.asarray(a))
+        assert (err <= scale[:, None] * 0.5 + 1e-12).all()
+        # re-encoding a decoded row reproduces its codes exactly — the
+        # stability that keeps untouched gathered rows drift-free
+        enc2 = comp.quantize_rows(dec)
+        np.testing.assert_array_equal(np.asarray(enc2.q), np.asarray(enc.q))
+
+    def test_int_leaves_pass_through_raw(self):
+        from repro.core import compression as comp
+        tree = {"t": jnp.arange(6, dtype=jnp.int32),
+                "w": jnp.ones((6, 3), jnp.float32)}
+        for mode in ("bf16", "int8"):
+            enc = comp.encode_cold(tree, mode)
+            assert enc["t"].dtype == jnp.int32
+            dec = comp.decode_cold(enc, mode)
+            np.testing.assert_array_equal(np.asarray(dec["t"]),
+                                          np.asarray(tree["t"]))
+
+    @pytest.mark.parametrize("cold", ["bf16", "int8"])
+    def test_compressed_cold_tracks_fp32_trajectory(self, cold):
+        """Consensus/accuracy tolerance oracle: the quantized cold store
+        is lossy per gather/scatter cycle but must track the fp32
+        trajectory closely on a real run (and eval through the decoded
+        params must work end to end)."""
+        f32 = _engine(rounds=12, seed=3, n_nodes=24, cohort_capacity=24,
+                      topology="regular", degree=4)
+        q = _engine(rounds=12, seed=3, n_nodes=24, cohort_capacity=24,
+                    topology="regular", degree=4, cold_dtype=cold)
+        f32.run(log=False)
+        q.run(log=False)
+        wq = np.asarray(jax.vmap(lambda p: p["w"])(q.scheduler.eval_params()))
+        wf = _w(f32)
+        rel = np.abs(wq - wf).max() / (np.abs(wf).max() + 1e-12)
+        assert rel < 5e-2, rel
+        # same event schedule: compression touches values, never the clock
+        np.testing.assert_array_equal(np.asarray(f32.scheduler._events),
+                                      np.asarray(q.scheduler._events))
+        assert q.history[-1]["acc_mean"] == pytest.approx(
+            f32.history[-1]["acc_mean"], abs=0.05
+        )
+
+    def test_memory_model_reports_compressed_cold_bytes(self):
+        e8 = _engine(rounds=2, n_nodes=24, cohort_capacity=8, p_dim=64,
+                     topology="regular", degree=4, cold_dtype="int8")
+        m = e8.scheduler.memory_model()
+        assert m["cold_dtype"] == "int8"
+        # codes (1 B/elt) + one fp32 scale per row per leaf
+        assert m["cold"]["population_params_bytes"] == 24 * 64 + 24 * 4
+        assert m["cold"]["population_params_fp32_bytes"] == 24 * 64 * 4
+        assert m["cold"]["total"] < m["cold"]["total_fp32"]
+
+    def test_cold_dtype_validate_rules(self):
+        with pytest.raises(ValueError, match="cold_dtype"):
+            DLConfig(cold_dtype="fp16").validate()
+        with pytest.raises(ValueError, match="cohort_capacity"):
+            DLConfig(cold_dtype="int8").validate()
+        with pytest.raises(ValueError, match="cohort_capacity"):
+            DLConfig(selection="hier").validate()
+        with pytest.raises(ValueError, match="selection"):
+            DLConfig(selection="tree").validate()
+        with pytest.raises(ValueError, match="segment_size"):
+            DLConfig(segment_size=-1).validate()
+
+
+# ---------------------------------------------------------------------------
+# int32-boundary scale: 2^20-node tables, > 2^31 event totals
+# ---------------------------------------------------------------------------
+
+class TestInt32BoundaryScale:
+    N_BIG = (1 << 20) + 4
+
+    def test_circulant_table_correct_at_2_20_nodes(self):
+        n, d = self.N_BIG, 4
+        nbr = circulant_neighbor_table(n, d)
+        assert nbr.dtype == np.int32 and nbr.shape == (n, d)
+        assert nbr.min() >= 0 and nbr.max() == n - 1
+        rng = np.random.default_rng(0)
+        rows = np.concatenate([[0, 1, n - 2, n - 1],
+                               rng.integers(0, n, 64)])
+        for i in rows:
+            expect = sorted({(i + o) % n for o in (-2, -1, 1, 2)})
+            np.testing.assert_array_equal(nbr[i], np.asarray(expect))
+
+    def test_gather_rows_correct_at_2_20_nodes(self):
+        from repro.core.topology import gather_rows
+        n, d = self.N_BIG, 4
+        topo = SparseTopology.regular_circulant(n, d)
+        rows = jnp.asarray([0, 5, n // 2, n - 1], jnp.int32)
+        sub = gather_rows(topo, rows)
+        nbr = np.asarray(sub.nbr)
+        for k, i in enumerate(np.asarray(rows)):
+            expect = sorted({(int(i) + o) % n for o in (-2, -1, 1, 2)})
+            np.testing.assert_array_equal(nbr[k], np.asarray(expect))
+        w = np.asarray(sub.w)
+        assert w.shape == (4, d) and (w > 0).all()
+
+    def test_event_totals_survive_past_int32(self):
+        """The per-node int32 counters are summed in int64 on the host:
+        a population total past 2^31 must stay exact."""
+        e = _engine(rounds=2, n_nodes=12, cohort_capacity=4,
+                    topology="regular", degree=4)
+        e.run(log=False)
+        big = 1 << 28
+        e.scheduler._events = jnp.full((12,), big, jnp.int32)
+        e.scheduler._fired_total = 12 * big
+        e.scheduler._overflow_total = 6 * big
+        m = e.scheduler.extra_metrics()
+        assert m["events_total"] == 12 * big      # 3.2e9 > 2^31
+        assert m["events_total"] > 2 ** 31
+        assert m["cohort_overflow_ratio"] == pytest.approx(0.5)
